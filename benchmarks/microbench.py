@@ -1,0 +1,87 @@
+"""Microbenchmarks: wall-time per call for the jitted train / decode /
+outer-sync steps and the Pallas kernel reference paths, on the CPU host.
+
+(These are CPU numbers for regression tracking — the TPU performance story
+lives in the roofline analysis, which is derived from the compiled HLO.)
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(fn, *args, iters=5, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6   # us
+
+
+def main() -> None:
+    from repro.configs.base import (DiLoCoConfig, ModelConfig,
+                                    OptimizerConfig)
+    from repro.core import DDPTrainer, DiLoCoTrainer
+    from repro.models.transformer import build_model, init_params
+
+    print("name,us_per_call,derived")
+    cfg = ModelConfig(num_layers=4, d_model=128, num_heads=4, num_kv_heads=4,
+                      d_ff=512, vocab_size=512)
+    model = build_model(cfg)
+    params, _ = init_params(cfg, jax.random.key(0))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    toks = jax.random.randint(jax.random.key(1), (8, 128), 0, 512)
+    batch = {"tokens": toks, "labels": (toks + 1) % 512}
+
+    ddp = DDPTrainer(model.loss, OptimizerConfig(total_steps=100))
+    dstate = ddp.init(params)
+    step = jax.jit(ddp.train_step)
+    us = _time(lambda s, b: step(s, b)[0], dstate, batch)
+    tok_s = 8 * 128 / (us / 1e6)
+    print(f"train_step/ddp/{cfg.num_layers}L_d{cfg.d_model},{us:.0f},"
+          f"{tok_s:.0f}tok/s params={n}")
+
+    tr = DiLoCoTrainer(model.loss, OptimizerConfig(total_steps=100),
+                       DiLoCoConfig(num_workers=4, h_inner_steps=10))
+    state = tr.init(params)
+    inner, outer = tr.jit_steps()
+    wb = {k: jnp.broadcast_to(v, (4,) + v.shape) for k, v in batch.items()}
+    us = _time(lambda s, b: inner(s, b)[0], state, wb)
+    print(f"train_step/diloco_inner_k4,{us:.0f},{4*8*128/(us/1e6):.0f}tok/s")
+    us = _time(outer, state)
+    print(f"outer_sync/diloco_k4,{us:.0f},{n*4/1e6:.1f}MB_deltas")
+
+    cache = model.init_cache(8, 256)
+    dec = jax.jit(model.decode_step)
+    db = {"token": jnp.zeros((8, 1), jnp.int32), "position": jnp.int32(0)}
+    us = _time(lambda p, c, b: dec(p, c, b)[0], params, cache, db)
+    print(f"decode_step/b8_cache256,{us:.0f},{8/(us/1e6):.0f}tok/s")
+
+    # kernel reference paths (pure jnp; the Pallas bodies run interpret-mode
+    # on CPU and are validated for correctness, not speed)
+    from repro.kernels.flash_attention.ref import reference_attention
+    q = jax.random.normal(jax.random.key(2), (1, 4, 512, 64))
+    k = jax.random.normal(jax.random.key(3), (1, 2, 512, 64))
+    v = jax.random.normal(jax.random.key(4), (1, 2, 512, 64))
+    ref = jax.jit(lambda q, k, v: reference_attention(q, k, v))
+    us = _time(ref, q, k, v)
+    print(f"attention_ref/S512_H4,{us:.0f},")
+
+    from repro.models.ssm import ssd_chunked
+    x = jax.random.normal(jax.random.key(5), (2, 256, 4, 32))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.key(6), (2, 256, 4)))
+    A = -jnp.exp(jax.random.uniform(jax.random.key(7), (4,)))
+    Bm = jax.random.normal(jax.random.key(8), (2, 256, 16))
+    Cm = jax.random.normal(jax.random.key(9), (2, 256, 16))
+    D = jnp.ones((4,))
+    f = jax.jit(lambda *a: ssd_chunked(*a, chunk=64)[0])
+    us = _time(f, x, dt, A, Bm, Cm, D)
+    print(f"ssd_ref/S256_H4,{us:.0f},")
+
+
+if __name__ == "__main__":
+    main()

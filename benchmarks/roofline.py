@@ -1,0 +1,92 @@
+"""Roofline analysis (deliverable g): per (arch × shape × mesh) the three
+terms
+
+    compute    = analytic FLOPs/device   / 197e12        (peak bf16)
+    memory     = analytic HBM bytes/dev  / 819e9          (HBM bw)
+    collective = while-weighted HLO wire bytes/dev / 50e9 (ICI link)
+
+FLOPs/bytes are analytic (XLA's cost_analysis counts scanned layer bodies
+once — see src/repro/launch/hlo_analysis.py); collective bytes come from the
+compiled HLO with while-trip weighting.  MODEL_FLOPS = 6·N·D (6·N_active·D
+for MoE); useful = MODEL_FLOPS / analytic-total (captures remat + attention
+overhead vs. the classic parameter-flops floor).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def load(path: str) -> List[dict]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def analyze(rows: List[dict]) -> List[Dict]:
+    out = []
+    for r in rows:
+        a = r["analytic"]
+        t_c = a["total_flops"] / PEAK_FLOPS_BF16
+        t_m = a["bytes"] / HBM_BW
+        t_x = r["collectives_weighted"]["wire_bytes_per_device"] / ICI_BW
+        bound = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+        useful = (a["model_flops_6nd"] / a["total_flops"]
+                  if a["total_flops"] else 0.0)
+        live = (r["memory"]["argument_size_in_bytes"]
+                + r["memory"]["temp_size_in_bytes"]
+                + r["memory"]["output_size_in_bytes"])
+        step = max(t_c, t_m, t_x)
+        out.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh_desc"],
+            "kind": r["step_kind"], "compute_s": t_c, "memory_s": t_m,
+            "collective_s": t_x, "bound": bound,
+            "useful_ratio": useful, "mem_gib": live / 2 ** 30,
+            "step_s": step,
+            "roofline_frac": t_c / step if step else 0.0,
+        })
+    return out
+
+
+def render(rows: List[Dict], title: str) -> str:
+    lines = [f"### {title}", "",
+             "| arch | shape | step | compute s | memory s | coll s | bound "
+             "| 6ND/total | compute/step | live GiB |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+            f"| {r['collective_s']:.2e} | **{r['bound']}** "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_frac']:.2f} "
+            f"| {r['mem_gib']:.1f} |")
+    return "\n".join(lines)
+
+
+def main(csv: bool = True) -> None:
+    for name, fn in (("single-pod (16x16)", "dryrun_singlepod.json"),
+                     ("multi-pod (2x16x16)", "dryrun_multipod.json"),
+                     ("hillclimbed profiles (§Perf)", "dryrun_optimized.json")):
+        path = os.path.join(REPO, fn)
+        if not os.path.exists(path):
+            print(f"roofline/{fn},0.0,missing (run python -m repro.launch.dryrun --all)")
+            continue
+        rows = analyze(load(path))
+        if csv:
+            for r in rows:
+                print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},0.0,"
+                      f"bound={r['bound']} compute={r['compute_s']:.2e}s "
+                      f"memory={r['memory_s']:.2e}s coll={r['collective_s']:.2e}s "
+                      f"frac={r['roofline_frac']:.2f} live={r['mem_gib']:.1f}GiB")
+        else:
+            print(render(rows, name))
+            print()
+
+
+if __name__ == "__main__":
+    main(csv="--markdown" not in sys.argv)

@@ -1,0 +1,75 @@
+"""Benchmark entry point — one benchmark per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # all fast benches
+  PYTHONPATH=src python -m benchmarks.run --only comm,roofline
+
+| paper artifact              | benchmark                                   |
+|-----------------------------|---------------------------------------------|
+| Table 1 (DDP/DiLoCo/Hybrid) | table1 (reads runs/table1/table1.json, the  |
+|                             | output of examples/pipeline_table1.py)      |
+| Fig 1-3 loss curves         | table1 (per-stage loss trajectories)        |
+| "~100x comm reduction"      | comm                                        |
+| §4.3 drift hypothesis       | drift                                       |
+| TPU deployment (e,g)        | roofline (from the dry-run JSONs)           |
+| engine/step latencies       | micro                                       |
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def bench_table1() -> None:
+    print("name,us_per_call,derived")
+    path = os.path.join(REPO, "runs", "table1", "table1.json")
+    if not os.path.exists(path):
+        print("table1/missing,0.0,run examples/pipeline_table1.py first")
+        return
+    with open(path) as f:
+        res = json.load(f)
+    for method, r in res.items():
+        for stage, e in r["stages"].items():
+            t = e.get("tasks", {})
+            c = e.get("core", {})
+            print(f"table1/{stage}/{method},0.0,"
+                  f"loss={e['loss_last']:.4f} "
+                  f"core={c.get('core_proxy', float('nan')):.4f} "
+                  f"mc={t.get('mc', float('nan')):.4f} "
+                  f"arith={t.get('arith', float('nan')):.4f} "
+                  f"pattern={t.get('pattern', float('nan')):.4f} "
+                  f"chatcore={t.get('chatcore', float('nan')):.4f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", type=str, default=None,
+                    help="comma list: micro,comm,roofline,table1,drift")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    if want("micro"):
+        from benchmarks import microbench
+        microbench.main()
+    if want("comm"):
+        from benchmarks import comm_volume
+        comm_volume.main()
+    if want("roofline"):
+        from benchmarks import roofline
+        roofline.main(csv=True)
+    if want("table1"):
+        bench_table1()
+    if want("drift"):
+        from benchmarks import drift_analysis
+        drift_analysis.main(steps=80)
+
+
+if __name__ == "__main__":
+    main()

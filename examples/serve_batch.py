@@ -1,0 +1,49 @@
+"""Batched serving example: briefly pretrain, then serve a ragged batch of
+chat requests through the KV-cache engine (greedy + sampled).
+
+  PYTHONPATH=src python examples/serve_batch.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DiLoCoConfig, ModelConfig, OptimizerConfig
+from repro.core import DiLoCoTrainer, run_diloco
+from repro.data import PackedDataset, build_tokenizer, synthetic
+from repro.models.transformer import build_model, init_params
+from repro.serving import Engine
+
+
+def main():
+    world = synthetic.World.make(20)
+    texts = synthetic.gen_sft_texts(world, 3000)
+    tok = build_tokenizer(texts[:1200], 512)
+    ds = PackedDataset.from_texts(texts, tok, seq_len=128)
+    cfg = ModelConfig(num_layers=4, d_model=128, num_heads=4, num_kv_heads=4,
+                      d_ff=512, vocab_size=tok.vocab_size)
+    model = build_model(cfg)
+    params, _ = init_params(cfg, jax.random.key(0))
+    tr = DiLoCoTrainer(model.loss,
+                       OptimizerConfig(total_steps=100, warmup_steps=10,
+                                       learning_rate=0.02, adam_lr=1e-3),
+                       DiLoCoConfig(num_workers=2, h_inner_steps=10))
+    state = tr.init(params)
+    state, hist = run_diloco(
+        tr, state,
+        lambda s: {k: jnp.asarray(v)
+                   for k, v in ds.worker_batches(s, 2, 8).items()}, 100)
+    print(f"train loss {hist['loss'][0]:.2f} -> {hist['loss'][-1]:.2f}")
+
+    engine = Engine(model, state.global_params, tok)
+    ents = world.train_entities()[:4]
+    requests = [f"<|bos|><|user_start|>what is the color of {e} ?"
+                f"<|user_end|><|assistant_start|>" for e in ents]
+    requests.append("<|bos|><|user_start|>compute 3 + 4 .<|user_end|>"
+                    "<|assistant_start|>")  # ragged batch: shorter prompt
+    outs = engine.chat(requests, max_new=16)
+    for r, o in zip(requests, outs):
+        q = r.split("<|user_start|>")[1].split("<|user_end|>")[0]
+        print(f"Q: {q}\nA: {o.split('<|assistant_start|>')[-1].strip()}\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Checkpointing: pytree <-> .npz (+ structure manifest).
+
+The Hybrid configuration in the paper (DiLoCo-pretrained base handed to a DDP
+mid-training/SFT run) requires checkpoints to cross trainer types, so we save
+flat path->array maps that can be restored into any template with matching
+leaf paths.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_pytree(tree: Any, path: str) -> None:
+    """Save any pytree of arrays to <path>.npz (+ <path>.json manifest)."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays = {}
+    manifest = []
+    for i, (p, leaf) in enumerate(flat):
+        key = f"a{i}"
+        arrays[key] = np.asarray(leaf)
+        manifest.append({"key": key, "path": _path_str(p),
+                         "dtype": str(arrays[key].dtype),
+                         "shape": list(arrays[key].shape)})
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path + ".npz", **arrays)
+    with open(path + ".json", "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def load_pytree(template: Any, path: str) -> Any:
+    """Load a checkpoint into ``template``'s structure (leaf paths must
+    match; shapes are validated)."""
+    data = np.load(path + ".npz")
+    with open(path + ".json") as f:
+        manifest = json.load(f)
+    by_path = {m["path"]: data[m["key"]] for m in manifest}
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in flat:
+        key = _path_str(p)
+        if key not in by_path:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = by_path[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch at {key}: ckpt {arr.shape} vs {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), leaves)

@@ -1,0 +1,12 @@
+from repro.configs.base import (DECODE_32K, LONG_500K, PREFILL_32K, SHAPES,
+                                TRAIN_4K, DiLoCoConfig, ModelConfig,
+                                OptimizerConfig, ShapeConfig, TrainConfig)
+from repro.configs.registry import (ALL_IDS, ARCH_IDS, decode_cache_capacity,
+                                    get_config, get_reduced, input_specs,
+                                    long_context_variant, shape_by_name)
+
+__all__ = ["ModelConfig", "ShapeConfig", "DiLoCoConfig", "OptimizerConfig",
+           "TrainConfig", "SHAPES", "TRAIN_4K", "PREFILL_32K", "DECODE_32K",
+           "LONG_500K", "ARCH_IDS", "ALL_IDS", "get_config", "get_reduced",
+           "input_specs", "long_context_variant", "decode_cache_capacity",
+           "shape_by_name"]

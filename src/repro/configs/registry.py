@@ -1,0 +1,136 @@
+"""Architecture registry: ``--arch <id>`` ids -> ModelConfig, reduced smoke
+variants, and ShapeDtypeStruct input specs per (arch × input shape).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+
+_MODULES: Dict[str, str] = {
+    "nanochat-d20": "repro.configs.nanochat_d20",
+    "qwen1.5-0.5b": "repro.configs.qwen15_05b",
+    "mamba2-1.3b": "repro.configs.mamba2_13b",
+    "command-r-plus-104b": "repro.configs.command_r_plus_104b",
+    "nemotron-4-15b": "repro.configs.nemotron4_15b",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "llama4-scout-17b-a16e": "repro.configs.llama4_scout_17b_a16e",
+    "seamless-m4t-medium": "repro.configs.seamless_m4t_medium",
+    "internvl2-26b": "repro.configs.internvl2_26b",
+    "hymba-1.5b": "repro.configs.hymba_15b",
+    "mistral-large-123b": "repro.configs.mistral_large_123b",
+}
+
+ARCH_IDS = [k for k in _MODULES if k != "nanochat-d20"]   # the 10 assigned
+ALL_IDS = list(_MODULES)
+
+# Sliding window applied when a full-attention arch runs long_500k decode
+# (framework-provided sub-quadratic variant; see DESIGN.md §4).
+LONG_CONTEXT_WINDOW = 8192
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(_MODULES[arch_id])
+    return mod.CONFIG
+
+
+def _scale_heads(n: int, target: int) -> int:
+    return max(1, min(n, target))
+
+
+def get_reduced(arch_id: str) -> ModelConfig:
+    """Reduced variant of the same family: 2 layers, d_model<=256, <=4
+    experts — runs a CPU forward/train step in the smoke tests."""
+    c = get_config(arch_id)
+    hd = 32
+    heads = min(c.num_heads, 4)
+    kv = max(1, min(c.num_kv_heads, heads))
+    if c.num_heads % c.num_kv_heads == 0:
+        kv = max(1, heads // max(1, c.num_heads // c.num_kv_heads))
+    d_model = heads * hd * 2          # keep d_model != heads*hd to catch bugs
+    red = dataclasses.replace(
+        c,
+        num_layers=2,
+        d_model=d_model,
+        num_heads=heads,
+        num_kv_heads=kv,
+        head_dim=hd,
+        d_ff=0 if c.d_ff == 0 else 4 * d_model,
+        vocab_size=512,
+        num_experts=min(c.num_experts, 4),
+        num_experts_per_tok=min(c.num_experts_per_tok, 2),
+        ssm_state_size=min(c.ssm_state_size, 32),
+        ssm_head_dim=16 if c.ssm_state_size else c.ssm_head_dim,
+        ssm_chunk=32,
+        num_encoder_layers=2 if c.is_encoder_decoder else 0,
+        encoder_seq_len=32 if c.is_encoder_decoder else c.encoder_seq_len,
+        num_image_tokens=16 if c.num_image_tokens else 0,
+        window=min(c.window, 32) if c.window else 0,
+        window_pattern=tuple(min(w, 32) if w else 0
+                             for w in c.window_pattern[:2]) if c.window_pattern else (),
+        rope_theta=10000.0,
+    )
+    return red
+
+
+def long_context_variant(cfg: ModelConfig) -> ModelConfig:
+    """Sub-quadratic decode variant for long_500k: SSM/hybrid unchanged;
+    attention archs get a sliding window (ring-buffer KV cache)."""
+    if cfg.arch_type == "ssm":
+        return cfg
+    if cfg.window and cfg.window <= LONG_CONTEXT_WINDOW:
+        return cfg
+    if cfg.window_pattern:
+        pat = tuple(w if w else LONG_CONTEXT_WINDOW for w in cfg.window_pattern)
+        return cfg.with_(window_pattern=pat)
+    return cfg.with_(window=LONG_CONTEXT_WINDOW, window_pattern=())
+
+
+def decode_cache_capacity(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """KV capacity the serve_step sees: full seq_len, or the SWA window for
+    ring-buffer decode on long contexts."""
+    if shape.sub_quadratic_required and cfg.arch_type != "ssm":
+        ws = [cfg.window] if cfg.window else []
+        if cfg.window_pattern:
+            ws = [w if w else LONG_CONTEXT_WINDOW for w in cfg.window_pattern]
+        w = max(ws) if ws else LONG_CONTEXT_WINDOW
+        return min(shape.seq_len, max(w, 128))
+    return shape.seq_len
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                batch_override: Optional[int] = None) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input — shardable,
+    weak-type-correct, no device allocation."""
+    B = batch_override or shape.global_batch
+    S = shape.seq_len
+    i32 = jnp.int32
+
+    if shape.kind in ("train", "prefill"):
+        s_text = S
+        specs: Dict[str, jax.ShapeDtypeStruct] = {}
+        if cfg.num_image_tokens:
+            s_text = S - cfg.num_image_tokens
+            specs["patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16
+                if cfg.compute_dtype == "bfloat16" else jnp.float32)
+        if cfg.is_encoder_decoder:
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16
+                if cfg.compute_dtype == "bfloat16" else jnp.float32)
+        specs["tokens"] = jax.ShapeDtypeStruct((B, s_text), i32)
+        specs["labels"] = jax.ShapeDtypeStruct((B, s_text), i32)
+        return specs
+
+    # decode: one new token against a seq_len-context cache
+    return {"token": jax.ShapeDtypeStruct((B, 1), i32),
+            "position": jax.ShapeDtypeStruct((B,), i32)}
+
+
+def shape_by_name(name: str) -> ShapeConfig:
+    return SHAPES[name]

@@ -1,0 +1,17 @@
+"""The paper's primary contribution: DiLoCo inner-outer low-communication
+training as a composable wrapper over any JAX train step, plus the DDP
+baseline, H-schedules (incl. adaptive), drift diagnostics, and compressed
+outer synchronization."""
+from repro.core.diloco import DiLoCoState, DiLoCoTrainer, run_diloco
+from repro.core.ddp import DDPState, DDPTrainer, run_ddp
+from repro.core.schedule import AdaptiveH, FixedH, StagedH
+from repro.core.grpo import GRPOTrainer, arith_reward_fn, grpo_loss
+from repro.core.streaming import (StreamingDiLoCoTrainer, fragment_masks,
+                                  run_streaming_diloco)
+from repro.core import drift, outer_opt
+
+__all__ = ["DiLoCoTrainer", "DiLoCoState", "run_diloco", "DDPTrainer",
+           "DDPState", "run_ddp", "FixedH", "StagedH", "AdaptiveH", "drift",
+           "outer_opt", "GRPOTrainer", "grpo_loss", "arith_reward_fn",
+           "StreamingDiLoCoTrainer", "fragment_masks",
+           "run_streaming_diloco"]

@@ -1,0 +1,60 @@
+"""Standard synchronous data-parallel baseline (the paper's "Standard DDP").
+
+One set of parameters, gradients averaged over the full global batch every
+step — exactly nanochat's released pipeline.  On the production mesh the
+gradient all-reduce spans ``("pod", "data")``; in simulation it is a plain
+mean over the concatenated worker batches, which is mathematically identical
+to torch DDP with k processes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+from repro.optim import apply_updates, nanochat_optimizer
+
+
+class DDPState(NamedTuple):
+    params: Any
+    opt: Any
+    step: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class DDPTrainer:
+    loss_fn: Callable
+    opt_cfg: OptimizerConfig
+
+    def init(self, params) -> DDPState:
+        opt = nanochat_optimizer(self.opt_cfg)
+        return DDPState(params=params, opt=opt.init(params),
+                        step=jnp.zeros((), jnp.int32))
+
+    def train_step(self, state: DDPState, batch) -> Tuple[DDPState, jax.Array, Dict]:
+        opt = nanochat_optimizer(self.opt_cfg)
+        (loss, metrics), grads = jax.value_and_grad(
+            self.loss_fn, has_aux=True)(state.params, batch)
+        updates, opt_state = opt.update(grads, state.opt, state.params,
+                                        state.step)
+        return (DDPState(apply_updates(state.params, updates), opt_state,
+                         state.step + 1), loss, metrics)
+
+
+def run_ddp(trainer: DDPTrainer, state: DDPState, data_fn, num_steps: int,
+            record_every: int = 1, eval_fn: Optional[Callable] = None,
+            eval_every: int = 0) -> Tuple[DDPState, Dict]:
+    """data_fn(step) -> merged global batch (no worker dim)."""
+    step_jit = jax.jit(trainer.train_step)
+    history: Dict[str, list] = {"step": [], "loss": [], "evals": []}
+    for step in range(num_steps):
+        state, loss, _ = step_jit(state, data_fn(step))
+        if step % record_every == 0:
+            history["step"].append(step)
+            history["loss"].append(float(loss))
+        if eval_fn is not None and eval_every and (step + 1) % eval_every == 0:
+            history["evals"].append((step, eval_fn(state.params)))
+    return state, history

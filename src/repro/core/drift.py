@@ -1,0 +1,80 @@
+"""Representation-drift diagnostics (paper §4.3: "representation drift",
+"alignment fragility").
+
+The paper *hypothesizes* that prolonged local optimization makes workers'
+embedding spaces diverge so their averaged deltas are "globally coherent but
+locally inconsistent".  These diagnostics make that measurable:
+
+* ``param_drift``      — per-worker L2 / cosine dispersion of parameter deltas
+* ``linear_cka``       — centered kernel alignment between two activation
+                         matrices (standard representation-similarity metric)
+* ``worker_cka_matrix``— pairwise CKA of per-worker hidden states on a probe
+                         batch (K×K) — low off-diagonal = drifted workers
+* ``subspace_overlap`` — principal-angle overlap of the top-r activation
+                         subspaces (captures "feature geometry" changes the
+                         Hybrid run cannot undo)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def _flatten(tree) -> jax.Array:
+    return jnp.concatenate([x.astype(jnp.float32).reshape(-1)
+                            for x in jax.tree.leaves(tree)])
+
+
+def param_drift(worker_params, global_params) -> Dict[str, jax.Array]:
+    """Dispersion of per-worker deltas.  worker_params has leading K."""
+    k = jax.tree.leaves(worker_params)[0].shape[0]
+    deltas = jnp.stack([
+        _flatten(jax.tree.map(lambda w, g: w[i] - g, worker_params,
+                              global_params))
+        for i in range(k)])                                   # (K, P)
+    norms = jnp.linalg.norm(deltas, axis=1)
+    mean = jnp.mean(deltas, axis=0)
+    mean_norm = jnp.linalg.norm(mean) + 1e-12
+    cos = (deltas @ mean) / (norms * mean_norm + 1e-12)
+    # pairwise cosine
+    unit = deltas / (norms[:, None] + 1e-12)
+    pair = unit @ unit.T
+    off = (jnp.sum(pair) - k) / (k * (k - 1)) if k > 1 else jnp.ones(())
+    return {"delta_norm_mean": jnp.mean(norms),
+            "delta_norm_std": jnp.std(norms),
+            "cos_to_mean": jnp.mean(cos),
+            "pairwise_cos": off}
+
+
+def linear_cka(X: jax.Array, Y: jax.Array) -> jax.Array:
+    """Linear CKA between (n, d1) and (n, d2) activation matrices."""
+    X = X - jnp.mean(X, axis=0)
+    Y = Y - jnp.mean(Y, axis=0)
+    xty = jnp.linalg.norm(X.T @ Y) ** 2
+    xtx = jnp.linalg.norm(X.T @ X)
+    yty = jnp.linalg.norm(Y.T @ Y)
+    return xty / (xtx * yty + 1e-12)
+
+
+def worker_cka_matrix(worker_params, probe_fn: Callable, probe_batch) -> jax.Array:
+    """probe_fn(params, batch) -> (n, d) hidden states.  Returns (K, K) CKA."""
+    k = jax.tree.leaves(worker_params)[0].shape[0]
+    acts = [probe_fn(jax.tree.map(lambda w: w[i], worker_params), probe_batch)
+            for i in range(k)]
+    acts = [a.reshape(-1, a.shape[-1]) for a in acts]
+    mat = jnp.stack([jnp.stack([linear_cka(acts[i], acts[j])
+                                for j in range(k)]) for i in range(k)])
+    return mat
+
+
+def subspace_overlap(X: jax.Array, Y: jax.Array, r: int = 8) -> jax.Array:
+    """Overlap of top-r right singular subspaces of two (n, d) matrices:
+    (1/r)·||U_x^T U_y||_F^2 ∈ [0, 1]."""
+    X = X - jnp.mean(X, axis=0)
+    Y = Y - jnp.mean(Y, axis=0)
+    _, _, vx = jnp.linalg.svd(X, full_matrices=False)
+    _, _, vy = jnp.linalg.svd(Y, full_matrices=False)
+    ux, uy = vx[:r], vy[:r]
+    return jnp.linalg.norm(ux @ uy.T) ** 2 / r

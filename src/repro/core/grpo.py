@@ -1,0 +1,110 @@
+"""Simplified GRPO — nanochat's optional final stage (reward-model-free
+preference optimization on GSM8K), reproduced on the synthetic arithmetic
+task.
+
+Per prompt, sample G completions on-policy, score them with a programmatic
+reward (exact-match), normalize advantages within the group
+(A_i = (r_i − mean r) / (std r + ε)), and take a policy-gradient step
+
+    L = − E[ A_i · log π(completion_i | prompt) ]
+
+(no ratio/clipping — single-step on-policy, as in nanochat's simplified
+GRPO).  Works with any trainer params; DiLoCo-wrapped GRPO is just this
+loss handed to DiLoCoTrainer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import OptimizerConfig
+from repro.models.transformer import ModelAPI
+from repro.optim import apply_updates, nanochat_optimizer
+from repro.serving.engine import Engine
+
+
+def grpo_loss(params, batch, model: ModelAPI):
+    """batch: tokens (B,T), labels (B,T) (-1 outside the completion),
+    adv (B,).  Returns (loss, metrics)."""
+    logits, _ = model.forward(params, {"tokens": batch["tokens"]})
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    labels = batch["labels"]
+    gold = jnp.take_along_axis(lp, jnp.maximum(labels, 0)[..., None],
+                               axis=-1)[..., 0]
+    valid = (labels >= 0).astype(jnp.float32)
+    seq_logprob = jnp.sum(gold * valid, axis=1)
+    tokens_per_seq = jnp.maximum(jnp.sum(valid, axis=1), 1.0)
+    loss = -jnp.mean(batch["adv"] * seq_logprob / tokens_per_seq)
+    return loss, {"mean_logprob": jnp.mean(seq_logprob / tokens_per_seq)}
+
+
+@dataclasses.dataclass
+class GRPOTrainer:
+    model: ModelAPI
+    opt_cfg: OptimizerConfig
+    group_size: int = 8
+    max_new: int = 8
+    temperature: float = 1.0
+
+    def init(self, params):
+        opt = nanochat_optimizer(self.opt_cfg)
+        return {"params": params, "opt": opt.init(params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def _update(self, state, batch):
+        opt = nanochat_optimizer(self.opt_cfg)
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p, b: grpo_loss(p, b, self.model), has_aux=True)(
+                state["params"], batch)
+        upd, opt_state = opt.update(grads, state["opt"], state["params"],
+                                    state["step"])
+        return {"params": apply_updates(state["params"], upd),
+                "opt": opt_state, "step": state["step"] + 1}, loss
+
+    def rollout_and_step(self, state, prompts: Sequence[Sequence[int]],
+                         reward_fn: Callable[[int, np.ndarray], float],
+                         pad_id: int, seed: int = 0
+                         ) -> Tuple[Dict, float, float]:
+        """One GRPO iteration: sample G completions per prompt, reward,
+        normalize within group, update.  reward_fn(prompt_idx, token_row)
+        -> float.  Returns (state, loss, mean_reward)."""
+        engine = Engine(self.model, state["params"])
+        G = self.group_size
+        rep_prompts = [p for p in prompts for _ in range(G)]
+        out = engine.generate_ids(rep_prompts, max_new=self.max_new,
+                                  greedy=False,
+                                  temperature=self.temperature, seed=seed)
+        rewards = np.asarray([
+            reward_fn(i // G, out[i]) for i in range(len(rep_prompts))],
+            np.float32)
+        adv = rewards.reshape(len(prompts), G)
+        adv = (adv - adv.mean(axis=1, keepdims=True)) / (
+            adv.std(axis=1, keepdims=True) + 1e-6)
+        adv = adv.reshape(-1)
+
+        tmax = max(len(p) for p in rep_prompts) + self.max_new
+        toks = np.full((len(rep_prompts), tmax), pad_id, np.int32)
+        labels = np.full((len(rep_prompts), tmax), -1, np.int32)
+        for i, p in enumerate(rep_prompts):
+            seq = list(p) + list(out[i])
+            toks[i, :len(seq)] = seq
+            # predict completion tokens: positions len(p)-1 .. len(seq)-2
+            labels[i, len(p) - 1:len(seq) - 1] = out[i]
+        batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels),
+                 "adv": jnp.asarray(adv)}
+        if not hasattr(self, "_update_jit"):
+            self._update_jit = jax.jit(self._update)
+        state, loss = self._update_jit(state, batch)
+        return state, float(loss), float(rewards.mean())
+
+
+def arith_reward_fn(tok, items: List[dict]) -> Callable:
+    """Reward = 1 if the decoded completion starts with the gold answer."""
+    def fn(prompt_idx: int, row: np.ndarray) -> float:
+        text = tok.decode(list(row)).strip()
+        return 1.0 if text.startswith(items[prompt_idx]["answer"]) else 0.0
+    return fn

@@ -1,0 +1,156 @@
+"""DiLoCo outer synchronization: delta averaging + Nesterov outer SGD.
+
+The outer step (paper §2.2):
+
+    Δθ_i   = θ_i^H − θ_t          (per-worker parameter delta)
+    Δθ̄     = (1/k) Σ_i Δθ_i       (cross-worker average — THE communication)
+    v_{t+1} = μ v_t + Δθ̄
+    θ_{t+1} = θ_t + η v_{t+1}      (Nesterov variant applies μ v + Δθ̄ lookahead)
+
+Beyond-paper extensions (both listed as future work in §5):
+
+* **Delta compression** — quantize Δθ_i to bf16/int8 before the cross-worker
+  exchange.  In the mesh implementation the quantized stacked deltas are
+  explicitly resharded to replicated, which forces the all-gather to move the
+  *narrow* dtype on the wire (2–4× fewer inter-pod bytes on top of DiLoCo's
+  ~H× reduction).
+* **Drift-aware averaging** — weight workers by the cosine alignment of their
+  delta with the mean delta, down-weighting stragglers/outliers:
+  w_i = softmax(τ · cos(Δθ_i, Δθ̄)).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DiLoCoConfig
+
+
+class OuterState(NamedTuple):
+    v: Any          # momentum pytree (same structure as params)
+    t: jax.Array    # outer step counter
+
+
+def init_outer_state(params) -> OuterState:
+    return OuterState(
+        v=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        t=jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Delta compression
+# ---------------------------------------------------------------------------
+
+def quantize_delta(delta, dtype: str):
+    """Per-tensor symmetric quantization of a (K, ...) stacked delta tree.
+    Returns (payload_tree, scales_tree) — the payload is what crosses the
+    inter-pod link."""
+    if dtype == "float32":
+        return delta, None
+    if dtype == "bfloat16":
+        return jax.tree.map(lambda d: d.astype(jnp.bfloat16), delta), None
+    if dtype == "int8":
+        def q(d):
+            amax = jnp.max(jnp.abs(d), axis=tuple(range(1, d.ndim)),
+                           keepdims=True)
+            scale = jnp.maximum(amax, 1e-12) / 127.0
+            return (jnp.clip(jnp.round(d / scale), -127, 127)
+                    .astype(jnp.int8), scale)
+        out = jax.tree.map(q, delta)
+        payload = jax.tree.map(lambda o: o[0], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        scales = jax.tree.map(lambda o: o[1], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        return payload, scales
+    raise ValueError(dtype)
+
+
+def dequantize_delta(payload, scales):
+    if scales is None:
+        return jax.tree.map(lambda p: p.astype(jnp.float32), payload)
+    return jax.tree.map(lambda p, s: p.astype(jnp.float32) * s,
+                        payload, scales)
+
+
+# ---------------------------------------------------------------------------
+# Averaging
+# ---------------------------------------------------------------------------
+
+def _tree_dot(a, b) -> jax.Array:
+    return sum(jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def average_deltas(stacked_delta, cfg: DiLoCoConfig,
+                   replicate_fn=None) -> Any:
+    """(K, ...) stacked per-worker deltas -> averaged delta pytree.
+
+    ``replicate_fn(tree)`` reshards the stacked payload to replicated — on a
+    pod mesh this is where the inter-pod all-gather happens (in the payload
+    dtype).  On a single device it is the identity.
+    """
+    payload, scales = quantize_delta(stacked_delta, cfg.delta_dtype)
+    if replicate_fn is not None:
+        if cfg.delta_dtype == "bfloat16":
+            # bitcast to u16 around the exchange: XLA may otherwise fold the
+            # f32->bf16->f32 convert pair into the gather's producer and move
+            # full-width f32 on the wire (observed on the CPU backend)
+            payload = jax.tree.map(
+                lambda x: jax.lax.bitcast_convert_type(x, jnp.uint16), payload)
+        if cfg.delta_dtype != "float32":
+            # keep the narrow payload opaque so XLA cannot fold the
+            # dequant-convert into the producer and all-gather f32 instead
+            # (it legally can: s8 roundtrip == round+clamp in f32)
+            payload = jax.lax.optimization_barrier(payload)
+        payload = replicate_fn(payload)
+        if cfg.delta_dtype == "bfloat16":
+            payload = jax.tree.map(
+                lambda x: jax.lax.bitcast_convert_type(x, jnp.bfloat16),
+                payload)
+        if scales is not None:
+            scales = replicate_fn(scales)
+    delta = dequantize_delta(payload, scales)
+
+    if not cfg.drift_aware:
+        return jax.tree.map(lambda d: jnp.mean(d, axis=0), delta)
+
+    # drift-aware: weight workers by cosine(Δ_i, Δ̄), τ = 4
+    k = jax.tree.leaves(delta)[0].shape[0]
+    mean = jax.tree.map(lambda d: jnp.mean(d, axis=0), delta)
+    mean_norm = jnp.sqrt(_tree_dot(mean, mean)) + 1e-12
+
+    def cos_i(i):
+        di = jax.tree.map(lambda d: d[i], delta)
+        ni = jnp.sqrt(_tree_dot(di, di)) + 1e-12
+        return _tree_dot(di, mean) / (ni * mean_norm)
+
+    cos = jnp.stack([cos_i(i) for i in range(k)])
+    w = jax.nn.softmax(4.0 * cos)                       # (K,)
+    return jax.tree.map(
+        lambda d: jnp.tensordot(w, d.astype(jnp.float32), axes=(0, 0)), delta)
+
+
+# ---------------------------------------------------------------------------
+# Outer update
+# ---------------------------------------------------------------------------
+
+def outer_update(global_params, avg_delta, state: OuterState,
+                 cfg: DiLoCoConfig) -> Tuple[Any, OuterState]:
+    """Nesterov-momentum SGD on the averaged delta (treated as the descent
+    direction, i.e. pseudo-gradient = −Δθ̄)."""
+    mu, eta = cfg.outer_momentum, cfg.outer_lr
+
+    def upd(p, v, d):
+        d = d.astype(jnp.float32)
+        v_new = mu * v + d
+        step_dir = d + mu * v_new if cfg.nesterov else v_new
+        return (p.astype(jnp.float32) + eta * step_dir).astype(p.dtype), v_new
+
+    out = jax.tree.map(upd, global_params, state.v, avg_delta)
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, OuterState(new_v, state.t + 1)

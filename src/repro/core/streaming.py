@@ -1,0 +1,124 @@
+"""Streaming DiLoCo (Douillard et al., arXiv:2501.18512 — the paper's
+reference [4]): instead of synchronizing ALL parameters every H steps,
+partition them into F fragments and synchronize one fragment every H/F
+steps, staggered.
+
+Each fragment still syncs every H steps (same per-parameter staleness as
+vanilla DiLoCo), but the instantaneous inter-pod bandwidth demand drops F×
+and the exchange can overlap inner compute — the "distributed free lunch".
+
+Fragmenting follows the layer stack: stacked ``layers/*`` leaves are sliced
+into F contiguous layer ranges; non-stacked leaves (embeddings, final norm)
+join fragment 0 / F-1 (embedding with the first fragment, head with the
+last, mirroring the reference's schedule).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DiLoCoConfig, OptimizerConfig
+from repro.core.diloco import DiLoCoState, DiLoCoTrainer
+from repro.core import outer_opt
+
+
+def _is_stacked(path) -> bool:
+    return any(str(getattr(p, "key", "")) == "layers" for p in path)
+
+
+def fragment_masks(params, num_fragments: int) -> List[Any]:
+    """Boolean mask pytrees, one per fragment; stacked layer leaves are
+    split along their leading (layer) dim, the rest assigned to the first
+    (embeddings) / last (output head) fragment."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    masks = []
+    for f in range(num_fragments):
+        leaves = []
+        for path, leaf in flat:
+            keys = [str(getattr(p, "key", "")) for p in path]
+            if _is_stacked(path):
+                L = leaf.shape[0]
+                lo = f * L // num_fragments
+                hi = (f + 1) * L // num_fragments
+                m = jnp.zeros((L,) + (1,) * (leaf.ndim - 1), bool)
+                m = m.at[lo:hi].set(True)
+                leaves.append(jnp.broadcast_to(m, leaf.shape))
+            else:
+                owner = (num_fragments - 1 if any(
+                    k in ("final_norm", "unembed") for k in keys) else 0)
+                leaves.append(jnp.broadcast_to(jnp.asarray(f == owner),
+                                               leaf.shape))
+        masks.append(jax.tree_util.tree_unflatten(treedef, leaves))
+    return masks
+
+
+def fragment_fraction(params, mask) -> float:
+    tot = sum(x.size for x in jax.tree.leaves(params))
+    sel = sum(int(m.sum()) for m in jax.tree.leaves(mask))
+    return sel / max(tot, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamingDiLoCoTrainer(DiLoCoTrainer):
+    """DiLoCoTrainer whose outer step touches ONE fragment.
+
+    ``outer_step_fragment(state, frag)`` averages only that fragment's
+    deltas, applies the outer Nesterov update to it, and re-broadcasts just
+    that slice — the rest of the worker params keep diverging until their
+    fragment's slot comes up.
+    """
+    num_fragments: int = 4
+
+    def fragment_schedule(self) -> int:
+        """Steps between fragment syncs (every fragment syncs each H)."""
+        return max(self.cfg.h_inner_steps // self.num_fragments, 1)
+
+    def outer_step_fragment(self, state: DiLoCoState, mask) -> DiLoCoState:
+        delta = jax.tree.map(
+            lambda w, g, m: (w.astype(jnp.float32)
+                             - g.astype(jnp.float32)[None]) * m[None],
+            state.worker_params, state.global_params, mask)
+        avg = outer_opt.average_deltas(delta, self.cfg, self.replicate_fn)
+        new_global, new_outer = outer_opt.outer_update(
+            state.global_params, avg, state.outer, self.cfg)
+        # merge: fragment slots take the synced value, others keep global
+        new_global = jax.tree.map(
+            lambda ng, g, m: jnp.where(m, ng, g),
+            new_global, state.global_params, mask)
+        # workers: fragment slots reset to the synced value, others diverge on
+        new_wp = jax.tree.map(
+            lambda w, ng, m: jnp.where(m[None], ng[None].astype(w.dtype), w),
+            state.worker_params, new_global, mask)
+        return state._replace(global_params=new_global,
+                              worker_params=new_wp, outer=new_outer)
+
+    def bytes_per_fragment_sync(self, params, mask) -> int:
+        width = {"float32": 4, "bfloat16": 2, "int8": 1}[self.cfg.delta_dtype]
+        return int(sum(int(m.sum()) for m in jax.tree.leaves(mask)) * width)
+
+
+def run_streaming_diloco(trainer: StreamingDiLoCoTrainer, state, data_fn,
+                         num_steps: int, record_every: int = 1
+                         ) -> Tuple[Any, Dict]:
+    """Inner steps with a staggered fragment-sync schedule: fragment
+    (t / (H/F)) mod F syncs every H/F steps."""
+    params_like = state.global_params
+    masks = fragment_masks(params_like, trainer.num_fragments)
+    inner_jit = jax.jit(trainer.inner_step)
+    frag_jit = jax.jit(trainer.outer_step_fragment)
+    period = trainer.fragment_schedule()
+    history: Dict[str, list] = {"step": [], "loss": [], "frag_syncs": []}
+    for step in range(num_steps):
+        state, loss, _ = inner_jit(state, data_fn(step))
+        if step % record_every == 0:
+            history["step"].append(step)
+            history["loss"].append(float(jnp.mean(loss)))
+        if (step + 1) % period == 0:
+            f = ((step + 1) // period - 1) % trainer.num_fragments
+            state = frag_jit(state, masks[f])
+            history["frag_syncs"].append((step, f))
+    return state, history

@@ -1,0 +1,6 @@
+from repro.data.tokenizer import BPETokenizer, SPECIAL_TOKENS
+from repro.data.pipeline import PackedDataset, build_tokenizer
+from repro.data import synthetic
+
+__all__ = ["BPETokenizer", "SPECIAL_TOKENS", "PackedDataset",
+           "build_tokenizer", "synthetic"]

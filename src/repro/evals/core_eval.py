@@ -1,0 +1,36 @@
+"""CORE-proxy evaluation: held-out loss / bits-per-token on the pretrain
+distribution.
+
+nanochat's CORE metric is a normalized composite over 22 public benchmarks —
+not reproducible offline.  Our proxy keeps the role it plays in the paper
+(base-stage quality signal, higher = better) as ``core = exp(-heldout_ce)``,
+the per-token prediction probability, plus raw CE and bits-per-token.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import PackedDataset
+from repro.models.transformer import ModelAPI
+
+
+def heldout_metrics(model: ModelAPI, params, ds: PackedDataset,
+                    batches: int = 8, batch_size: int = 16,
+                    seed: int = 4242) -> Dict[str, float]:
+    loss_fn = jax.jit(model.loss)
+    tot, n = 0.0, 0
+    for i in range(batches):
+        b = ds.batch(10_000_000 + i, batch_size, seed=seed)
+        b = {k: jnp.asarray(v) for k, v in b.items()}
+        loss, _ = loss_fn(params, b)
+        tot += float(loss)
+        n += 1
+    ce = tot / max(n, 1)
+    return {"heldout_ce": ce,
+            "bits_per_token": ce / math.log(2),
+            "core_proxy": math.exp(-ce)}

@@ -1,0 +1,4 @@
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import reference_decode_attention
+
+__all__ = ["decode_attention", "reference_decode_attention"]

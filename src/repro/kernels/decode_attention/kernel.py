@@ -1,0 +1,102 @@
+"""Single-token GQA decode attention — Pallas TPU kernel (the serving
+hot-spot: one query against a long KV cache).
+
+Differences from the prefill flash kernel:
+
+* Sq = 1: the query tile is a (G, D) block (all heads of one KV group),
+  so the MXU contraction is (G, D) x (D, BK) — head-dim contraction keeps
+  the systolic array busy even with a single token;
+* the cache may be a ring buffer: validity comes from an explicit per-slot
+  ``pos`` array (−1 = empty, else absolute position), with causal +
+  sliding-window predicates evaluated against the query's position —
+  layout-free, so prefill-then-wrap caches need no compaction;
+* grid = (B, KV, S/BK): the KV-block sweep is minor-most, so the online
+  softmax state (m, l, acc) lives in VMEM scratch across the sweep.
+
+Validated in interpret mode against ``ref.reference_decode_attention``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BK = 256
+
+
+def _decode_kernel(qpos_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, scale: float, window: int,
+                   bk: int, n_k: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)               # (G, D)
+    k = k_ref[0, 0].astype(jnp.float32)               # (bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)               # (bk, D)
+    pos = pos_ref[0]                                  # (bk,) int32
+    q_pos = qpos_ref[0]                               # scalar int32
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    ok = (pos >= 0) & (pos <= q_pos)
+    if window > 0:
+        ok &= (q_pos - pos) < window
+    s = jnp.where(ok[None, :], s, NEG_INF)            # (G, bk)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_fwd(q, k, v, pos, q_pos, *, window: int = 0,
+                         bk: int = DEFAULT_BK, interpret: bool = True):
+    """q: (B, KV, G, D) one token per request, grouped query heads;
+    k/v: (B, KV, S, D) cache; pos: (B, S) int32 slot positions (−1 empty);
+    q_pos: (B,) int32 absolute query positions.  Returns (B, KV, G, D)."""
+    B, KV, G, D = q.shape
+    S = k.shape[2]
+    bk = min(bk, S)
+    assert S % bk == 0, (S, bk)
+    n_k = S // bk
+    scale = 1.0 / math.sqrt(D)
+    kernel = functools.partial(_decode_kernel, scale=scale, window=window,
+                               bk=bk, n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, KV, n_k),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, ik: (b,)),            # q_pos
+            pl.BlockSpec((1, 1, G, D), lambda b, h, ik: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, bk), lambda b, h, ik: (b, ik)),       # pos
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, ik: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_pos, q, k, v, pos)

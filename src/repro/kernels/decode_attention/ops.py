@@ -1,0 +1,15 @@
+"""Jitted wrapper for the decode attention Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bk", "interpret"))
+def decode_attention(q, k, v, pos, q_pos, *, window: int = 0, bk: int = 256,
+                     interpret: bool = True):
+    return decode_attention_fwd(q, k, v, pos, q_pos, window=window, bk=bk,
+                                interpret=interpret)

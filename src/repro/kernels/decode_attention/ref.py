@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the decode attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_decode_attention(q, k, v, pos, q_pos, window: int = 0):
+    """q: (B,KV,G,D); k/v: (B,KV,S,D); pos: (B,S); q_pos: (B,)."""
+    D = q.shape[-1]
+    s = jnp.einsum("bhgd,bhsd->bhgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    ok = (pos >= 0) & (pos <= q_pos[:, None])
+    if window > 0:
+        ok &= (q_pos[:, None] - pos) < window
+    s = jnp.where(ok[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgs,bhsd->bhgd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,24 @@
+"""Jitted public wrapper around the flash attention Pallas kernel.
+
+On TPU hardware set ``interpret=False``; on this CPU container the kernel
+body executes in interpret mode (same arithmetic, Python-speed) which is what
+the correctness sweeps use.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, bq: int = 128,
+                    bk: int = 128, interpret: bool = True):
+    """q: (B, H, Sq, D); k/v: (B, KV, Sk, D) grouped-query.  See kernel.py."""
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               bq=bq, bk=bk, interpret=interpret)

@@ -1,0 +1,6 @@
+from repro.kernels.rmsnorm.ops import rmsnorm, rmsnorm_residual
+from repro.kernels.rmsnorm.ref import (reference_rmsnorm,
+                                       reference_rmsnorm_residual)
+
+__all__ = ["rmsnorm", "rmsnorm_residual", "reference_rmsnorm",
+           "reference_rmsnorm_residual"]

@@ -1,0 +1,42 @@
+"""Jitted wrappers for the fused RMSNorm kernel (reshape any leading dims)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rmsnorm.kernel import rmsnorm_fwd, rmsnorm_residual_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def rmsnorm(x, scale, *, eps: float = 1e-5, interpret: bool = True):
+    shape = x.shape
+    R = 1
+    for s in shape[:-1]:
+        R *= s
+    br = R
+    for cand in (256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if R % cand == 0:
+            br = cand
+            break
+    out = rmsnorm_fwd(x.reshape(R, shape[-1]), scale, eps=eps, br=br,
+                      interpret=interpret)
+    return out.reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def rmsnorm_residual(x, residual, scale, *, eps: float = 1e-5,
+                     interpret: bool = True):
+    shape = x.shape
+    R = 1
+    for s in shape[:-1]:
+        R *= s
+    br = R
+    for cand in (256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if R % cand == 0:
+            br = cand
+            break
+    o, r = rmsnorm_residual_fwd(x.reshape(R, shape[-1]),
+                                residual.reshape(R, shape[-1]), scale,
+                                eps=eps, br=br, interpret=interpret)
+    return o.reshape(shape), r.reshape(shape)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the fused RMSNorm kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def reference_rmsnorm(x, scale, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def reference_rmsnorm_residual(x, residual, scale, eps: float = 1e-5):
+    s = x.astype(jnp.float32) + residual.astype(jnp.float32)
+    return reference_rmsnorm(s, scale, eps), s.astype(x.dtype)

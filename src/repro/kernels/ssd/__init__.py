@@ -1,0 +1,4 @@
+from repro.kernels.ssd.ops import ssd
+from repro.kernels.ssd.ref import reference_ssd
+
+__all__ = ["ssd", "reference_ssd"]

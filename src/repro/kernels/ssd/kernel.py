@@ -1,0 +1,111 @@
+"""Mamba-2 SSD chunk scan — Pallas TPU kernel.
+
+TPU adaptation of the SSD algorithm (GPU original uses a parallel chunk scan
+with shared-memory staging):
+
+* grid = (batch, n_chunks) with the chunk axis minor-most — TPU grids execute
+  sequentially, so the inter-chunk recurrent state h (H, N, P) lives in a
+  VMEM scratch buffer across the whole sweep and is re-zeroed when the batch
+  index changes.  The state never round-trips to HBM (the GPU version
+  materializes per-chunk states); HBM traffic is exactly one read of
+  x/dt/B/C and one write of y.
+* the intra-chunk term is a masked (Q×Q) decay-weighted attention computed
+  on the MXU via dot_general; Q defaults to 128 to match the systolic array.
+* everything is computed in f32 regardless of input dtype (SSM recurrences
+  are exp-of-sums — bf16 drifts).
+
+Validated in interpret mode against ``repro.models.ssm.ssd_chunked`` (which
+is itself the model's reference path).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref,
+                y_ref, hout_ref, h_scr, *, Q: int, n_chunks: int):
+    c_idx = pl.program_id(1)
+
+    @pl.when(c_idx == 0)
+    def _reset():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0].astype(jnp.float32)          # (Q, H, P)
+    dt = dt_ref[0].astype(jnp.float32)        # (Q, H)
+    A = a_ref[...].astype(jnp.float32)        # (H,)
+    Bm = b_ref[0].astype(jnp.float32)         # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)         # (Q, N)
+    D = d_ref[...].astype(jnp.float32)        # (H,)
+
+    dA = dt * A[None, :]                      # (Q, H) <= 0
+    cum = jnp.cumsum(dA, axis=0)              # (Q, H)
+    xbar = x * dt[..., None]                  # (Q, H, P)
+
+    # intra-chunk quadratic term
+    CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
+    L = jnp.exp(cum[:, None, :] - cum[None, :, :])                # (Q, Q, H)
+    tril = (jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+            >= jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1))
+    M = jnp.where(tril[:, :, None], CB[:, :, None] * L, 0.0)      # (Q, Q, H)
+    y_intra = jnp.einsum("qkh,khp->qhp", M, xbar,
+                         preferred_element_type=jnp.float32)
+
+    # inter-chunk contribution from carried state
+    h_prev = h_scr[...]                                           # (H, N, P)
+    y_inter = jnp.einsum("qn,qh,hnp->qhp", Cm, jnp.exp(cum), h_prev,
+                         preferred_element_type=jnp.float32)
+
+    y = y_intra + y_inter + x * D[None, :, None]
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # state update: h = decay_total * h_prev + sum_k decay_to_end B_k xbar_k
+    decay_end = jnp.exp(cum[-1:, :] - cum)                        # (Q, H)
+    S_c = jnp.einsum("kn,kh,khp->hnp", Bm, decay_end, xbar,
+                     preferred_element_type=jnp.float32)
+    h_new = jnp.exp(cum[-1])[:, None, None] * h_prev + S_c
+    h_scr[...] = h_new
+
+    @pl.when(c_idx == n_chunks - 1)
+    def _emit_state():
+        hout_ref[0] = h_new.astype(hout_ref.dtype)
+
+
+def ssd_fwd(x, dt, A, Bm, Cm, D, *, chunk: int = 128,
+            interpret: bool = True):
+    """x: (B,S,H,P); dt: (B,S,H); A,D: (H,); Bm/Cm: (B,S,N).
+    S must be divisible by chunk (ops.py pads).  Returns (y, final_state)."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+
+    kernel = functools.partial(_ssd_kernel, Q=chunk, n_chunks=n_chunks)
+    y, h = pl.pallas_call(
+        kernel,
+        grid=(Bsz, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, H, P), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, chunk, H), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((H,), lambda b, c: (0,)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((H,), lambda b, c: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, H, P), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, H, N, P), lambda b, c: (b, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, S, H, P), x.dtype),
+            jax.ShapeDtypeStruct((Bsz, H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((H, N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm, D)
+    return y, h

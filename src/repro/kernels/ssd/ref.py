@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the SSD kernel — delegates to the model's reference
+implementation so the kernel, the model path, and the decode recurrence are
+all pinned to the same math."""
+from repro.models.ssm import ssd_chunked
+
+
+def reference_ssd(x, dt, A, Bm, Cm, D, chunk: int = 128):
+    return ssd_chunked(x, dt, A, Bm, Cm, D, chunk)

@@ -1,0 +1,5 @@
+from repro.launch.mesh import (HBM_BW, HBM_PER_CHIP, ICI_BW, PEAK_FLOPS_BF16,
+                               make_host_mesh, make_production_mesh)
+
+__all__ = ["make_production_mesh", "make_host_mesh", "PEAK_FLOPS_BF16",
+           "HBM_BW", "ICI_BW", "HBM_PER_CHIP"]

@@ -1,0 +1,66 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run CLI.
+
+Lowers + compiles every (architecture × input shape) combination on the
+single-pod (16×16) and multi-pod (2×16×16) production meshes, printing
+memory_analysis / cost_analysis / collective statistics per combination.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen1.5-0.5b --shape train_4k
+  python -m repro.launch.dryrun --all                   # 40 baselines
+  python -m repro.launch.dryrun --all --multi-pod       # 2-pod sweep
+  python -m repro.launch.dryrun --outer --arch nanochat-d20   # outer step
+"""
+import argparse
+import dataclasses
+import json
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--outer", action="store_true")
+    ap.add_argument("--delta-dtype", type=str, default="float32")
+    ap.add_argument("--profile", type=str, default="2d",
+                    help="sharding profile: 2d|dp|dp_fsdp|attn_dp|"
+                         "expert_parallel|seqpar|auto "
+                         "(auto = per-arch \u00a7Perf selection)")
+    ap.add_argument("--json-out", type=str, default=None)
+    args = ap.parse_args(argv)
+
+    from repro.configs.registry import ARCH_IDS
+    from repro.configs.base import SHAPES
+    from repro.launch.dryrun_lib import PROFILES, dryrun_combo, dryrun_outer_step
+    rules = ({"__auto__": True} if args.profile == "auto"
+             else PROFILES[args.profile])
+
+    results = []
+    if args.outer:
+        archs = [args.arch] if args.arch else ["nanochat-d20"]
+        for a in archs:
+            results.append(dryrun_outer_step(a, delta_dtype=args.delta_dtype))
+    else:
+        archs = [args.arch] if args.arch else ARCH_IDS
+        shapes = [args.shape] if args.shape else list(SHAPES)
+        for a in archs:
+            for s in shapes:
+                results.append(dryrun_combo(a, s, multi_pod=args.multi_pod,
+                                             rules=rules))
+
+    ok = all(r is not None for r in results)
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump([dataclasses.asdict(r) for r in results], f, indent=1)
+    print(f"[dryrun] {len(results)} combinations compiled successfully"
+          if ok else "[dryrun] FAILURES", flush=True)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,410 @@
+"""Dry-run machinery: lower + compile every (architecture × input shape ×
+mesh) combination with ShapeDtypeStruct inputs (no allocation), extract
+memory / cost / collective statistics, and derive the roofline terms.
+
+Importable without side effects — ``dryrun.py`` is the CLI entry point that
+sets XLA_FLAGS before any jax import.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (DiLoCoConfig, ModelConfig, OptimizerConfig,
+                                ShapeConfig)
+from repro.configs.registry import (decode_cache_capacity, get_config,
+                                    input_specs, long_context_variant,
+                                    shape_by_name)
+from repro.launch import steps as steps_mod
+from repro.launch.analytic import bytes_per_device, flops_per_device
+from repro.launch.hlo_analysis import weighted_collective_stats
+from repro.launch.mesh import (DCN_BW, HBM_BW, HBM_PER_CHIP, ICI_BW,
+                               PEAK_FLOPS_BF16, make_production_mesh)
+from repro.launch.state import (abstract_diloco_state, abstract_train_state,
+                                add_leading, decode_cache_names,
+                                shardings_from_names, tp_kv_repeat)
+from repro.models.sharding import sharding_ctx, spec_for
+from repro.models.transformer import build_model
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1,
+                "f8e5m2": 1, "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+                "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:%?\S+\s*=\s*)?"
+    r"((?:\([^)]*\))|(?:\S+\[[^\]]*\]\S*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+    re.M)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def hlo_collective_stats(hlo_text: str) -> Dict[str, Any]:
+    """Per-device collective operand bytes by op kind, from post-SPMD HLO."""
+    by_kind: Dict[str, int] = {}
+    count: Dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        type_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(type_str)
+        by_kind[kind] = by_kind.get(kind, 0) + b
+        count[kind] = count.get(kind, 0) + 1
+    # wire-bytes estimate: ring all-reduce moves ~2x the payload; the others ~1x
+    wire = sum(b * (2 if k == "all-reduce" else 1) for k, b in by_kind.items())
+    return {"bytes_by_kind": by_kind, "count_by_kind": count,
+            "wire_bytes_per_device": wire}
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+def _cast_params(sds_tree, dtype):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, dtype if jnp.issubdtype(s.dtype, jnp.floating) else s.dtype),
+        sds_tree)
+
+
+_BATCH_NAMES = {
+    "tokens": ("batch", "seq"),
+    "labels": ("batch", "seq"),
+    "patches": ("batch", None, None),
+    "frames": ("batch", None, None),
+    "token": ("batch", None),
+    "position": ("batch",),
+}
+
+
+def _batch_shardings(batch_sds, mesh, stacked: bool = False):
+    names = {k: (("pod",) + _BATCH_NAMES[k] if stacked else _BATCH_NAMES[k])
+             for k in batch_sds}
+    return shardings_from_names(names, batch_sds, mesh)
+
+
+@dataclasses.dataclass
+class DryrunResult:
+    arch: str
+    shape: str
+    mesh_desc: str
+    step_kind: str
+    lower_s: float
+    compile_s: float
+    memory: Dict[str, int]
+    # raw XLA cost_analysis (NOTE: scan/while bodies counted ONCE — kept as
+    # a cross-check; the roofline uses the analytic + weighted numbers)
+    flops_per_device: float
+    hlo_bytes_per_device: float
+    collectives: Dict[str, Any]            # naive text parse (body-once)
+    collectives_weighted: Dict[str, Any]   # while-trip weighted parse
+    analytic: Dict[str, float]             # analytic flops/bytes per device
+    n_params: int
+
+    def roofline(self) -> Dict[str, float]:
+        t_compute = self.analytic["total_flops"] / PEAK_FLOPS_BF16
+        t_memory = self.analytic["bytes"] / HBM_BW
+        cross = self.collectives_weighted.get("cross_pod_bytes_per_device", 0)
+        ici = self.collectives_weighted["wire_bytes_per_device"] - cross
+        t_coll = ici / ICI_BW + cross / DCN_BW
+        dom = max((t_compute, "compute"), (t_memory, "memory"),
+                  (t_coll, "collective"))
+        return {"compute_s": t_compute, "memory_s": t_memory,
+                "collective_s": t_coll, "cross_pod_s": cross / DCN_BW,
+                "bound": dom[1]}
+
+
+def _finish(arch, shape_name, mesh, kind, jitted, args, n_params,
+            verbose=True, cfg=None, shape=None,
+            cache_capacity=0) -> DryrunResult:
+    t0 = time.time()
+    lowered = jitted.lower(*args)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    mem = compiled.memory_analysis()
+    memd = {k: int(getattr(mem, k, 0)) for k in
+            ("temp_size_in_bytes", "argument_size_in_bytes",
+             "output_size_in_bytes", "alias_size_in_bytes",
+             "generated_code_size_in_bytes")}
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    cost = dict(cost or {})
+    hlo_text = compiled.as_text()
+    colls = hlo_collective_stats(hlo_text)
+    chips = 1
+    for v in mesh.shape.values():
+        chips *= v
+    n_pods = mesh.shape.get("pod", 1)
+    boundary = chips // n_pods if n_pods > 1 else 0
+    colls_w = weighted_collective_stats(hlo_text, pod_boundary=boundary)
+    analytic = {}
+    if cfg is not None and shape is not None:
+        analytic.update(flops_per_device(cfg, shape, chips,
+                                         remat=cfg.remat))
+        analytic.update(bytes_per_device(cfg, shape, chips,
+                                         cache_capacity=cache_capacity))
+    else:
+        analytic = {"total_flops": float(cost.get("flops", 0.0)),
+                    "fwd_flops": 0.0, "model_flops_6nd": 0.0,
+                    "bytes": float(cost.get("bytes accessed", 0.0))}
+    res = DryrunResult(
+        arch=arch, shape=shape_name,
+        mesh_desc="x".join(f"{k}={v}" for k, v in mesh.shape.items()),
+        step_kind=kind, lower_s=t1 - t0, compile_s=t2 - t1,
+        memory=memd,
+        flops_per_device=float(cost.get("flops", 0.0)),
+        hlo_bytes_per_device=float(cost.get("bytes accessed", 0.0)),
+        collectives=colls, collectives_weighted=colls_w,
+        analytic=analytic, n_params=n_params)
+    if verbose:
+        rl = res.roofline()
+        live = (memd["argument_size_in_bytes"] + memd["temp_size_in_bytes"]
+                + memd["output_size_in_bytes"])
+        print(f"[dryrun] {arch:24s} {shape_name:12s} {res.mesh_desc:24s} "
+              f"{kind:12s} lower={res.lower_s:5.1f}s compile={res.compile_s:6.1f}s "
+              f"args+temp+out={live/2**30:7.2f}GiB "
+              f"flops/dev={res.analytic['total_flops']:.3e} "
+              f"hbm/dev={res.analytic['bytes']:.3e} "
+              f"coll/dev={colls_w['wire_bytes_per_device']:.3e} "
+              f"bound={rl['bound']}")
+    return res
+
+
+def default_opt_cfg() -> OptimizerConfig:
+    return OptimizerConfig(total_steps=10000, warmup_steps=100)
+
+
+# Sharding profiles (beyond-paper §Perf results — see EXPERIMENTS.md).
+# Keys are logical-axis rule overrides passed to sharding_ctx.
+PROFILES: Dict[str, Dict] = {
+    # baseline: FSDP over `data` x tensor-parallel over `model`
+    "2d": {},
+    # pure data-parallel: batch over all 256 chips, weights replicated.
+    # Optimal for <~2B models (H1/H3: 21.6x / 18.3x collective reduction).
+    "dp": {"batch": ("data", "model"), "fsdp": (), "model": (), "vocab": (),
+           "heads": (), "kv_heads": (), "ffn": (), "expert": ()},
+    # data-parallel batch + FSDP weights (fits-HBM variant of "dp")
+    "dp_fsdp": {"batch": ("data", "model"), "model": (), "vocab": (),
+                "heads": (), "kv_heads": (), "ffn": (), "expert": (),
+                "fsdp": ("data",)},
+    # attention data-parallel-only; FFN/experts keep TP.  For archs whose
+    # head counts cannot shard over the TP degree (llama4 40H, hymba 25H,
+    # kv=8 models): removes per-KV-chunk attention all-reduces (H2: 13.7x).
+    "attn_dp": {"heads": (), "kv_heads": ()},
+    # expert-parallel MoE: experts over `model` (requires num_experts %
+    # tp == 0, e.g. llama4's 16) + attention DP (H2 iter 2: another 1.7x).
+    "expert_parallel": {"heads": (), "kv_heads": (), "expert": ("model",),
+                        "ffn": ()},
+    # Megatron-style sequence parallelism: residual stream sharded on seq
+    # over `model` — 7.3x activation-memory cut on mistral-large train.
+    "seqpar": {"seq": ("model",)},
+}
+
+
+def auto_profile(cfg: ModelConfig, shape: ShapeConfig, tp: int,
+                 chips: int = 256) -> Dict:
+    """Pick the sharding profile the §Perf hillclimbs identified per model
+    class.  Every branch is backed by a measured before/after in
+    EXPERIMENTS.md §Perf; branches that measured as regressions (dp on
+    small-batch prefill; attention-DP for kv-only indivisibility) were
+    removed after the first auto-sweep.
+
+    * train, < 1B, batch % chips == 0 -> dp       (21.6x, fits)
+    * train, 1-3B                     -> dp_fsdp  (3.8x, 36->8 GiB)
+    * MoE with experts % tp == 0      -> expert_parallel (23x prefill,
+                                         1.8x + half memory train)
+    * train, > 50B                    -> seqpar   (403->134 GiB, 1.2x)
+    * otherwise                       -> 2d baseline
+    """
+    if shape.kind == "decode":
+        return {}
+    n = cfg.param_count()
+    rules: Dict = {}
+    dp_batch_ok = shape.global_batch % chips == 0
+    if shape.kind == "train" and n < 1e9 and dp_batch_ok:
+        return dict(PROFILES["dp"])
+    if shape.kind == "train" and n < 3e9 and dp_batch_ok:
+        return dict(PROFILES["dp_fsdp"])
+    if cfg.num_experts and cfg.num_experts % tp == 0:
+        rules.update(PROFILES["expert_parallel"])
+    if n > 5e10 and shape.kind == "train":
+        rules.update(PROFILES["seqpar"])
+    return rules
+
+
+def dryrun_combo(arch_id: str, shape_name: str, *, multi_pod: bool = False,
+                 mesh: Optional[Mesh] = None,
+                 rules: Optional[Dict] = None,
+                 cfg_override: Optional[ModelConfig] = None,
+                 verbose: bool = True) -> DryrunResult:
+    """Lower + compile the step this (arch × shape) pair exercises.
+
+    train_4k    -> train_step   (multi_pod: vmapped DiLoCo inner step)
+    prefill_32k -> prefill_step
+    decode_*    -> serve_step (1 token vs seq_len KV cache)
+    """
+    shape = shape_by_name(shape_name)
+    mesh = mesh if mesh is not None else make_production_mesh(multi_pod=multi_pod)
+    tp = mesh.shape.get("model", 1)
+    n_pods = mesh.shape.get("pod", 1)
+
+    cfg = cfg_override or get_config(arch_id)
+    cfg = cfg.with_(compute_dtype="bfloat16", param_dtype="bfloat16",
+                    vocab_pad_multiple=256)
+    if shape.sub_quadratic_required:
+        cfg = long_context_variant(cfg)
+    if shape.kind == "decode":
+        cfg = tp_kv_repeat(cfg, tp)
+    model = build_model(cfg)
+    n_params = cfg.param_count()
+
+    eff_rules = dict(rules or {})
+    if eff_rules.pop("__auto__", False):
+        eff_rules = auto_profile(cfg, shape, tp)
+    if shape.kind == "decode" and cfg.num_kv_heads % tp and cfg.arch_type != "ssm":
+        # KV heads cannot shard over the TP axis (e.g. 40H/25H on a 16-way
+        # mesh) -> shard the KV cache SEQUENCE dim over `model` instead
+        # (sequence-parallel decode attention; softmax reduces over shards).
+        eff_rules.setdefault("kv_seq", ("model",))
+    if multi_pod and shape.kind == "train":
+        # DiLoCo inner step: the worker dim owns "pod"; batch stays on "data"
+        eff_rules.setdefault("batch", ("data",))
+        eff_rules.setdefault("pod", ("pod",))
+
+    with sharding_ctx(mesh, eff_rules):
+        if shape.kind == "train" and not multi_pod:
+            state_sds, names = abstract_train_state(cfg, default_opt_cfg())
+            state_sds = state_sds._replace(
+                params=_cast_params(state_sds.params, jnp.bfloat16))
+            st_sh = shardings_from_names(names, state_sds, mesh)
+            batch_sds = input_specs(cfg, shape)
+            b_sh = _batch_shardings(batch_sds, mesh)
+            step = steps_mod.make_train_step(model, default_opt_cfg())
+            jitted = jax.jit(step, in_shardings=(st_sh, b_sh),
+                             out_shardings=(st_sh, NamedSharding(mesh, P())))
+            return _finish(arch_id, shape_name, mesh, "train", jitted,
+                           (state_sds, batch_sds), n_params, verbose,
+                           cfg=cfg, shape=shape)
+
+        if shape.kind == "train" and multi_pod:
+            dcfg = DiLoCoConfig(num_workers=n_pods)
+            state_sds, names = abstract_diloco_state(cfg, default_opt_cfg(), dcfg)
+            state_sds = state_sds._replace(
+                global_params=_cast_params(state_sds.global_params, jnp.bfloat16),
+                worker_params=_cast_params(state_sds.worker_params, jnp.bfloat16))
+            st_sh = shardings_from_names(names, state_sds, mesh)
+            per_worker = {k: jax.ShapeDtypeStruct((n_pods, s.shape[0] // n_pods)
+                                                  + s.shape[1:], s.dtype)
+                          for k, s in input_specs(cfg, shape).items()}
+            b_sh = _batch_shardings(per_worker, mesh, stacked=True)
+            inner, outer = steps_mod.make_diloco_steps(
+                model, default_opt_cfg(), dcfg)
+            jitted = jax.jit(inner, in_shardings=(st_sh, b_sh),
+                             out_shardings=(st_sh, NamedSharding(mesh, P("pod"))))
+            return _finish(arch_id, shape_name, mesh, "diloco-inner", jitted,
+                           (state_sds, per_worker), n_params, verbose,
+                           cfg=cfg, shape=shape)
+
+        from repro.models.transformer import abstract_params
+        params_sds, param_names = abstract_params(cfg)
+        params_sds = _cast_params(params_sds, jnp.bfloat16)
+        p_sh = shardings_from_names(param_names, params_sds, mesh)
+
+        if shape.kind == "prefill":
+            batch_sds = input_specs(cfg, shape)
+            batch_sds.pop("labels", None)
+            b_sh = _batch_shardings(batch_sds, mesh)
+            step = steps_mod.make_prefill_step(model)
+            jitted = jax.jit(step, in_shardings=(p_sh, b_sh))
+            return _finish(arch_id, shape_name, mesh, "prefill", jitted,
+                           (params_sds, batch_sds), n_params, verbose,
+                           cfg=cfg, shape=shape)
+
+        # decode
+        cap = decode_cache_capacity(cfg, shape)
+        cache_sds = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, cap,
+                                     dtype=jnp.bfloat16))
+        c_names = decode_cache_names(cache_sds)
+        c_sh = shardings_from_names(c_names, cache_sds, mesh)
+        batch_sds = input_specs(cfg, shape)
+        b_sh = _batch_shardings(batch_sds, mesh)
+        step = steps_mod.make_serve_step(model)
+        jitted = jax.jit(step, in_shardings=(p_sh, c_sh, b_sh),
+                         out_shardings=(
+                             NamedSharding(mesh, spec_for(
+                                 ("batch", "vocab"),
+                                 (shape.global_batch, cfg.padded_vocab()), mesh)),
+                             c_sh))
+        return _finish(arch_id, shape_name, mesh, "decode", jitted,
+                       (params_sds, cache_sds, batch_sds), n_params, verbose,
+                       cfg=cfg, shape=shape, cache_capacity=cap)
+
+
+def dryrun_outer_step(arch_id: str, *, delta_dtype: str = "float32",
+                      drift_aware: bool = False,
+                      verbose: bool = True) -> DryrunResult:
+    """Lower the DiLoCo OUTER step on the multi-pod mesh — the inter-pod
+    delta exchange the paper's ~100x communication saving refers to."""
+    mesh = make_production_mesh(multi_pod=True)
+    n_pods = mesh.shape["pod"]
+    cfg = get_config(arch_id).with_(compute_dtype="bfloat16",
+                                    param_dtype="bfloat16",
+                                    vocab_pad_multiple=256)
+    model = build_model(cfg)
+    dcfg = DiLoCoConfig(num_workers=n_pods, delta_dtype=delta_dtype,
+                        drift_aware=drift_aware)
+
+    with sharding_ctx(mesh, {"pod": ("pod",)}):
+        state_sds, names = abstract_diloco_state(cfg, default_opt_cfg(), dcfg)
+
+    # the delta exchange gathers ONLY over `pod`: each leaf keeps its
+    # fsdp/model shards and drops the leading pod dim from its spec
+    param_name_leaves = jax.tree.leaves(
+        names.global_params,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            n is None or isinstance(n, str) for n in x))
+
+    def replicate(tree):
+        leaves, treedef = jax.tree.flatten(tree)
+        out = []
+        for leaf, pn in zip(leaves, param_name_leaves):
+            if leaf.ndim == len(pn) + 1:     # (K, ...param dims)
+                spec = spec_for((None,) + tuple(pn), leaf.shape, mesh)
+            else:                             # scales etc.
+                spec = P()
+            out.append(jax.lax.with_sharding_constraint(
+                leaf, NamedSharding(mesh, spec)))
+        return jax.tree.unflatten(treedef, out)
+
+    with sharding_ctx(mesh, {"pod": ("pod",)}):
+        state_sds = state_sds._replace(
+            global_params=_cast_params(state_sds.global_params, jnp.bfloat16),
+            worker_params=_cast_params(state_sds.worker_params, jnp.bfloat16))
+        st_sh = shardings_from_names(names, state_sds, mesh)
+        _, outer = steps_mod.make_diloco_steps(model, default_opt_cfg(), dcfg,
+                                               replicate_fn=replicate)
+        jitted = jax.jit(outer, in_shardings=(st_sh,), out_shardings=st_sh)
+        return _finish(arch_id, f"outer[{delta_dtype}]", mesh, "diloco-outer",
+                       jitted, (state_sds,), cfg.param_count(), verbose)

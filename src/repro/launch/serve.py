@@ -1,0 +1,45 @@
+"""Serving launcher: load a checkpoint (or random-init), bring up the batched
+KV-cache engine, and answer chat-formatted requests from stdin or --prompt.
+
+  PYTHONPATH=src python -m repro.launch.serve --ckpt runs/diloco_final \
+      --prompt "what is the color of ent3 ?"
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ckpt", type=str, default=None)
+    ap.add_argument("--prompt", action="append", default=[])
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    from repro.launch.train import build_pipeline, make_model
+    from repro.models.transformer import init_params
+    from repro.serving import Engine
+
+    world, tok, stages, suites = build_pipeline()
+    cfg, model = make_model("tiny", True, tok.vocab_size)
+    params, _ = init_params(cfg, jax.random.key(0))
+    if args.ckpt:
+        from repro.checkpoint import load_pytree
+        params = load_pytree(params, args.ckpt)
+
+    engine = Engine(model, params, tok)
+    prompts = args.prompt or [l.strip() for l in sys.stdin if l.strip()]
+    wrapped = [f"<|bos|><|user_start|>{p}<|user_end|><|assistant_start|>"
+               for p in prompts]
+    outs = engine.chat(wrapped, max_new=args.max_new,
+                       greedy=args.temperature == 0.0)
+    for p, o in zip(prompts, outs):
+        print(f">>> {p}\n{o.strip()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,147 @@
+"""Abstract train/serve state construction + sharding assignment.
+
+Everything here works on ``ShapeDtypeStruct`` trees (``jax.eval_shape``) so
+the dry-run never allocates 100B-parameter models on the CPU host.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, OptimizerConfig, DiLoCoConfig
+from repro.models.sharding import spec_for
+from repro.models.transformer import abstract_params
+from repro.optim import nanochat_optimizer
+
+
+# ---------------------------------------------------------------------------
+# Logical names for non-param trees (path-based)
+# ---------------------------------------------------------------------------
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        out.append(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))))
+    return "/".join(out)
+
+
+def opt_state_names(state_sds, param_names) -> Any:
+    """Optimizer-state logical names: every state leaf whose path suffix
+    matches a param path inherits that param's names; 0-sized sentinels and
+    scalars are unsharded."""
+    by_path = {}
+    flat = jax.tree_util.tree_flatten_with_path(param_names,
+                                                is_leaf=lambda x: isinstance(x, tuple))[0]
+    for p, names in flat:
+        by_path[_path_str(p)] = names
+
+    def assign(path, leaf):
+        if leaf.ndim == 0 or leaf.shape == (0,):
+            return (None,) * leaf.ndim
+        ps = _path_str(path)
+        for key, names in by_path.items():
+            if ps.endswith(key) and len(names) == leaf.ndim:
+                return names
+        return (None,) * leaf.ndim
+
+    return jax.tree_util.tree_map_with_path(assign, state_sds)
+
+
+def decode_cache_names(cache_sds) -> Any:
+    """Logical names for a stacked decode cache, keyed by leaf name."""
+    def assign(path, leaf):
+        ps = _path_str(path)
+        leafname = ps.split("/")[-1]
+        if leafname in ("k", "v"):
+            return ("stack", "batch", "kv_seq", "kv_heads", None)[:leaf.ndim] \
+                if leaf.ndim == 5 else ("stack", "batch", "kv_seq", "kv_heads")
+        if leafname == "pos":
+            return ("stack", "batch", "kv_seq")
+        if leafname == "idx":
+            return ("stack",)
+        if leafname == "conv":
+            return ("stack", "batch", None, "heads")
+        if leafname == "ssm":
+            return ("stack", "batch", "heads", None, None)
+        return (None,) * leaf.ndim
+
+    return jax.tree_util.tree_map_with_path(assign, cache_sds)
+
+
+def shardings_from_names(names_tree, sds_tree, mesh: Mesh):
+    """names (logical, per-dim) + abstract shapes -> NamedSharding tree,
+    with divisibility-aware fallback per dim."""
+    return jax.tree.map(
+        lambda names, sds: NamedSharding(mesh, spec_for(names, sds.shape, mesh)),
+        names_tree, sds_tree,
+        is_leaf=lambda x: (isinstance(x, tuple)
+                           and all(n is None or isinstance(n, str) for n in x)))
+
+
+def add_leading(names_tree, name: str = "pod"):
+    """Prepend a logical dim (worker-stacking) to every leaf's names."""
+    return jax.tree.map(
+        lambda names: (name,) + tuple(names),
+        names_tree,
+        is_leaf=lambda x: (isinstance(x, tuple)
+                           and all(n is None or isinstance(n, str) for n in x)))
+
+
+# ---------------------------------------------------------------------------
+# Abstract states
+# ---------------------------------------------------------------------------
+
+def abstract_train_state(cfg: ModelConfig, opt_cfg: OptimizerConfig
+                         ) -> Tuple[Any, Any]:
+    """(DDP-style single-worker train state SDS, logical names)."""
+    from repro.core.ddp import DDPState
+    params_sds, param_names = abstract_params(cfg)
+    opt = nanochat_optimizer(opt_cfg)
+    opt_sds = jax.eval_shape(opt.init, params_sds)
+    state_sds = DDPState(params=params_sds, opt=opt_sds,
+                         step=jax.ShapeDtypeStruct((), jnp.int32))
+    names = DDPState(params=param_names,
+                     opt=opt_state_names(opt_sds, param_names),
+                     step=())
+    return state_sds, names
+
+
+def abstract_diloco_state(cfg: ModelConfig, opt_cfg: OptimizerConfig,
+                          dcfg: DiLoCoConfig) -> Tuple[Any, Any]:
+    """(DiLoCoState SDS, logical names) — worker dim stacked over ``pod``."""
+    from repro.core.diloco import DiLoCoState, DiLoCoTrainer
+    from repro.models.transformer import init_lm
+    from repro.models.layers import split_logical
+
+    params_sds, param_names = abstract_params(cfg)
+    trainer = DiLoCoTrainer(loss_fn=lambda p, b: (jnp.zeros(()), {}),
+                            opt_cfg=opt_cfg, cfg=dcfg)
+    state_sds = jax.eval_shape(trainer.init, params_sds)
+    worker_names = add_leading(param_names, "pod")
+    inner_names = add_leading(
+        opt_state_names(
+            jax.eval_shape(nanochat_optimizer(opt_cfg).init, params_sds),
+            param_names), "pod")
+    outer_names = type(state_sds.outer)(
+        v=opt_state_names(state_sds.outer.v, param_names), t=())
+    names = DiLoCoState(global_params=param_names, outer=outer_names,
+                        worker_params=worker_names, inner_opt=inner_names,
+                        inner_step=())
+    return state_sds, names
+
+
+def tp_kv_repeat(cfg: ModelConfig, tp: int) -> ModelConfig:
+    """Repeat KV heads up to the tensor-parallel degree (standard Megatron
+    GQA trick) so the decode KV cache shards cleanly over ``model``.  Only
+    applies when the result still divides num_heads (grouping invariant);
+    archs like llama4-scout (40H) / hymba (25H) instead shard the cache
+    sequence dim over ``model`` (see dryrun_lib)."""
+    if cfg.num_kv_heads >= tp or cfg.arch_type == "ssm":
+        return cfg
+    if tp % cfg.num_kv_heads or cfg.num_heads % tp:
+        return cfg
+    return dataclasses.replace(cfg, num_kv_heads=tp)

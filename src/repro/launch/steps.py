@@ -1,0 +1,69 @@
+"""Step functions lowered by the launcher / dry-run.
+
+* ``make_train_step``   — one synchronous (within-worker) training step:
+                          fwd + bwd + Muon/AdamW update.  On the single-pod
+                          mesh this is DiLoCo's *inner* step and the DDP
+                          step at the same time (they only differ in which
+                          mesh axes the batch spans).
+* ``make_diloco_steps`` — (inner, outer) for the multi-pod mesh: inner is
+                          the vmapped per-pod step (no cross-pod traffic);
+                          outer is the delta exchange + Nesterov update.
+* ``make_prefill_step`` — full-sequence forward (inference prefill).
+* ``make_serve_step``   — one-token decode against a KV cache.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DiLoCoConfig, ModelConfig, OptimizerConfig
+from repro.core.ddp import DDPState
+from repro.core.diloco import DiLoCoTrainer
+from repro.models.transformer import ModelAPI, build_model
+from repro.optim import apply_updates, nanochat_optimizer
+
+
+def make_train_step(model: ModelAPI, opt_cfg: OptimizerConfig) -> Callable:
+    opt = nanochat_optimizer(opt_cfg)
+
+    def train_step(state: DDPState, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(state.params, batch)
+        updates, opt_state = opt.update(grads, state.opt, state.params,
+                                        state.step)
+        return (DDPState(apply_updates(state.params, updates), opt_state,
+                         state.step + 1), loss)
+
+    return train_step
+
+
+def make_diloco_steps(model: ModelAPI, opt_cfg: OptimizerConfig,
+                      dcfg: DiLoCoConfig,
+                      replicate_fn=None) -> Tuple[Callable, Callable]:
+    trainer = DiLoCoTrainer(model.loss, opt_cfg, dcfg,
+                            replicate_fn=replicate_fn)
+
+    def inner(state, batches):
+        new_state, loss, _ = trainer.inner_step(state, batches)
+        return new_state, loss
+
+    return inner, trainer.outer_step
+
+
+def make_prefill_step(model: ModelAPI) -> Callable:
+    def prefill(params, batch):
+        logits, _ = model.forward(params, batch)
+        # serving returns next-token logits for the last position
+        return logits[:, -1, :]
+
+    return prefill
+
+
+def make_serve_step(model: ModelAPI) -> Callable:
+    def serve_step(params, cache, batch):
+        logits, new_cache = model.decode_step(params, cache, batch)
+        return logits[:, 0, :], new_cache
+
+    return serve_step

@@ -1,0 +1,4 @@
+from repro.models.transformer import (ModelAPI, abstract_params, build_model,
+                                      init_params)
+
+__all__ = ["ModelAPI", "build_model", "init_params", "abstract_params"]

@@ -1,0 +1,311 @@
+"""Grouped-query attention with rotary embeddings, sliding windows and KV
+caches (full + ring-buffer) — the reference jnp implementation.
+
+Three execution paths, selected per call site:
+
+* ``_direct``   — materialized scores; short sequences (train_4k, decode).
+* ``_blocked``  — lax.scan over KV chunks with an online softmax (the pure-jnp
+                  mirror of the Pallas flash kernel); long prefill.
+* ``_banded``   — sliding-window prefill that only gathers the W-wide band of
+                  keys per query block: O(S·W) instead of O(S²) FLOPs.
+
+GQA is computed grouped — queries reshaped to (B,S,KV,G,D) — so KV heads are
+never materialized repeated.  All tensors carry logical sharding annotations;
+when a head count does not divide the tensor-parallel degree the constraint
+silently relaxes (see models/sharding.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Px, apply_rope, param
+from repro.models.sharding import logical_constraint
+
+NEG_INF = -1e30
+
+# Force a particular implementation (tests / perf experiments); None = auto.
+FORCE_IMPL: Optional[str] = None
+# Above this KV length the blocked/banded paths are used.
+DIRECT_MAX_KV = 4096
+BLOCK_Q = 512
+BLOCK_KV = 1024
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False):
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim()
+    nq, nkv = cfg.num_heads * hd, cfg.num_kv_heads * hd
+    ks = jax.random.split(key, 4)
+    o_scale = 1.0 / math.sqrt(2 * max(cfg.num_layers, 1) * nq)
+    p = {
+        "wq": param(ks[0], (d, nq), ("fsdp", "heads")),
+        "wk": param(ks[1], (d, nkv), ("fsdp", "kv_heads")),
+        "wv": param(ks[2], (d, nkv), ("fsdp", "kv_heads")),
+        "wo": param(ks[3], (nq, d), ("heads", "fsdp"), scale=o_scale),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = param(ks[0], (nq,), (None,), init="zeros")
+        p["bk"] = param(ks[1], (nkv,), (None,), init="zeros")
+        p["bv"] = param(ks[2], (nkv,), (None,), init="zeros")
+    return p
+
+
+def _project_qkv(p, xq, xkv, cfg: ModelConfig):
+    dt = cfg.compute_dtype
+    hd = cfg.resolved_head_dim()
+    q = xq @ p["wq"].astype(dt)
+    k = xkv @ p["wk"].astype(dt)
+    v = xkv @ p["wv"].astype(dt)
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = logical_constraint(q, "batch", "seq", "heads")
+    k = logical_constraint(k, "batch", "seq", "kv_heads")
+    v = logical_constraint(v, "batch", "seq", "kv_heads")
+    B, Sq = q.shape[:2]
+    Skv = k.shape[1]
+    q = q.reshape(B, Sq, cfg.num_kv_heads, cfg.num_heads // cfg.num_kv_heads, hd)
+    k = k.reshape(B, Skv, cfg.num_kv_heads, hd)
+    v = v.reshape(B, Skv, cfg.num_kv_heads, hd)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Score paths
+# ---------------------------------------------------------------------------
+
+def _mask_bias(q_pos, k_pos, window, causal: bool):
+    """Additive mask bias (…, Sq, Sk) from position arrays."""
+    diff = q_pos[..., :, None] - k_pos[..., None, :]
+    ok = k_pos[..., None, :] >= 0
+    if causal:
+        ok &= diff >= 0
+    if window is not None:
+        ok &= diff < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _direct(q, k, v, bias):
+    """q: (B,Sq,KV,G,D), k/v: (B,Sk,KV,D), bias: (B,1,1,Sq,Sk) or None."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q, k).astype(jnp.float32) * scale
+    if bias is not None:
+        s = s + bias
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgqs,bskd->bqkgd", p, v)
+
+
+def _blocked(q, k, v, q_pos, k_pos, window, causal):
+    """Online-softmax scan over KV chunks (flash-attention in jnp)."""
+    B, Sq, KV, G, D = q.shape
+    Sk = k.shape[1]
+    bk = min(BLOCK_KV, Sk)
+    nblocks = (Sk + bk - 1) // bk
+    pad = nblocks * bk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+    kc = k.reshape(B, nblocks, bk, KV, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nblocks, bk, KV, D).transpose(1, 0, 2, 3, 4)
+    pc = k_pos.reshape(B, nblocks, bk).transpose(1, 0, 2)
+    scale = 1.0 / math.sqrt(D)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kb, vb, pb = blk
+        s = jnp.einsum("bqkgd,bskd->bkgqs", q, kb).astype(jnp.float32) * scale
+        s = s + _mask_bias(q_pos, pb, window, causal)[:, None, None]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p.astype(q.dtype), vb).astype(jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, KV, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, Sq, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)  # (B,Sq,KV,G,D)
+
+
+def _banded(q, k, v, window, cfg):
+    """Sliding-window prefill: per query block gather only the (W + Bq)-wide
+    key band.  FLOPs O(S·(W+Bq)) — the sub-quadratic dense-arch path."""
+    B, Sq, KV, G, D = q.shape
+    bq = min(BLOCK_Q, Sq)
+    nq = Sq // bq
+    assert Sq % bq == 0, "banded path expects block-aligned sequence"
+    band = window + bq
+    scale = 1.0 / math.sqrt(D)
+    # pad keys on the left so every band gather is in-bounds
+    kp = jnp.pad(k, ((0, 0), (band - bq, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (band - bq, 0), (0, 0), (0, 0)))
+
+    def block(i):
+        q0 = i * bq
+        qb = jax.lax.dynamic_slice_in_dim(q, q0, bq, axis=1)
+        kb = jax.lax.dynamic_slice_in_dim(kp, q0, band, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(vp, q0, band, axis=1)
+        q_pos = q0 + jnp.arange(bq)
+        k_pos = q0 - (band - bq) + jnp.arange(band)  # may be negative -> masked
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb).astype(jnp.float32) * scale
+        s = s + _mask_bias(q_pos, k_pos, window, True)
+        p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        return jnp.einsum("bkgqs,bskd->bqkgd", p, vb)
+
+    outs = jax.lax.map(block, jnp.arange(nq))          # (nq, B, bq, KV, G, D)
+    return outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, KV, G, D)
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int,
+               dtype=None) -> Dict[str, Any]:
+    """A fixed-capacity cache.  For full attention capacity = max_seq_len; for
+    sliding-window decode it is the window (ring buffer)."""
+    hd = cfg.resolved_head_dim()
+    dt = dtype or cfg.compute_dtype
+    return {
+        "k": jnp.zeros((batch, capacity, cfg.num_kv_heads, hd), dt),
+        "v": jnp.zeros((batch, capacity, cfg.num_kv_heads, hd), dt),
+        "pos": jnp.full((batch, capacity), -1, jnp.int32),
+        "idx": jnp.zeros((), jnp.int32),   # next write slot (mod capacity)
+    }
+
+
+def cache_logical_names(ring: bool = False):
+    return {"k": ("batch", "seq", "kv_heads", None),
+            "v": ("batch", "seq", "kv_heads", None),
+            "pos": ("batch", "seq"),
+            "idx": ()}
+
+
+def _cache_insert(cache, k_new, v_new, pos_new):
+    """Insert S_new entries at idx mod capacity.  Decode writes a single
+    position, so a ring write never crosses the buffer boundary; prefill
+    writes start at slot 0.  Functional (returns a new cache pytree)."""
+    cap = cache["k"].shape[1]
+    s_new = k_new.shape[1]
+    slot = jnp.mod(cache["idx"], cap)
+
+    def upd(buf, new):
+        return jax.lax.dynamic_update_slice_in_dim(
+            buf, new.astype(buf.dtype), slot, axis=1)
+
+    return {"k": upd(cache["k"], k_new), "v": upd(cache["v"], v_new),
+            "pos": upd(cache["pos"], pos_new), "idx": cache["idx"] + s_new}
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def attention(p, x, cfg: ModelConfig, *, positions: jax.Array,
+              window: Optional[int] = None,
+              memory: Optional[jax.Array] = None,
+              impl: Optional[str] = None) -> jax.Array:
+    """Training / prefill attention.  ``memory`` switches to cross-attention
+    (bidirectional over the encoder output)."""
+    B, S = x.shape[:2]
+    cross = memory is not None
+    xkv = memory if cross else x
+    q, k, v = _project_qkv(p, x, xkv, cfg)
+    if not cross:
+        q = apply_rope(q.reshape(B, S, cfg.num_heads, -1), positions,
+                       cfg.rope_theta).reshape(q.shape)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    k_pos = (jnp.broadcast_to(jnp.arange(xkv.shape[1]), (B, xkv.shape[1]))
+             if cross else jnp.broadcast_to(positions, (B, S)))
+    q_pos = jnp.broadcast_to(positions, (B, S))
+    static_window = isinstance(window, int) or window is None
+    if static_window:
+        w = None if not window else window
+    else:
+        w = window  # traced per-layer window (0 already mapped to "huge")
+    causal = not cross
+    Sk = xkv.shape[1]
+    mode = impl or FORCE_IMPL
+    if mode is None:
+        if (static_window and w and w < Sk and Sk > DIRECT_MAX_KV and causal
+                and S == Sk and S % min(BLOCK_Q, S) == 0):
+            mode = "banded"
+        elif Sk > DIRECT_MAX_KV:
+            mode = "blocked"
+        else:
+            mode = "direct"
+    if mode == "banded":
+        out = _banded(q, k, v, w, cfg)
+    elif mode == "blocked":
+        out = _blocked(q, k, v, q_pos, k_pos, w, causal)
+    else:
+        bias = _mask_bias(q_pos, k_pos, w, causal)[:, None, None]
+        out = _direct(q, k, v, bias)
+    out = out.reshape(B, S, cfg.num_heads * cfg.resolved_head_dim())
+    out = logical_constraint(out, "batch", "seq", "heads")
+    y = out @ p["wo"].astype(cfg.compute_dtype)
+    return logical_constraint(y, "batch", "seq", None)
+
+
+def decode_attention(p, x, cfg: ModelConfig, cache: Dict[str, Any], *,
+                     position: jax.Array, window: Optional[int] = None,
+                     memory_cache: Optional[Dict[str, jax.Array]] = None
+                     ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One-token decode against a KV cache.
+
+    x: (B, 1, d).  position: scalar or (B,) absolute position of the new
+    token.  ``memory_cache`` holds precomputed cross-attention K/V.
+    """
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim()
+    if memory_cache is not None:   # cross-attention: read-only memory
+        dt = cfg.compute_dtype
+        q = (x @ p["wq"].astype(dt)).reshape(
+            B, 1, cfg.num_kv_heads, cfg.num_heads // cfg.num_kv_heads, hd)
+        k, v = memory_cache["k"], memory_cache["v"]
+        out = _direct(q, k, v, None)
+        out = out.reshape(B, 1, cfg.num_heads * hd)
+        y = out @ p["wo"].astype(dt)
+        return logical_constraint(y, "batch", "seq", None), cache
+    q, k_new, v_new = _project_qkv(p, x, x, cfg)
+    pos = jnp.broadcast_to(jnp.asarray(position, jnp.int32).reshape(-1, 1)
+                           if jnp.ndim(position) else
+                           jnp.asarray(position, jnp.int32), (B, 1))
+    q = apply_rope(q.reshape(B, 1, cfg.num_heads, hd), pos, cfg.rope_theta
+                   ).reshape(q.shape)
+    k_new = apply_rope(k_new, pos, cfg.rope_theta)
+    cache = _cache_insert(cache, k_new, v_new, pos)
+    if isinstance(window, int) and window == 0:
+        window = None
+    bias = _mask_bias(pos, cache["pos"], window, True)
+    out = _direct(q, cache["k"].astype(q.dtype), cache["v"].astype(q.dtype),
+                  bias[:, None, None])
+    out = out.reshape(B, 1, cfg.num_heads * hd)
+    out = logical_constraint(out, "batch", "seq", "heads")
+    y = out @ p["wo"].astype(cfg.compute_dtype)
+    return logical_constraint(y, "batch", "seq", None), cache
+
+
+def precompute_cross_cache(p, memory: jax.Array, cfg: ModelConfig):
+    """K/V for cross-attention, computed once per request."""
+    dt = cfg.compute_dtype
+    B, S = memory.shape[:2]
+    hd = cfg.resolved_head_dim()
+    k = (memory @ p["wk"].astype(dt)).reshape(B, S, cfg.num_kv_heads, hd)
+    v = (memory @ p["wv"].astype(dt)).reshape(B, S, cfg.num_kv_heads, hd)
+    return {"k": k, "v": v}

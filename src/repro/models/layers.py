@@ -1,0 +1,203 @@
+"""Core layers: parameter specs, norms, activations, rotary embeddings, MLPs.
+
+Parameters are plain pytrees (nested dicts of jnp arrays).  Init functions
+build trees whose leaves are ``Px(value, names)`` — the array plus its logical
+sharding axes — and ``split_logical`` separates them into (params, names_tree)
+so the launcher can derive NamedShardings for pjit without a traced model.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.sharding import logical_constraint
+
+
+class Px(NamedTuple):
+    """A parameter leaf: array + logical axis names (one per dim)."""
+    value: jax.Array
+    names: Tuple[Optional[str], ...]
+
+
+def is_px(x: Any) -> bool:
+    return isinstance(x, Px)
+
+
+def split_logical(tree):
+    """Split a Px-leaf tree into (params, logical_names) trees."""
+    params = jax.tree.map(lambda p: p.value, tree, is_leaf=is_px)
+    names = jax.tree.map(lambda p: tuple(p.names), tree, is_leaf=is_px)
+    return params, names
+
+
+def param(key, shape, names, *, init="normal", scale=None, dtype=jnp.float32) -> Px:
+    """Create a parameter with standard init.
+
+    init: "normal" (trunc-normal fan-in), "zeros", "ones", "embed" (N(0,1)
+    scaled), "ssm_a" (mamba A_log), "ssm_dt" (dt bias).
+    """
+    assert len(shape) == len(names), (shape, names)
+    if init == "zeros":
+        v = jnp.zeros(shape, dtype)
+    elif init == "ones":
+        v = jnp.ones(shape, dtype)
+    elif init == "normal":
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        s = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+        v = s * jax.random.truncated_normal(key, -3.0, 3.0, shape, dtype)
+    elif init == "embed":
+        s = scale if scale is not None else 0.02
+        v = s * jax.random.normal(key, shape, dtype)
+    elif init == "ssm_a":
+        # A in [1, 16): A_log = log(uniform)
+        v = jnp.log(jax.random.uniform(key, shape, dtype, minval=1.0, maxval=16.0))
+    elif init == "ssm_dt":
+        # inverse-softplus of dt in [1e-3, 1e-1]
+        dt = jnp.exp(jax.random.uniform(key, shape, dtype)
+                     * (math.log(1e-1) - math.log(1e-3)) + math.log(1e-3))
+        v = dt + jnp.log(-jnp.expm1(-dt))
+    else:
+        raise ValueError(init)
+    return Px(v, tuple(names))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(key, d: int, cfg: ModelConfig):
+    p = {"scale": param(key, (d,), (None,), init="ones")}
+    if cfg.norm == "layernorm":
+        p["bias"] = param(key, (d,), (None,), init="zeros")
+    return p
+
+
+def apply_norm(p, x, cfg: ModelConfig):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        x = x - jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + cfg.norm_eps)
+    x = x * p["scale"].astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        x = x + p["bias"].astype(jnp.float32)
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+def activation(name: str):
+    if name == "swiglu":  # handled by MLP (gated)
+        return jax.nn.silu
+    if name == "relu2":   # nemotron-4 squared ReLU
+        return lambda x: jnp.square(jax.nn.relu(x))
+    if name == "gelu":
+        return jax.nn.gelu
+    raise ValueError(name)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                       # (D/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    v = cfg.padded_vocab()
+    p = {"table": param(k1, (v, cfg.d_model), ("vocab", "fsdp"),
+                        init="embed")}
+    if not cfg.tie_embeddings:
+        p["unembed"] = param(k2, (cfg.d_model, v), ("fsdp", "vocab"),
+                             init="normal")
+    return p
+
+
+def embed(p, tokens, cfg: ModelConfig):
+    h = p["table"].astype(cfg.compute_dtype)[tokens]
+    return logical_constraint(h, "batch", "seq", None)
+
+
+def unembed(p, h, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        w = p["table"].astype(cfg.compute_dtype).T
+    else:
+        w = p["unembed"].astype(cfg.compute_dtype)
+    logits = h @ w
+    logits = logical_constraint(logits, "batch", "seq", "vocab")
+    if cfg.logit_soft_cap > 0:
+        logits = cfg.logit_soft_cap * jnp.tanh(logits / cfg.logit_soft_cap)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w_up": param(ks[0], (d, f), ("fsdp", "ffn")),
+         "w_down": param(ks[1], (f, d), ("ffn", "fsdp"), scale=1.0 / math.sqrt(f))}
+    if cfg.mlp_activation == "swiglu":
+        p["w_gate"] = param(ks[2], (d, f), ("fsdp", "ffn"))
+    return p
+
+
+def apply_mlp(p, x, cfg: ModelConfig):
+    dt = cfg.compute_dtype
+    up = x @ p["w_up"].astype(dt)
+    if cfg.mlp_activation == "swiglu":
+        gate = x @ p["w_gate"].astype(dt)
+        h = jax.nn.silu(gate) * up
+    else:
+        h = activation(cfg.mlp_activation)(up)
+    h = logical_constraint(h, "batch", "seq", "ffn")
+    out = h @ p["w_down"].astype(dt)
+    return logical_constraint(out, "batch", "seq", None)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          mask: Optional[jax.Array] = None,
+                          z_loss: float = 0.0) -> jax.Array:
+    """Mean CE over valid positions. labels == -1 are ignored."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    ce = lse - gold
+    if z_loss:
+        ce = ce + z_loss * jnp.square(lse)
+    valid = (labels >= 0)
+    if mask is not None:
+        valid = valid & (mask > 0)
+    valid = valid.astype(jnp.float32)
+    return jnp.sum(ce * valid) / jnp.maximum(jnp.sum(valid), 1.0)

@@ -1,0 +1,258 @@
+"""Mamba-2 (SSD — state-space duality) block: chunked training/prefill scan,
+single-step decode, depthwise conv, gated RMSNorm.
+
+The chunked SSD algorithm (Dao & Gu, arXiv:2405.21060) splits the sequence
+into chunks of Q tokens: an intra-chunk quadratic (attention-like) term plus
+an inter-chunk linear recurrence over per-chunk states.  This file is the
+pure-jnp reference; ``repro.kernels.ssd`` holds the Pallas TPU kernel for the
+intra-chunk term and must match it bit-for-bit in interpret mode.
+
+Shapes: x (B,S,H,P) heads×head_dim, dt (B,S,H), A (H,), B/C (B,S,N) (single
+group, as in mamba2-1.3b).  State h is (B,H,N,P).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import param
+from repro.models.sharding import logical_constraint
+
+
+# ---------------------------------------------------------------------------
+# Core SSD math (reference)
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x, dt, A, Bm, Cm, D, chunk: int,
+                h0: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.  Returns (y, final_state).
+
+    x: (B,S,H,P) float; dt: (B,S,H) >=0; A: (H,) negative; Bm/Cm: (B,S,N);
+    D: (H,); h0: (B,H,N,P) or None.
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    f32 = jnp.float32
+    x32, dt32 = x.astype(f32), dt.astype(f32)
+    Bm32, Cm32 = Bm.astype(f32), Cm.astype(f32)
+
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x32 = jnp.pad(x32, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt32 = jnp.pad(dt32, ((0, 0), (0, pad), (0, 0)))
+        Bm32 = jnp.pad(Bm32, ((0, 0), (0, pad), (0, 0)))
+        Cm32 = jnp.pad(Cm32, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // Q
+
+    xc = logical_constraint(x32.reshape(Bsz, nc, Q, H, P),
+                            "batch", None, None, "heads", None)
+    dtc = logical_constraint(dt32.reshape(Bsz, nc, Q, H),
+                             "batch", None, None, "heads")
+    Bc = Bm32.reshape(Bsz, nc, Q, N)
+    Cc = Cm32.reshape(Bsz, nc, Q, N)
+
+    dA = dtc * A.astype(f32)                      # (B,nc,Q,H), <= 0
+    cum = jnp.cumsum(dA, axis=2)                  # inclusive within-chunk
+    xbar = xc * dtc[..., None]
+
+    # intra-chunk: y_i = sum_{j<=i} (C_i.B_j) exp(cum_i - cum_j) xbar_j
+    CB = jnp.einsum("bnqN,bnkN->bnqk", Cc, Bc)
+    cumT = cum.transpose(0, 1, 3, 2)              # (B,nc,H,Q)
+    L = jnp.exp(cumT[..., :, None] - cumT[..., None, :])
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(mask, L, 0.0)
+    M = logical_constraint(CB[:, :, None] * L,    # (B,nc,H,Q,Q)
+                           "batch", None, "heads", None, None)
+    y_intra = logical_constraint(
+        jnp.einsum("bnhqk,bnkhp->bnqhp", M, xbar),
+        "batch", None, None, "heads", None)
+
+    # per-chunk state contribution: S_c = sum_j exp(cum_last - cum_j) B_j xbar_j
+    # NOTE: pre-scale xbar by the decay, then contract k with a single
+    # dot_general — the naive 3-operand einsum materializes a (k, N, h)
+    # intermediate that is ~16x larger than either operand (measured 61.8
+    # GiB/device on mamba2-1.3b train_4k; see EXPERIMENTS.md §Perf).
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,nc,Q,H)
+    xbar_dec = xbar * decay_end[..., None]        # (B,nc,Q,H,P)
+    S_c = logical_constraint(
+        jnp.einsum("bnkN,bnkhp->bnhNp", Bc, xbar_dec),
+        "batch", None, "heads", None, None)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[:, :, -1, :])       # (B,nc,H)
+    h_init = (jnp.zeros((Bsz, H, N, P), f32) if h0 is None
+              else h0.astype(f32))
+
+    def step(h, inp):
+        dcy, s_c = inp                            # (B,H), (B,H,N,P)
+        h_prev = h
+        h = dcy[..., None, None] * h + s_c
+        return h, h_prev
+
+    hT, h_prevs = jax.lax.scan(
+        step, h_init,
+        (chunk_decay.transpose(1, 0, 2), S_c.transpose(1, 0, 2, 3, 4)))
+    h_prevs = logical_constraint(
+        h_prevs.transpose(1, 0, 2, 3, 4),         # (B,nc,H,N,P)
+        "batch", None, "heads", None, None)
+
+    # contract N first (output-sized result), then scale by the decay — same
+    # association-order fix as S_c above.
+    y_inter = jnp.einsum("bnqN,bnhNp->bnqhp", Cc, h_prevs) \
+        * jnp.exp(cum)[..., None]
+
+    y = (y_intra + y_inter).reshape(Bsz, Sp, H, P)[:, :S]
+    y = y + x32[:, :S] * D.astype(f32)[None, None, :, None]
+    return y.astype(x.dtype), hT.astype(f32)
+
+
+def ssd_decode_step(h, x, dt, A, Bm, Cm, D):
+    """One-token SSD update.  h: (B,H,N,P); x: (B,H,P); dt: (B,H);
+    Bm/Cm: (B,N).  Returns (y, h_new)."""
+    f32 = jnp.float32
+    a = jnp.exp(dt.astype(f32) * A.astype(f32))                  # (B,H)
+    xbar = x.astype(f32) * dt.astype(f32)[..., None]             # (B,H,P)
+    h_new = (a[..., None, None] * h.astype(f32)
+             + jnp.einsum("bN,bhp->bhNp", Bm.astype(f32), xbar))
+    y = jnp.einsum("bN,bhNp->bhp", Cm.astype(f32), h_new)
+    y = y + x.astype(f32) * D.astype(f32)[None, :, None]
+    return y.astype(x.dtype), h_new
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 block
+# ---------------------------------------------------------------------------
+
+def mamba_dims(cfg: ModelConfig, d_inner: Optional[int] = None):
+    d_in = d_inner or cfg.ssm_expand * cfg.d_model
+    H = d_in // cfg.ssm_head_dim
+    N = cfg.ssm_state_size
+    conv_dim = d_in + 2 * N
+    return d_in, H, N, conv_dim
+
+
+def init_mamba(key, cfg: ModelConfig, d_inner: Optional[int] = None):
+    d = cfg.d_model
+    d_in, H, N, conv_dim = mamba_dims(cfg, d_inner)
+    ks = jax.random.split(key, 6)
+    return {
+        # order: [z(d_in), x(d_in), B(N), C(N), dt(H)]
+        "in_proj": param(ks[0], (d, 2 * d_in + 2 * N + H), ("fsdp", "heads")),
+        "conv_w": param(ks[1], (cfg.ssm_conv_width, conv_dim), (None, "heads"),
+                        scale=1.0 / math.sqrt(cfg.ssm_conv_width)),
+        "conv_b": param(ks[1], (conv_dim,), (None,), init="zeros"),
+        "A_log": param(ks[2], (H,), (None,), init="ssm_a"),
+        "D": param(ks[3], (H,), (None,), init="ones"),
+        "dt_bias": param(ks[4], (H,), (None,), init="ssm_dt"),
+        "norm_scale": param(ks[5], (d_in,), (None,), init="ones"),
+        "out_proj": param(ks[5], (d_in, d), ("heads", "fsdp"),
+                          scale=1.0 / math.sqrt(d_in)),
+    }
+
+
+def _split_proj(zxbcdt, d_in, N, H):
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in:2 * d_in + 2 * N]
+    dt = zxbcdt[..., 2 * d_in + 2 * N:]
+    return z, xBC, dt
+
+
+def _gated_norm(p, y, z, eps):
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    return (y * jax.lax.rsqrt(var + eps)) * p["norm_scale"].astype(jnp.float32)
+
+
+def apply_mamba(p, x, cfg: ModelConfig, d_inner: Optional[int] = None,
+                use_pallas: Optional[bool] = None) -> jax.Array:
+    """Full-sequence (training / prefill) mamba-2 block.  x: (B,S,d)."""
+    Bsz, S, d = x.shape
+    d_in, H, N, conv_dim = mamba_dims(cfg, d_inner)
+    dt_c = cfg.compute_dtype
+    zxbcdt = logical_constraint(x @ p["in_proj"].astype(dt_c),
+                                "batch", "seq", "heads")
+    z, xBC, dt_raw = _split_proj(zxbcdt, d_in, N, H)
+
+    # depthwise causal conv over the (x,B,C) channels
+    w = p["conv_w"].astype(jnp.float32)                      # (W, conv_dim)
+    W = w.shape[0]
+    xp = jnp.pad(xBC.astype(jnp.float32), ((0, 0), (W - 1, 0), (0, 0)))
+    conv = sum(xp[:, i:i + S] * w[i] for i in range(W)) + p["conv_b"].astype(jnp.float32)
+    xBC = logical_constraint(jax.nn.silu(conv), "batch", "seq", "heads")
+
+    xs = xBC[..., :d_in].reshape(Bsz, S, H, cfg.ssm_head_dim)
+    Bm = xBC[..., d_in:d_in + N]
+    Cm = xBC[..., d_in + N:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if use_pallas if use_pallas is not None else cfg.use_pallas:
+        from repro.kernels.ssd import ops as ssd_ops
+        y, _ = ssd_ops.ssd(xs, dt, A, Bm, Cm, p["D"], chunk=cfg.ssm_chunk)
+    else:
+        y, _ = ssd_chunked(xs, dt, A, Bm, Cm, p["D"], chunk=cfg.ssm_chunk)
+    y = y.reshape(Bsz, S, d_in).astype(jnp.float32)
+    y = _gated_norm(p, y, z, cfg.norm_eps)
+    out = y.astype(dt_c) @ p["out_proj"].astype(dt_c)
+    return logical_constraint(out, "batch", "seq", None)
+
+
+# ---------------------------------------------------------------------------
+# Decode (stateful, single token)
+# ---------------------------------------------------------------------------
+
+def init_mamba_cache(cfg: ModelConfig, batch: int,
+                     d_inner: Optional[int] = None, dtype=None):
+    d_in, H, N, conv_dim = mamba_dims(cfg, d_inner)
+    dt = dtype or jnp.float32
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), dt),
+        "ssm": jnp.zeros((batch, H, N, cfg.ssm_head_dim), dt),
+    }
+
+
+def mamba_cache_logical_names():
+    return {"conv": ("batch", None, "heads"),
+            "ssm": ("batch", "heads", "state", None)}
+
+
+def decode_mamba(p, x, cfg: ModelConfig, cache: Dict[str, Any],
+                 d_inner: Optional[int] = None
+                 ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One-token mamba step.  x: (B,1,d)."""
+    Bsz = x.shape[0]
+    d_in, H, N, conv_dim = mamba_dims(cfg, d_inner)
+    dt_c = cfg.compute_dtype
+    zxbcdt = x[:, 0] @ p["in_proj"].astype(dt_c)             # (B, ·)
+    z, xBC, dt_raw = _split_proj(zxbcdt, d_in, N, H)
+
+    # conv ring: window = [cache_conv, new]
+    w = p["conv_w"].astype(jnp.float32)
+    win = jnp.concatenate(
+        [cache["conv"].astype(jnp.float32), xBC.astype(jnp.float32)[:, None]],
+        axis=1)                                               # (B, W, conv_dim)
+    conv = jnp.einsum("bwc,wc->bc", win, w) + p["conv_b"].astype(jnp.float32)
+    xBC_c = jax.nn.silu(conv)
+    new_conv = win[:, 1:]
+
+    xs = xBC_c[..., :d_in].reshape(Bsz, H, cfg.ssm_head_dim)
+    Bm = xBC_c[..., d_in:d_in + N]
+    Cm = xBC_c[..., d_in + N:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    y, h_new = ssd_decode_step(cache["ssm"], xs, dt, A, Bm, Cm, p["D"])
+    y = y.reshape(Bsz, d_in).astype(jnp.float32)
+    y = _gated_norm(p, y, z, cfg.norm_eps)
+    out = (y.astype(dt_c) @ p["out_proj"].astype(dt_c))[:, None]
+    out = logical_constraint(out, "batch", "seq", None)
+    return out, {"conv": new_conv.astype(cache["conv"].dtype), "ssm": h_new}

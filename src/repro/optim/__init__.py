@@ -1,0 +1,10 @@
+from repro.optim.base import Optimizer, apply_updates, global_norm
+from repro.optim.adamw import adamw
+from repro.optim.muon import muon, newton_schulz
+from repro.optim.sgd_nesterov import sgd_nesterov
+from repro.optim.combined import nanochat_optimizer, partition_label
+from repro.optim.schedule import lr_schedule
+
+__all__ = ["Optimizer", "apply_updates", "global_norm", "adamw", "muon",
+           "newton_schulz", "sgd_nesterov", "nanochat_optimizer",
+           "partition_label", "lr_schedule"]

@@ -1,0 +1,48 @@
+"""AdamW — the paper's inner optimizer for embeddings / scalars (nanochat
+split), and the general-purpose fallback."""
+from __future__ import annotations
+
+from typing import Callable, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer
+
+
+def adamw(lr: Union[float, Callable] = 3e-4,
+          betas: Tuple[float, float] = (0.9, 0.95),
+          eps: float = 1e-10,
+          weight_decay: float = 0.0) -> Optimizer:
+    b1, b2 = betas
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        lr_t = lr_fn(step)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mhat = m / (1 - b1 ** t)
+            vhat = v / (1 - b2 ** t)
+            u = -lr_t * (mhat / (jnp.sqrt(vhat) + eps)
+                         + weight_decay * p.astype(jnp.float32))
+            return u, m, v
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        updates = jax.tree.map(lambda o: o[0], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"m": m, "v": v}
+
+    return Optimizer(init, update)

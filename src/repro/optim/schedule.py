@@ -1,0 +1,33 @@
+"""Learning-rate schedules: warmup+cosine, WSD (warmup-stable-decay, the
+nanochat default), constant."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lr_schedule(kind: str, base_lr: float, total_steps: int,
+                warmup_steps: int = 0, final_frac: float = 0.0):
+    """Returns f(step) -> lr (all jnp ops, safe inside jit)."""
+    total = max(total_steps, 1)
+    warm = max(warmup_steps, 0)
+
+    def f(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm_lr = base_lr * jnp.minimum(1.0, (s + 1.0) / max(warm, 1))
+        if kind == "constant":
+            main = base_lr
+        elif kind == "cosine":
+            frac = jnp.clip((s - warm) / max(total - warm, 1), 0.0, 1.0)
+            main = final_frac * base_lr + (1 - final_frac) * base_lr * 0.5 * (
+                1.0 + jnp.cos(jnp.pi * frac))
+        elif kind == "wsd":
+            # stable until 80% of total, then linear decay to final_frac
+            decay_start = 0.8 * total
+            frac = jnp.clip((s - decay_start) / max(total - decay_start, 1),
+                            0.0, 1.0)
+            main = base_lr * (1.0 - (1.0 - final_frac) * frac)
+        else:
+            raise ValueError(kind)
+        return jnp.where(s < warm, warm_lr, main)
+
+    return f

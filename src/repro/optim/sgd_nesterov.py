@@ -1,0 +1,37 @@
+"""SGD with (Nesterov) momentum — DiLoCo's **outer** optimizer (paper §3:
+mu_outer = 0.9, eta_outer = 0.8).  Also usable as a plain inner optimizer."""
+from __future__ import annotations
+
+from typing import Callable, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer
+
+
+def sgd_nesterov(lr: Union[float, Callable] = 0.8, momentum: float = 0.9,
+                 nesterov: bool = True) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"v": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+
+        def upd(g, v):
+            g = g.astype(jnp.float32)
+            v = momentum * v + g
+            eff = g + momentum * v if nesterov else v
+            return -lr_t * eff, v
+
+        out = jax.tree.map(upd, grads, state["v"])
+        updates = jax.tree.map(lambda o: o[0], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"v": v}
+
+    return Optimizer(init, update)

@@ -1,0 +1,3 @@
+from repro.serving.engine import Engine
+
+__all__ = ["Engine"]

@@ -1,0 +1,139 @@
+"""Batched KV-cache inference engine (nanochat ships a small engine + web UI;
+this is the JAX equivalent, built on the models' decode_step).
+
+Prompts are LEFT-padded to a common length; padded slots are inserted into
+the cache with position −1, which the attention mask treats as invalid, so
+ragged batches decode correctly.  Both the prefill (teacher-forced) and the
+generation loop are single ``lax.scan``s — one compile per (batch, lengths)
+bucket.
+
+Note: SSM/hybrid state updates are not position-gated, so ragged batches
+should use same-length prompts for those archs (documented limitation; the
+paper's nanochat model is dense attention).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.tokenizer import BPETokenizer
+from repro.models.transformer import ModelAPI
+
+
+def _left_pad(prompts: Sequence[Sequence[int]], pad_id: int
+              ) -> Tuple[np.ndarray, np.ndarray]:
+    tp = max(len(p) for p in prompts)
+    out = np.full((len(prompts), tp), pad_id, np.int32)
+    lens = np.zeros((len(prompts),), np.int32)
+    for i, p in enumerate(prompts):
+        out[i, tp - len(p):] = p
+        lens[i] = len(p)
+    return out, lens
+
+
+@dataclasses.dataclass
+class Engine:
+    model: ModelAPI
+    params: object
+    tok: Optional[BPETokenizer] = None
+    max_len: int = 512
+
+    def __post_init__(self):
+        self._gen_fn = jax.jit(self._generate_scan,
+                               static_argnames=("max_new", "greedy"))
+
+    # -- core scan ------------------------------------------------------------
+    def _generate_scan(self, params, tokens, lens, key, *, max_new: int,
+                       greedy: bool, temperature: float = 1.0):
+        B, Tp = tokens.shape
+        cache = self.model.init_cache(B, Tp + max_new)
+
+        def prefill_body(carry, t):
+            cache = carry
+            pos = t - (Tp - lens)                       # (B,) may be negative
+            logits, cache = self.model.decode_step(
+                params, cache, {"token": tokens[:, t][:, None],
+                                "position": jnp.maximum(pos, -1)})
+            return cache, logits[:, 0]
+
+        cache, all_logits = jax.lax.scan(prefill_body, cache, jnp.arange(Tp))
+        last_logits = all_logits[-1]                    # (B, V)
+
+        def gen_body(carry, t):
+            cache, logits, key = carry
+            key, sub = jax.random.split(key)
+            if greedy:
+                nxt = jnp.argmax(logits, axis=-1)
+            else:
+                nxt = jax.random.categorical(sub, logits / temperature)
+            pos = lens + t                               # (B,)
+            logits, cache = self.model.decode_step(
+                params, cache, {"token": nxt[:, None].astype(jnp.int32),
+                                "position": pos})
+            return (cache, logits[:, 0], key), nxt
+
+        (_, _, _), toks = jax.lax.scan(
+            gen_body, (cache, last_logits, key), jnp.arange(max_new))
+        return toks.T                                    # (B, max_new)
+
+    # -- public API -------------------------------------------------------------
+    def generate_ids(self, prompts: Sequence[Sequence[int]], max_new: int = 16,
+                     greedy: bool = True, temperature: float = 1.0,
+                     seed: int = 0) -> np.ndarray:
+        pad = self.tok.pad if self.tok else 0
+        tokens, lens = _left_pad(prompts, pad)
+        out = self._gen_fn(self.params, jnp.asarray(tokens), jnp.asarray(lens),
+                           jax.random.key(seed), max_new=max_new,
+                           greedy=greedy)
+        return np.asarray(out)
+
+    def chat(self, prompts: List[str], max_new: int = 32,
+             greedy: bool = True) -> List[str]:
+        assert self.tok is not None
+        ids = [self.tok.encode(p) for p in prompts]
+        out = self.generate_ids(ids, max_new=max_new, greedy=greedy)
+        stop = self.tok.special_id("<|assistant_end|>")
+        texts = []
+        for row in out:
+            row = list(row)
+            if stop in row:
+                row = row[:row.index(stop)]
+            texts.append(self.tok.decode(row))
+        return texts
+
+    # -- scoring (used by the MC eval) ----------------------------------------
+    def _score_batch(self, params, tokens, cont_mask):
+        """tokens: (B, T); cont_mask: (B, T) — 1 where position t's *target*
+        (t+1) belongs to the continuation.  Returns (B,) sum logprob."""
+        logits, _ = self.model.forward(params, {"tokens": tokens})
+        lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        tgt = jnp.roll(tokens, -1, axis=1)
+        gold = jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+        return jnp.sum(gold * cont_mask, axis=1)
+
+    def score_continuations_batch(self, rows) -> np.ndarray:
+        """rows: list of (prompt_ids, option_ids).  One jitted forward for
+        the whole batch (padded to a shared length bucket)."""
+        if not hasattr(self, "_score_jit"):
+            self._score_jit = jax.jit(self._score_batch)
+        pad = self.tok.pad if self.tok else 0
+        tmax = max(len(p) + len(o) for p, o in rows)
+        tmax = -(-tmax // 16) * 16  # bucket to 16 to bound recompiles
+        toks = np.full((len(rows), tmax), pad, np.int32)
+        mask = np.zeros((len(rows), tmax), np.float32)
+        for i, (p, o) in enumerate(rows):
+            full = list(p) + list(o)
+            toks[i, :len(full)] = full
+            mask[i, len(p) - 1:len(full) - 1] = 1.0
+        out = self._score_jit(self.params, jnp.asarray(toks),
+                              jnp.asarray(mask))
+        return np.asarray(out)
+
+    def score_continuations(self, prompt_ids: Sequence[int],
+                            options_ids: Sequence[Sequence[int]]) -> np.ndarray:
+        return self.score_continuations_batch(
+            [(prompt_ids, o) for o in options_ids])

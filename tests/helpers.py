@@ -1,0 +1,43 @@
+"""Shared tiny configs / batch builders for the test suite."""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+TINY = {
+    "dense": dict(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                  d_ff=128, vocab_size=97),
+    "moe": dict(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                d_ff=64, vocab_size=97, num_experts=4, num_experts_per_tok=2,
+                arch_type="moe"),
+    "ssm": dict(num_layers=2, d_model=64, arch_type="ssm", ssm_state_size=16,
+                ssm_head_dim=16, ssm_chunk=8, num_heads=4, num_kv_heads=4,
+                d_ff=0, vocab_size=97),
+    "hybrid": dict(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                   d_ff=128, vocab_size=97, hybrid=True, ssm_state_size=8,
+                   ssm_head_dim=16, ssm_chunk=8, window_pattern=(0, 8)),
+    "audio": dict(num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+                  d_ff=128, vocab_size=97, is_encoder_decoder=True,
+                  num_encoder_layers=2, encoder_seq_len=12,
+                  arch_type="audio"),
+    "vlm": dict(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                d_ff=128, vocab_size=97, num_image_tokens=4,
+                arch_type="vlm"),
+}
+
+
+def tiny_cfg(kind="dense", **kw) -> ModelConfig:
+    d = dict(TINY[kind])
+    d.update(kw)
+    return ModelConfig(**d)
+
+
+def tiny_batch(cfg: ModelConfig, B=2, S=16, key=0):
+    k = jax.random.key(key)
+    toks = jax.random.randint(k, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": (toks + 1) % cfg.vocab_size}
+    if cfg.num_image_tokens:
+        batch["patches"] = jnp.ones((B, cfg.num_image_tokens, cfg.d_model))
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jnp.ones((B, cfg.encoder_seq_len, cfg.d_model))
+    return batch

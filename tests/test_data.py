@@ -1,0 +1,72 @@
+"""Data pipeline: BPE roundtrip, special tokens, packing, worker sharding."""
+import numpy as np
+
+from repro.data import BPETokenizer, PackedDataset, build_tokenizer, synthetic
+
+
+def _tok():
+    w = synthetic.World.make(10)
+    texts = synthetic.gen_pretrain_texts(w, 300)
+    return w, texts, build_tokenizer(texts[:200], 384)
+
+
+def test_bpe_roundtrip():
+    w, texts, tok = _tok()
+    for t in texts[:20]:
+        assert tok.decode(tok.encode(t)).strip() == t.strip()
+
+
+def test_special_tokens_atomic():
+    w, texts, tok = _tok()
+    s = "<|user_start|>compute 1 + 1 .<|user_end|>"
+    ids = tok.encode(s)
+    assert tok.special_id("<|user_start|>") in ids
+    assert tok.special_id("<|user_end|>") in ids
+    # byte-level BPE appends a word-boundary space; roundtrip is exact up to
+    # whitespace before special tokens
+    assert tok.decode(ids).replace(" <|", "<|") == s
+
+
+def test_bos_prepended():
+    w, texts, tok = _tok()
+    ids = tok.encode("hello", add_bos=True)
+    assert ids[0] == tok.bos
+
+
+def test_packing_labels_shift():
+    w, texts, tok = _tok()
+    ds = PackedDataset.from_texts(texts, tok, seq_len=32)
+    b = ds.batch(0, 4)
+    assert b["tokens"].shape == (4, 32)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_worker_batches_deterministic_and_disjoint_regions():
+    w, texts, tok = _tok()
+    ds = PackedDataset.from_texts(texts, tok, seq_len=32)
+    a = ds.worker_batches(0, 4, 2)
+    b = ds.worker_batches(0, 4, 2)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = ds.worker_batches(1, 4, 2)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    assert a["tokens"].shape == (4, 2, 32)
+
+
+def test_eval_items_well_formed():
+    w = synthetic.World.make(10)
+    for it in synthetic.gen_mc_eval(w, 10):
+        assert len(it["options"]) == 4
+        assert 0 <= it["answer"] < 4
+        gold = it["options"][it["answer"]]
+        assert isinstance(gold, str)
+    for it in synthetic.gen_arith_eval(10):
+        lhs = it["prompt"].split("compute ")[1].split(" .")[0]
+        a, op, b = lhs.split(" ")
+        expect = {"+": int(a) + int(b), "-": int(a) - int(b),
+                  "*": int(a) * int(b)}[op]
+        assert int(it["answer"]) == expect
+
+
+def test_heldout_entities_disjoint():
+    w = synthetic.World.make(20)
+    assert not set(w.train_entities()) & set(w.eval_entities())

@@ -1,0 +1,179 @@
+"""DiLoCo algorithm invariants — the paper's core mechanism."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from helpers import tiny_batch, tiny_cfg
+from repro.configs.base import DiLoCoConfig, OptimizerConfig
+from repro.core import (AdaptiveH, DDPTrainer, DiLoCoTrainer, FixedH, drift,
+                        run_ddp, run_diloco)
+from repro.core.outer_opt import (average_deltas, dequantize_delta,
+                                  outer_update, init_outer_state,
+                                  quantize_delta)
+from repro.models.transformer import build_model, init_params
+
+OPT = OptimizerConfig(total_steps=100, warmup_steps=0, schedule="constant",
+                      learning_rate=0.02, adam_lr=1e-3)
+
+
+def _setup(k=4, h=5):
+    cfg = tiny_cfg("dense")
+    m = build_model(cfg)
+    params, _ = init_params(cfg, jax.random.key(0))
+    dcfg = DiLoCoConfig(num_workers=k, h_inner_steps=h)
+    tr = DiLoCoTrainer(m.loss, OPT, dcfg)
+    return cfg, m, params, tr
+
+
+def _worker_data(cfg, k, step, B=4, S=16):
+    key = jax.random.key(1000 + step)
+    toks = jax.random.randint(key, (k, B, S), 0, cfg.vocab_size)
+    return {"tokens": toks, "labels": (toks + 1) % cfg.vocab_size}
+
+
+def test_workers_stay_synced_with_identical_data():
+    """Same data on every worker -> workers remain bit-identical."""
+    cfg, m, params, tr = _setup(k=3)
+    state = tr.init(params)
+    one = _worker_data(cfg, 1, 0)
+    same = jax.tree.map(lambda x: jnp.broadcast_to(x, (3,) + x.shape[1:]), one)
+    inner, outer = tr.jit_steps()
+    for _ in range(3):
+        state, loss, _ = inner(state, same)
+    wp = state.worker_params
+    for leaf in jax.tree.leaves(wp):
+        assert bool(jnp.all(leaf[0] == leaf[1])) and bool(
+            jnp.all(leaf[1] == leaf[2]))
+
+
+def test_workers_diverge_with_different_data_and_resync():
+    cfg, m, params, tr = _setup(k=3)
+    state = tr.init(params)
+    inner, outer = tr.jit_steps()
+    for step in range(3):
+        state, _, _ = inner(state, _worker_data(cfg, 3, step))
+    # divergence
+    leaf = jax.tree.leaves(state.worker_params)[2]
+    assert float(jnp.max(jnp.abs(leaf[0] - leaf[1]))) > 0
+    # outer sync re-broadcasts
+    state = outer(state)
+    for leaf in jax.tree.leaves(state.worker_params):
+        assert bool(jnp.all(leaf[0] == leaf[1]))
+    for g, w in zip(jax.tree.leaves(state.global_params),
+                    jax.tree.leaves(state.worker_params)):
+        assert bool(jnp.all(g == w[0]))
+
+
+def test_outer_update_math():
+    """theta' = theta + eta*(mu*v' + delta_avg) with v' = mu*v + delta_avg
+    (Nesterov); checked against a hand-rolled numpy implementation."""
+    cfg = DiLoCoConfig(num_workers=2, outer_lr=0.8, outer_momentum=0.9)
+    params = {"w": jnp.asarray([[1.0, 2.0]])}
+    state = init_outer_state(params)
+    stacked = {"w": jnp.asarray([[[0.1, 0.2]], [[0.3, 0.4]]])}  # deltas (K=2)
+    avg = average_deltas(stacked, cfg)
+    new, st = outer_update(params, avg, state, cfg)
+    d = np.array([0.2, 0.3])
+    v = 0.9 * 0.0 + d
+    expect = np.array([1.0, 2.0]) + 0.8 * (d + 0.9 * v)
+    np.testing.assert_allclose(np.asarray(new["w"][0]), expect, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(st.v["w"][0]), v, rtol=1e-6)
+
+
+def test_diloco_h1_eta1_mu0_equals_delta_averaging():
+    """H=1, eta=1, mu=0 reduces the outer step to plain parameter-delta
+    averaging: theta_{t+1} = mean_i theta_i."""
+    cfg, m, params, _ = _setup()
+    dcfg = DiLoCoConfig(num_workers=2, h_inner_steps=1, outer_lr=1.0,
+                        outer_momentum=0.0, nesterov=False)
+    tr = DiLoCoTrainer(m.loss, OPT, dcfg)
+    state = tr.init(params)
+    batches = _worker_data(cfg, 2, 0)
+    inner, outer = tr.jit_steps()
+    state, _, _ = inner(state, batches)
+    manual_mean = jax.tree.map(lambda w: jnp.mean(w, axis=0),
+                               state.worker_params)
+    state = outer(state)
+    for a, b in zip(jax.tree.leaves(manual_mean),
+                    jax.tree.leaves(state.global_params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_delta_quantization_roundtrip():
+    delta = {"w": jax.random.normal(jax.random.key(0), (2, 8, 8)) * 0.01}
+    for dt, tol in [("float32", 0.0), ("bfloat16", 1e-4), ("int8", 2e-4)]:
+        payload, scales = quantize_delta(delta, dt)
+        back = dequantize_delta(payload, scales)
+        err = float(jnp.max(jnp.abs(back["w"] - delta["w"])))
+        assert err <= tol, (dt, err)
+    payload, scales = quantize_delta(delta, "int8")
+    assert payload["w"].dtype == jnp.int8
+
+
+def test_drift_aware_weights_sum_preserved():
+    """Drift-aware averaging is a convex combination: with identical deltas
+    it must equal the plain mean."""
+    delta = {"w": jnp.ones((4, 3, 3)) * 0.5}
+    plain = average_deltas(delta, DiLoCoConfig(num_workers=4))
+    da = average_deltas(delta, DiLoCoConfig(num_workers=4, drift_aware=True))
+    np.testing.assert_allclose(np.asarray(plain["w"]), np.asarray(da["w"]),
+                               rtol=1e-6)
+
+
+def test_comm_accounting_h_ratio():
+    cfg, m, params, tr = _setup()
+    assert tr.bytes_per_sync(params) == tr.ddp_bytes_per_step(params)
+    tr8 = DiLoCoTrainer(m.loss, OPT,
+                        DiLoCoConfig(num_workers=4, delta_dtype="int8"))
+    assert tr8.bytes_per_sync(params) * 4 == tr.ddp_bytes_per_step(params)
+
+
+def test_run_diloco_converges_and_syncs():
+    cfg, m, params, tr = _setup(k=2, h=4)
+    state = tr.init(params)
+    state, hist = run_diloco(tr, state, lambda s: _worker_data(cfg, 2, s), 12)
+    assert len(hist["sync_steps"]) == 3
+    assert hist["loss"][-1] < hist["loss"][0]
+
+
+def test_hybrid_handoff_ddp_continues():
+    """DiLoCo-pretrained global params must be a valid DDP starting point
+    (the paper's Hybrid configuration)."""
+    cfg, m, params, tr = _setup(k=2, h=3)
+    state = tr.init(params)
+    state, _ = run_diloco(tr, state, lambda s: _worker_data(cfg, 2, s), 6)
+    ddp = DDPTrainer(m.loss, OPT)
+    dstate = ddp.init(state.global_params)
+    merged = lambda s: jax.tree.map(
+        lambda x: x.reshape((-1,) + x.shape[2:]), _worker_data(cfg, 2, s))
+    dstate, hist = run_ddp(ddp, dstate, merged, 6)
+    assert np.isfinite(hist["loss"]).all()
+
+
+def test_adaptive_h_grows_when_flat_shrinks_when_steep():
+    hs = AdaptiveH(h0=20, h_min=5, h_max=100, window=8, hi=5e-3, lo=5e-4)
+    for i in range(60):
+        hs.should_sync(i, i % 50, 1.0)        # perfectly flat loss
+    assert hs.current_h > 20
+    hs2 = AdaptiveH(h0=20, h_min=5, h_max=100, window=8, hi=5e-3, lo=5e-4)
+    for i in range(60):
+        hs2.should_sync(i, 50, 5.0 - 0.1 * i)  # steep descent
+    assert hs2.current_h < 20
+
+
+def test_drift_metrics():
+    cfg, m, params, tr = _setup(k=3)
+    state = tr.init(params)
+    inner, _ = tr.jit_steps()
+    for step in range(3):
+        state, _, _ = inner(state, _worker_data(cfg, 3, step))
+    d = drift.param_drift(state.worker_params, state.global_params)
+    assert float(d["delta_norm_mean"]) > 0
+    assert -1.0 <= float(d["pairwise_cos"]) <= 1.0
+    X = jax.random.normal(jax.random.key(0), (32, 8))
+    assert abs(float(drift.linear_cka(X, X)) - 1.0) < 1e-5
+    assert float(drift.linear_cka(
+        X, jax.random.normal(jax.random.key(1), (32, 8)))) < 0.9

@@ -1,0 +1,57 @@
+"""GRPO stage (nanochat's optional final stage): the policy-gradient update
+must increase the probability of rewarded completions."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from helpers import tiny_cfg
+from repro.configs.base import OptimizerConfig
+from repro.core.grpo import GRPOTrainer, grpo_loss
+from repro.models.transformer import build_model, init_params
+
+
+def test_grpo_loss_sign():
+    """Positive-advantage sequences must have gradients that increase their
+    logprob (loss decreases when their probability rises)."""
+    cfg = tiny_cfg("dense")
+    m = build_model(cfg)
+    params, _ = init_params(cfg, jax.random.key(0))
+    toks = jnp.asarray([[1, 2, 3, 4, 5, 6]], jnp.int32)
+    labels = jnp.asarray([[-1, -1, 4, 5, 6, -1]], jnp.int32)
+    batch = {"tokens": toks, "labels": labels, "adv": jnp.asarray([1.0])}
+    loss, met = grpo_loss(params, batch, m)
+    assert bool(jnp.isfinite(loss))
+    # loss = -adv * logprob/tok; with adv>0, loss = -mean_logprob
+    assert abs(float(loss) + float(met["mean_logprob"])) < 1e-5
+
+
+def test_grpo_increases_reward_probability():
+    """Reward completions whose FIRST token is a fixed target id; a few GRPO
+    iterations must raise the probability of that token."""
+    # small vocab so random-init sampling hits the reward often enough for
+    # the group advantage to be non-degenerate (hit rate ~1/16 per sample)
+    cfg = tiny_cfg("dense", vocab_size=16)
+    m = build_model(cfg)
+    params, _ = init_params(cfg, jax.random.key(1))
+    target = 7
+    tr = GRPOTrainer(m, OptimizerConfig(total_steps=30, warmup_steps=0,
+                                        schedule="constant",
+                                        learning_rate=0.02, adam_lr=3e-3),
+                     group_size=16, max_new=2)
+    state = tr.init(params)
+    prompts = [[1, 2, 3], [4, 5]]
+
+    def reward(_, row):
+        return 1.0 if int(row[0]) == target else 0.0
+
+    def p_target(params):
+        logits, _ = m.forward(params, {"tokens": jnp.asarray([prompts[0]])})
+        return float(jax.nn.softmax(logits[0, -1])[target])
+
+    before = p_target(state["params"])
+    rng = 0
+    for it in range(8):
+        state, loss, mean_r = tr.rollout_and_step(
+            state, prompts, reward, pad_id=0, seed=it)
+    after = p_target(state["params"])
+    assert after > before, (before, after)

@@ -1,0 +1,95 @@
+"""Unit tests for the while-trip-weighted HLO collective parser."""
+from repro.launch.hlo_analysis import (parse_computations, _result_bytes,
+                                       weighted_collective_stats)
+
+SYNTH = """\
+HloModule jit_step
+
+%inner_body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %ar = f32[8,8]{1,0} all-reduce(%x), channel_id=3, replica_groups={{0,1}}, to_apply=%add
+  ROOT %t = (s32[], f32[8,8]) tuple(%i, %ar)
+}
+
+%inner_cond (p: (s32[], f32[8,8])) -> pred[] {
+  %c = s32[] constant(4)
+  ROOT %cmp = pred[] compare(%i, %c), direction=LT
+}
+
+%outer_body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %w = (s32[], f32[8,8]) while(%tup), condition=%inner_cond, body=%inner_body
+  %ag = f32[16,8]{1,0} all-gather(%y), channel_id=4, replica_groups={{0,1}}, dimensions={0}
+  ROOT %t2 = (s32[], f32[8,8]) tuple(%i, %z)
+}
+
+%outer_cond (p: (s32[], f32[8,8])) -> pred[] {
+  %c2 = s32[] constant(3)
+  ROOT %cmp2 = pred[] compare(%i, %c2), direction=LT
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %w2 = (s32[], f32[8,8]) while(%tup0), condition=%outer_cond, body=%outer_body
+  %ar2 = (f32[8,8], f32[4]) all-reduce(%g1, %g2), channel_id=9, replica_groups={{0,1}}
+  ROOT %r = f32[8,8] get-tuple-element(%w2), index=1
+}
+"""
+
+
+def test_result_bytes_tuple_types():
+    assert _result_bytes(
+        "%x = (f32[8,8], f32[4]) all-reduce(%a, %b), replica_groups={}") \
+        == 8 * 8 * 4 + 4 * 4
+    assert _result_bytes(
+        "%x = bf16[16,8]{1,0} all-gather(%a), dimensions={0}") == 16 * 8 * 2
+
+
+def test_nested_while_weighting():
+    entry, colls, edges = parse_computations(SYNTH)
+    assert entry == "main"
+    stats = weighted_collective_stats(SYNTH)
+    # inner all-reduce: 8*8*4 = 256 B, executed 3 (outer) x 4 (inner) = 12x
+    # outer all-gather: 16*8*4 = 512 B, executed 3x
+    # entry all-reduce: 256 + 16 = 272 B, executed once
+    assert stats["bytes_by_kind"]["all-reduce"] == 256 * 12 + 272
+    assert stats["bytes_by_kind"]["all-gather"] == 512 * 3
+    # wire: all-reduce counts 2x (ring), gather 1x
+    assert stats["wire_bytes_per_device"] == 2 * (256 * 12 + 272) + 512 * 3
+
+
+def test_unreachable_counted_once():
+    txt = """\
+%orphan (p: f32[4]) -> f32[4] {
+  %ar = f32[4]{0} all-reduce(%p), channel_id=1, replica_groups={{0,1}}
+}
+
+ENTRY %main (a: f32[4]) -> f32[4] {
+  ROOT %r = f32[4] add(%a, %a)
+}
+"""
+    stats = weighted_collective_stats(txt)
+    assert stats["bytes_by_kind"]["all-reduce"] == 16
+
+
+def test_cross_pod_classification():
+    from repro.launch.hlo_analysis import _crosses_boundary
+    # iota form: 2 groups of 2: {0,1},{2,3} with boundary 2 -> intra only
+    assert not _crosses_boundary(
+        "all-reduce(%x), replica_groups=[2,2]<=[4]", 2)
+    # transposed iota: groups {0,2},{1,3} -> crosses boundary 2
+    assert _crosses_boundary(
+        "all-reduce(%x), replica_groups=[2,2]<=[2,2]T(1,0)", 2)
+    # explicit groups
+    assert _crosses_boundary("all-gather(%x), replica_groups={{0,3},{1,2}}", 2)
+    assert not _crosses_boundary("all-gather(%x), replica_groups={{0,1},{2,3}}", 2)
+
+
+def test_weighted_stats_cross_pod_field():
+    txt = """\
+ENTRY %main (a: f32[4]) -> f32[4] {
+  %ar = f32[4]{0} all-reduce(%a), channel_id=1, replica_groups=[1,4]<=[4]
+  ROOT %r = f32[4] get-tuple-element(%ar), index=0
+}
+"""
+    stats = weighted_collective_stats(txt, pod_boundary=2)
+    assert stats["cross_pod_bytes_per_device"] == 2 * 16  # ring 2x
+    stats0 = weighted_collective_stats(txt, pod_boundary=0)
+    assert stats0["cross_pod_bytes_per_device"] == 0

@@ -1,0 +1,174 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.flash_attention import flash_attention, reference_attention
+from repro.kernels.rmsnorm import (reference_rmsnorm,
+                                   reference_rmsnorm_residual, rmsnorm,
+                                   rmsnorm_residual)
+from repro.kernels.ssd import reference_ssd, ssd
+
+
+@pytest.mark.parametrize("B,H,KV,S,D", [
+    (1, 4, 2, 256, 64),
+    (2, 2, 2, 128, 32),
+    (1, 8, 4, 256, 128),
+    (1, 2, 1, 384, 64),
+    (1, 1, 1, 128, 128),
+])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 64),
+                                           (False, None)])
+def test_flash_attention_sweep(B, H, KV, S, D, causal, window):
+    ks = jax.random.split(jax.random.key(B * S + H + D), 3)
+    q = jax.random.normal(ks[0], (B, H, S, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, KV, S, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, KV, S, D), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, window=window)
+    ref = reference_attention(q, k, v, causal=causal, window=window)
+    assert float(jnp.max(jnp.abs(out - ref))) < 2e-5
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (1, 2, 128, 64)).astype(dtype)
+    k = jax.random.normal(ks[1], (1, 2, 128, 64)).astype(dtype)
+    v = jax.random.normal(ks[2], (1, 2, 128, 64)).astype(dtype)
+    out = flash_attention(q, k, v)
+    ref = reference_attention(q, k, v)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    assert out.dtype == dtype
+    assert float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                 - ref.astype(jnp.float32)))) < tol
+
+
+def test_flash_attention_mismatched_qk_len():
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (1, 2, 128, 64))
+    k = jax.random.normal(ks[1], (1, 2, 256, 64))
+    v = jax.random.normal(ks[2], (1, 2, 256, 64))
+    out = flash_attention(q, k, v, causal=False)
+    ref = reference_attention(q, k, v, causal=False)
+    assert float(jnp.max(jnp.abs(out - ref))) < 2e-5
+
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (2, 64, 4, 16, 32, 16),
+    (1, 100, 2, 8, 16, 32),     # non-multiple S -> padding path
+    (1, 128, 8, 32, 64, 128),   # single chunk
+    (2, 96, 1, 64, 8, 16),
+])
+def test_ssd_sweep(B, S, H, P, N, chunk):
+    ks = jax.random.split(jax.random.key(S + N), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.uniform(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    D = jnp.ones((H,))
+    y, h = ssd(x, dt, A, Bm, Cm, D, chunk=chunk)
+    yr, hr = reference_ssd(x, dt, A, Bm, Cm, D, chunk=chunk)
+    assert float(jnp.max(jnp.abs(y - yr))) < 1e-3
+    assert float(jnp.max(jnp.abs(h - hr))) < 1e-3
+
+
+def test_ssd_matches_sequential_recurrence():
+    """Chunked SSD == naive per-token recurrence (the gold-standard oracle)."""
+    B, S, H, P, N = 1, 32, 2, 8, 4
+    ks = jax.random.split(jax.random.key(9), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.uniform(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    D = 0.5 * jnp.ones((H,))
+    y, hT = ssd(x, dt, A, Bm, Cm, D, chunk=8)
+
+    from repro.models.ssm import ssd_decode_step
+    h = jnp.zeros((B, H, N, P))
+    ys = []
+    for t in range(S):
+        yt, h = ssd_decode_step(h, x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t], D)
+        ys.append(yt)
+    y_seq = jnp.stack(ys, axis=1)
+    assert float(jnp.max(jnp.abs(y - y_seq))) < 1e-3
+    assert float(jnp.max(jnp.abs(hT - h))) < 1e-3
+
+
+@pytest.mark.parametrize("R,d", [(40, 96), (256, 64), (7, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(R, d, dtype):
+    x = jax.random.normal(jax.random.key(R), (R, d)).astype(dtype)
+    s = jax.random.normal(jax.random.key(d), (d,))
+    out = rmsnorm(x, s)
+    ref = reference_rmsnorm(x, s)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    assert float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                 - ref.astype(jnp.float32)))) < tol
+
+
+def test_rmsnorm_residual():
+    x = jax.random.normal(jax.random.key(0), (3, 40, 96))
+    r = jax.random.normal(jax.random.key(1), (3, 40, 96))
+    s = jnp.ones((96,))
+    o, res = rmsnorm_residual(x, r, s)
+    orf, resr = reference_rmsnorm_residual(x, r, s)
+    assert float(jnp.max(jnp.abs(o - orf))) < 1e-5
+    assert float(jnp.max(jnp.abs(res - resr))) < 1e-5
+
+
+def test_ssd_kernel_in_model_path():
+    """cfg.use_pallas=True must produce identical logits to the jnp path."""
+    from helpers import tiny_cfg
+    from repro.models.transformer import build_model, forward_lm, init_params
+    cfg = tiny_cfg("ssm", ssm_chunk=16)
+    m = build_model(cfg)
+    params, _ = init_params(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 32), 0, cfg.vocab_size)
+    ref, _ = m.forward(params, {"tokens": toks})
+    out, _ = forward_lm(params, {"tokens": toks}, cfg.with_(use_pallas=True))
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-3
+
+
+@pytest.mark.parametrize("B,KV,G,S,D,window", [
+    (2, 2, 2, 256, 64, 0),
+    (1, 4, 1, 512, 128, 0),
+    (2, 1, 4, 256, 64, 64),     # sliding window
+    (1, 2, 3, 256, 32, 0),      # odd group size
+])
+def test_decode_attention_kernel(B, KV, G, S, D, window):
+    from repro.kernels.decode_attention import (decode_attention,
+                                                reference_decode_attention)
+    ks = jax.random.split(jax.random.key(B * S + D), 4)
+    q = jax.random.normal(ks[0], (B, KV, G, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, KV, S, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, KV, S, D), jnp.float32)
+    # ring-buffer-ish positions: first 3/4 filled with a WRAPPED layout,
+    # last 1/4 empty (-1)
+    fill = 3 * S // 4
+    base = jax.random.randint(ks[3], (B, 1), fill, fill + 100)
+    pos = (base - 1 - jnp.arange(S)[None, :]) % (base + 1)
+    pos = jnp.where(jnp.arange(S)[None, :] < fill, pos, -1).astype(jnp.int32)
+    q_pos = base[:, 0].astype(jnp.int32)
+    out = decode_attention(q, k, v, pos, q_pos, window=window, bk=128)
+    ref = reference_decode_attention(q, k, v, pos, q_pos, window=window)
+    assert float(jnp.max(jnp.abs(out - ref))) < 2e-5
+
+
+def test_decode_attention_ignores_empty_slots():
+    from repro.kernels.decode_attention import (decode_attention,
+                                                reference_decode_attention)
+    ks = jax.random.split(jax.random.key(5), 3)
+    B, KV, G, S, D = 1, 1, 2, 128, 32
+    q = jax.random.normal(ks[0], (B, KV, G, D))
+    k = jax.random.normal(ks[1], (B, KV, S, D))
+    v = jax.random.normal(ks[2], (B, KV, S, D))
+    pos_full = jnp.arange(S, dtype=jnp.int32)[None]
+    # poisoning slots beyond q_pos must not change the output
+    q_pos = jnp.asarray([63], jnp.int32)
+    out1 = decode_attention(q, k, v, pos_full, q_pos, bk=64)
+    k2 = k.at[:, :, 100:].set(1e4)
+    v2 = v.at[:, :, 100:].set(-1e4)
+    out2 = decode_attention(q, k2, v2, pos_full, q_pos, bk=64)
+    assert float(jnp.max(jnp.abs(out1 - out2))) == 0.0

@@ -1,0 +1,103 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.outer_opt import dequantize_delta, quantize_delta
+from repro.configs.base import DiLoCoConfig
+from repro.core.outer_opt import average_deltas
+from repro.models.layers import softmax_cross_entropy
+from repro.optim import newton_schulz
+from repro.optim.schedule import lr_schedule
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 4), st.integers(2, 24))
+def test_int8_quantization_error_bound(seed, k, n):
+    """|dequant(quant(x)) - x| <= amax/254 per tensor (symmetric int8)."""
+    x = np.asarray(jax.random.normal(jax.random.key(seed), (k, n, n)))
+    payload, scales = quantize_delta({"w": jnp.asarray(x)}, "int8")
+    back = np.asarray(dequantize_delta(payload, scales)["w"])
+    for i in range(k):
+        amax = np.abs(x[i]).max()
+        assert np.abs(back[i] - x[i]).max() <= amax / 254 + 1e-9
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 6))
+def test_drift_aware_average_is_convex_combination(seed, k):
+    """Drift-aware averaging output stays inside the per-coordinate
+    [min, max] envelope of the worker deltas (convexity)."""
+    x = np.asarray(jax.random.normal(jax.random.key(seed), (k, 5)))
+    avg = np.asarray(average_deltas(
+        {"w": jnp.asarray(x)}, DiLoCoConfig(num_workers=k, drift_aware=True))["w"])
+    assert (avg <= x.max(axis=0) + 1e-6).all()
+    assert (avg >= x.min(axis=0) - 1e-6).all()
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_cross_entropy_matches_numpy(seed):
+    key = jax.random.key(seed)
+    logits = jax.random.normal(key, (2, 5, 11))
+    labels = jax.random.randint(jax.random.key(seed + 1), (2, 5), 0, 11)
+    got = float(softmax_cross_entropy(logits, labels))
+    l = np.asarray(logits, np.float64)
+    p = np.exp(l - l.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    want = float(np.mean(-np.log(
+        np.take_along_axis(p, np.asarray(labels)[..., None], -1)[..., 0])))
+    assert abs(got - want) < 1e-4
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_cross_entropy_ignores_masked_labels(seed):
+    logits = jax.random.normal(jax.random.key(seed), (1, 6, 7))
+    labels = jnp.asarray([[1, 2, -1, -1, 3, 4]])
+    full = softmax_cross_entropy(logits, labels)
+    sub = softmax_cross_entropy(
+        logits[:, jnp.asarray([0, 1, 4, 5])], labels[:, jnp.asarray([0, 1, 4, 5])])
+    assert abs(float(full) - float(sub)) < 1e-5
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 32), st.integers(2, 32))
+def test_newton_schulz_bounded_singular_values(seed, m, n):
+    G = jax.random.normal(jax.random.key(seed), (m, n)) + 1e-3
+    O = newton_schulz(G)
+    sv = np.asarray(jnp.linalg.svd(O, compute_uv=False))
+    assert sv.max() < 1.6
+    assert np.isfinite(np.asarray(O)).all()
+
+
+@settings(**SETTINGS)
+@given(st.sampled_from(["wsd", "cosine", "constant"]),
+       st.integers(1, 50), st.integers(50, 500))
+def test_lr_schedule_positive_and_bounded(kind, warm, total):
+    f = lr_schedule(kind, 1.0, total, warmup_steps=warm)
+    for s in range(0, total, max(total // 10, 1)):
+        v = float(f(s))
+        assert 0.0 <= v <= 1.0 + 1e-6
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 8))
+def test_ring_cache_insert_keeps_newest(seed, cap):
+    """After inserting N > cap tokens one at a time, the cache holds exactly
+    the last `cap` positions."""
+    from repro.models.attention import _cache_insert
+    import jax.numpy as jnp
+    cache = {"k": jnp.zeros((1, cap, 1, 2)), "v": jnp.zeros((1, cap, 1, 2)),
+             "pos": jnp.full((1, cap), -1, jnp.int32),
+             "idx": jnp.zeros((), jnp.int32)}
+    n = cap + 3
+    for t in range(n):
+        cache = _cache_insert(
+            cache, jnp.ones((1, 1, 1, 2)) * t, jnp.ones((1, 1, 1, 2)) * t,
+            jnp.asarray([[t]], jnp.int32))
+    got = sorted(np.asarray(cache["pos"][0]).tolist())
+    assert got == list(range(n - cap, n))

@@ -1,0 +1,54 @@
+"""Checkpoint-resume equivalence: train N steps, checkpoint the FULL DiLoCo
+state (worker params + inner optimizer + outer momentum), restore, continue
+— must be bit-identical to an uninterrupted run."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from helpers import tiny_cfg
+from repro.checkpoint import load_pytree, save_pytree
+from repro.configs.base import DiLoCoConfig, OptimizerConfig
+from repro.core import DiLoCoTrainer
+from repro.models.transformer import build_model, init_params
+
+OPT = OptimizerConfig(total_steps=100, warmup_steps=0, schedule="constant",
+                      learning_rate=0.02, adam_lr=1e-3)
+
+
+def _data(cfg, step):
+    key = jax.random.key(500 + step)
+    toks = jax.random.randint(key, (2, 4, 16), 0, cfg.vocab_size)
+    return {"tokens": toks, "labels": (toks + 1) % cfg.vocab_size}
+
+
+def test_diloco_resume_bitwise():
+    cfg = tiny_cfg("dense")
+    m = build_model(cfg)
+    params, _ = init_params(cfg, jax.random.key(0))
+    tr = DiLoCoTrainer(m.loss, OPT, DiLoCoConfig(num_workers=2,
+                                                 h_inner_steps=3))
+    inner, outer = tr.jit_steps()
+
+    def run(state, lo, hi):
+        for s in range(lo, hi):
+            state, _, _ = inner(state, _data(cfg, s))
+            if (s + 1) % 3 == 0:
+                state = outer(state)
+        return state
+
+    # uninterrupted 12 steps
+    ref = run(tr.init(params), 0, 12)
+
+    # interrupted at step 6 with a checkpoint round-trip
+    mid = run(tr.init(params), 0, 6)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "state")
+        save_pytree(mid, path)
+        restored = load_pytree(mid, path)
+    resumed = run(restored, 6, 12)
+
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(resumed)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
