@@ -1,0 +1,21 @@
+# Developer / CI entry points.
+#
+#   make test-fast   fast tier-1 gate: skips @slow end-to-end tests, hard
+#                    timeout so a hung jit can never wedge a pre-merge check
+#   make test        the full suite (slow end-to-end tests included)
+#   make bench       all fast benchmarks (CSV to stdout)
+
+PY       := python
+PYTHONPATH := src
+TIMEOUT  := 420
+
+.PHONY: test-fast test bench
+
+test-fast:
+	PYTHONPATH=$(PYTHONPATH) timeout $(TIMEOUT) $(PY) -m pytest -q -m "not slow"
+
+test:
+	PYTHONPATH=$(PYTHONPATH) $(PY) -m pytest -q
+
+bench:
+	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.run

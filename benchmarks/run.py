@@ -9,6 +9,7 @@
 |                             | output of examples/pipeline_table1.py)      |
 | Fig 1-3 loss curves         | table1 (per-stage loss trajectories)        |
 | "~100x comm reduction"      | comm                                        |
+| per-strategy bytes + time   | strategies (event-driven comm simulator)    |
 | §4.3 drift hypothesis       | drift                                       |
 | TPU deployment (e,g)        | roofline (from the dry-run JSONs)           |
 | engine/step latencies       | micro                                       |
@@ -48,7 +49,8 @@ def bench_table1() -> None:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", type=str, default=None,
-                    help="comma list: micro,comm,roofline,table1,drift")
+                    help="comma list: micro,comm,strategies,roofline,"
+                         "table1,drift")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -61,6 +63,9 @@ def main() -> None:
     if want("comm"):
         from benchmarks import comm_volume
         comm_volume.main()
+    if want("strategies"):
+        from benchmarks import strategies_bench
+        strategies_bench.main()
     if want("roofline"):
         from benchmarks import roofline
         roofline.main(csv=True)

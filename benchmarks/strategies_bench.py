@@ -1,0 +1,66 @@
+"""Per-strategy communication benchmark: payload bytes AND modeled time.
+
+For each sync strategy (DDP / DiLoCo / Streaming / Overlapped) this emits
+the total boundary traffic over a fixed step budget plus the wall-clock the
+event-driven simulator (``repro.launch.comm_sim``) models for it on the
+production constants (inner step from the analytic roofline at 40% MFU,
+exchange over the ``DCN_BW`` inter-pod boundary).
+
+CSV rows: ``strategies/<arch>/<strategy>,0.0,<derived>`` with bytes,
+modeled wall-clock, exposed-comm stall, and speedup over DDP.
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.configs.base import DiLoCoConfig, TRAIN_4K
+from repro.core.sync import (DDPSync, DiLoCoSync, OverlappedSync,
+                             StreamingSync)
+from repro.launch.analytic import flops_per_device
+from repro.launch.comm_sim import (default_comm_model, modeled_step_time,
+                                   simulate_schedule)
+
+CHIPS_PER_WORKER = 256   # one pod per DiLoCo worker
+
+
+def rows_for(arch_id: str, steps: int = 500, h: int = 100,
+             delta_dtype: str = "float32"):
+    cfg = get_config(arch_id)
+    n = cfg.param_count()
+    dcfg = DiLoCoConfig(h_inner_steps=h, delta_dtype=delta_dtype)
+    step_time = modeled_step_time(
+        flops_per_device(cfg, TRAIN_4K, CHIPS_PER_WORKER)["total_flops"])
+    comm = default_comm_model()
+    strategies = [
+        DDPSync(),
+        DiLoCoSync(),
+        StreamingSync(num_fragments=dcfg.num_fragments),
+        OverlappedSync(delay=h // 2),
+    ]
+    out = []
+    ddp_wall = None
+    for strat in strategies:
+        events = strat.payload_schedule(n, steps, dcfg)
+        r = simulate_schedule(events, steps, step_time, comm)
+        r.update(arch=arch_id, strategy=strat.name, params=n,
+                 step_time_s=step_time)
+        if strat.name == "ddp":
+            ddp_wall = r["wall_clock_s"]
+        r["speedup_vs_ddp"] = ddp_wall / r["wall_clock_s"]
+        out.append(r)
+    return out
+
+
+def main(arch_id: str = "nanochat-d20", steps: int = 500) -> None:
+    print("name,us_per_call,derived")
+    for r in rows_for(arch_id, steps):
+        print(f"strategies/{r['arch']}/{r['strategy']},0.0,"
+              f"bytes={r['total_bytes']/1e9:.2f}GB "
+              f"wall={r['wall_clock_s']:.1f}s "
+              f"compute={r['compute_s']:.1f}s "
+              f"stall={r['stall_s']:.1f}s "
+              f"overhead={100 * r['overhead_frac']:.1f}% "
+              f"speedup_vs_ddp={r['speedup_vs_ddp']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

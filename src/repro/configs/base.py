@@ -177,6 +177,13 @@ class DiLoCoConfig:
     adaptive_h: bool = False          # adaptive H schedule (paper §5 future work)
     h_min: int = 10
     h_max: int = 200
+    # --- sync-strategy runtime (repro.core.sync / DistTrainer) -------------
+    strategy: str = "diloco"          # ddp | diloco | streaming | overlapped
+    num_fragments: int = 4            # streaming: F fragments, one per H/F slot
+    sync_delay: int = 0               # overlapped: steps between delta capture
+                                      # and outer-update application
+    h_jitter: int = 0                 # overlapped: max per-worker straggler
+                                      # jitter (inner steps) on delta capture
 
 
 @dataclass(frozen=True)

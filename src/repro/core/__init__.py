@@ -8,10 +8,16 @@ from repro.core.schedule import AdaptiveH, FixedH, StagedH
 from repro.core.grpo import GRPOTrainer, arith_reward_fn, grpo_loss
 from repro.core.streaming import (StreamingDiLoCoTrainer, fragment_masks,
                                   run_streaming_diloco)
+from repro.core.sync import (DDPSync, DiLoCoSync, OverlappedSync,
+                             StreamingSync, SyncEvent, SyncStrategy,
+                             make_strategy)
+from repro.core.dist_trainer import DistTrainer
 from repro.core import drift, outer_opt
 
 __all__ = ["DiLoCoTrainer", "DiLoCoState", "run_diloco", "DDPTrainer",
            "DDPState", "run_ddp", "FixedH", "StagedH", "AdaptiveH", "drift",
            "outer_opt", "GRPOTrainer", "grpo_loss", "arith_reward_fn",
            "StreamingDiLoCoTrainer", "fragment_masks",
-           "run_streaming_diloco"]
+           "run_streaming_diloco", "DistTrainer", "SyncStrategy", "SyncEvent",
+           "DDPSync", "DiLoCoSync", "StreamingSync", "OverlappedSync",
+           "make_strategy"]

@@ -47,14 +47,33 @@ class DDPTrainer:
 def run_ddp(trainer: DDPTrainer, state: DDPState, data_fn, num_steps: int,
             record_every: int = 1, eval_fn: Optional[Callable] = None,
             eval_every: int = 0) -> Tuple[DDPState, Dict]:
-    """data_fn(step) -> merged global batch (no worker dim)."""
-    step_jit = jax.jit(trainer.train_step)
-    history: Dict[str, list] = {"step": [], "loss": [], "evals": []}
-    for step in range(num_steps):
-        state, loss, _ = step_jit(state, data_fn(step))
-        if step % record_every == 0:
-            history["step"].append(step)
-            history["loss"].append(float(loss))
-        if eval_fn is not None and eval_every and (step + 1) % eval_every == 0:
-            history["evals"].append((step, eval_fn(state.params)))
-    return state, history
+    """data_fn(step) -> merged global batch (no worker dim).
+
+    Thin wrapper over the unified ``DistTrainer`` runtime: DDP is the K=1
+    strategy on the global batch, so the ``DDPState`` is lifted into the
+    stacked worker encoding, run under ``DDPSync``, and lowered back.
+    """
+    from repro.configs.base import DiLoCoConfig
+    from repro.core import outer_opt
+    from repro.core.diloco import DiLoCoState
+    from repro.core.dist_trainer import DistTrainer
+    from repro.core.sync import DDPSync
+
+    dcfg = DiLoCoConfig(num_workers=1, h_inner_steps=1, outer_lr=1.0,
+                        outer_momentum=0.0, nesterov=False, strategy="ddp")
+    dt = DistTrainer(trainer.loss_fn, trainer.opt_cfg, dcfg, DDPSync())
+    lifted = DiLoCoState(
+        global_params=state.params,
+        outer=outer_opt.init_outer_state(state.params),
+        worker_params=jax.tree.map(lambda x: x[None], state.params),
+        inner_opt=jax.tree.map(lambda x: jnp.asarray(x)[None], state.opt),
+        inner_step=state.step)
+    lifted, history = dt.run(
+        lifted, lambda s: jax.tree.map(lambda x: x[None], data_fn(s)),
+        num_steps, record_every=record_every, eval_fn=eval_fn,
+        eval_every=eval_every)
+    final = DDPState(
+        params=jax.tree.map(lambda x: x[0], lifted.worker_params),
+        opt=jax.tree.map(lambda x: x[0], lifted.inner_opt),
+        step=lifted.inner_step)
+    return final, history

@@ -121,7 +121,7 @@ class DiLoCoTrainer:
 
 
 # ---------------------------------------------------------------------------
-# Training loop (host-side control; the paper's "wrapper over the train loop")
+# Training loop — thin wrapper over the unified DistTrainer runtime
 # ---------------------------------------------------------------------------
 
 def run_diloco(trainer: DiLoCoTrainer, state: DiLoCoState, data_fn,
@@ -134,28 +134,9 @@ def run_diloco(trainer: DiLoCoTrainer, state: DiLoCoState, data_fn,
     ``h_schedule`` decides when to synchronize (defaults to fixed H from the
     config); supports the adaptive-H controller (paper §5 future work).
     """
-    from repro.core.schedule import FixedH
-    hs = h_schedule or FixedH(trainer.cfg.h_inner_steps)
-    inner_jit, outer_jit = trainer.jit_steps()
-    history: Dict[str, list] = {"step": [], "loss": [], "sync_steps": [],
-                                "evals": []}
-    since_sync = 0
-    for step in range(num_steps):
-        batch = data_fn(step)
-        state, loss, _ = inner_jit(state, batch)
-        since_sync += 1
-        loss_mean = float(jnp.mean(loss))
-        if step % record_every == 0:
-            history["step"].append(step)
-            history["loss"].append(loss_mean)
-        if hs.should_sync(step, since_sync, loss_mean):
-            state = outer_jit(state)
-            history["sync_steps"].append(step)
-            since_sync = 0
-        if eval_fn is not None and eval_every and (step + 1) % eval_every == 0:
-            history["evals"].append((step, eval_fn(state.global_params)))
-    # trailing sync so global_params reflect all work
-    if since_sync:
-        state = outer_jit(state)
-        history["sync_steps"].append(num_steps - 1)
-    return state, history
+    from repro.core.dist_trainer import DistTrainer
+    from repro.core.sync import DiLoCoSync
+    dt = DistTrainer(trainer.loss_fn, trainer.opt_cfg, trainer.cfg,
+                     DiLoCoSync(h_schedule=h_schedule), trainer.replicate_fn)
+    return dt.run(state, data_fn, num_steps, record_every=record_every,
+                  eval_fn=eval_fn, eval_every=eval_every)

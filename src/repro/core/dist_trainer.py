@@ -1,0 +1,87 @@
+"""The unified distributed-training loop.
+
+One loop runs every configuration the paper compares (and the ones it
+proposes as future work): the strategy object owns *when and what* to
+synchronize, the loop owns everything else — vmapped inner steps, loss
+recording, eval hooks, history.  ``run_ddp`` / ``run_diloco`` /
+``run_streaming_diloco`` remain as thin wrappers over this loop.
+
+    trainer = DistTrainer(model.loss, opt_cfg, dcfg, DiLoCoSync())
+    state = trainer.init(params)
+    state, hist = trainer.run(state, data_fn, num_steps)
+
+History keys: ``step`` / ``loss`` (every ``record_every``), ``sync_steps``
+(full outer exchanges), ``frag_syncs`` (``(step, fragment)`` pairs),
+``evals`` (``(step, eval_fn(global_params))`` pairs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DiLoCoConfig, OptimizerConfig
+from repro.core.diloco import DiLoCoState
+from repro.core.streaming import StreamingDiLoCoTrainer
+from repro.core.sync import SyncStrategy
+
+
+@dataclasses.dataclass(frozen=True)
+class DistTrainer:
+    """loss_fn(params, batch) -> (loss, metrics-dict); batches carry a
+    leading (K, ...) worker dim (K=1 for DDP with the global batch)."""
+    loss_fn: Callable
+    opt_cfg: OptimizerConfig
+    cfg: DiLoCoConfig
+    strategy: SyncStrategy
+    replicate_fn: Optional[Callable] = None
+
+    # The compute engine: StreamingDiLoCoTrainer is the most general
+    # DiLoCoTrainer (inner step + full outer step + fragment outer step);
+    # strategies pick which pieces they drive.
+    def engine(self) -> StreamingDiLoCoTrainer:
+        return StreamingDiLoCoTrainer(
+            self.loss_fn, self.opt_cfg, self.cfg, self.replicate_fn,
+            num_fragments=getattr(self.strategy, "num_fragments", 4))
+
+    def init(self, params) -> DiLoCoState:
+        return self.engine().init(params)
+
+    def run(self, state: DiLoCoState, data_fn, num_steps: int,
+            record_every: int = 1, eval_fn: Optional[Callable] = None,
+            eval_every: int = 0) -> Tuple[DiLoCoState, Dict]:
+        """data_fn(step) -> per-worker-stacked batch pytree."""
+        eng = self.engine()
+        runner = self.strategy.bind(eng, state.global_params)
+        inner_jit = jax.jit(eng.inner_step)
+        history: Dict[str, list] = {"step": [], "loss": [], "sync_steps": [],
+                                    "frag_syncs": [], "evals": []}
+
+        def record(recs):
+            for key, val in recs:
+                history[key].append(val)
+
+        for step in range(num_steps):
+            state, loss, _ = inner_jit(state, data_fn(step))
+            loss_mean = float(jnp.mean(loss))
+            if step % record_every == 0:
+                history["step"].append(step)
+                history["loss"].append(loss_mean)
+            state, recs = runner.after_step(state, step, loss_mean)
+            record(recs)
+            if eval_fn is not None and eval_every and (step + 1) % eval_every == 0:
+                state = runner.refresh(state)
+                history["evals"].append((step, eval_fn(state.global_params)))
+        state, recs = runner.finalize(state, num_steps)
+        record(recs)
+        return state, history
+
+    # -- communication accounting -------------------------------------------
+    def payload_schedule(self, params, num_steps: int) -> list:
+        """The strategy's payload footprint for ``num_steps`` inner steps —
+        feed to ``repro.launch.comm_sim.simulate_schedule`` for modeled
+        wall-clock."""
+        n = sum(int(x.size) for x in jax.tree.leaves(params))
+        return self.strategy.payload_schedule(n, num_steps, self.cfg)

@@ -27,6 +27,10 @@ import jax.numpy as jnp
 
 from repro.configs.base import DiLoCoConfig
 
+# wire width (bytes/element) of each supported delta payload dtype — shared
+# by the trainers' byte accounting and the strategies' payload schedules
+DELTA_WIDTH = {"float32": 4, "bfloat16": 2, "int8": 1}
+
 
 class OuterState(NamedTuple):
     v: Any          # momentum pytree (same structure as params)

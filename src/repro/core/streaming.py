@@ -105,20 +105,11 @@ def run_streaming_diloco(trainer: StreamingDiLoCoTrainer, state, data_fn,
                          num_steps: int, record_every: int = 1
                          ) -> Tuple[Any, Dict]:
     """Inner steps with a staggered fragment-sync schedule: fragment
-    (t / (H/F)) mod F syncs every H/F steps."""
-    params_like = state.global_params
-    masks = fragment_masks(params_like, trainer.num_fragments)
-    inner_jit = jax.jit(trainer.inner_step)
-    frag_jit = jax.jit(trainer.outer_step_fragment)
-    period = trainer.fragment_schedule()
-    history: Dict[str, list] = {"step": [], "loss": [], "frag_syncs": []}
-    for step in range(num_steps):
-        state, loss, _ = inner_jit(state, data_fn(step))
-        if step % record_every == 0:
-            history["step"].append(step)
-            history["loss"].append(float(jnp.mean(loss)))
-        if (step + 1) % period == 0:
-            f = ((step + 1) // period - 1) % trainer.num_fragments
-            state = frag_jit(state, masks[f])
-            history["frag_syncs"].append((step, f))
-    return state, history
+    (t / (H/F)) mod F syncs every H/F steps.  Thin wrapper over the
+    unified ``DistTrainer`` runtime."""
+    from repro.core.dist_trainer import DistTrainer
+    from repro.core.sync import StreamingSync
+    dt = DistTrainer(trainer.loss_fn, trainer.opt_cfg, trainer.cfg,
+                     StreamingSync(num_fragments=trainer.num_fragments),
+                     trainer.replicate_fn)
+    return dt.run(state, data_fn, num_steps, record_every=record_every)

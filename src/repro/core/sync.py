@@ -1,0 +1,350 @@
+"""Pluggable synchronization strategies for the unified ``DistTrainer`` loop.
+
+The paper frames DiLoCo as a lightweight wrapper over nanochat's training
+loop; this module makes that literal.  One host-side loop (``DistTrainer``
+in ``repro.core.dist_trainer``) drives vmapped inner steps, and a
+``SyncStrategy`` decides everything cross-worker:
+
+* ``DDPSync``        — synchronize every step (K=1 + the global batch, the
+                       paper's "Standard DDP" baseline),
+* ``DiLoCoSync``     — full delta exchange every H steps (paper §2.2),
+                       pluggable H schedule incl. ``AdaptiveH``,
+* ``StreamingSync``  — fragment-wise staggered exchange every H/F steps
+                       (Streaming DiLoCo, arXiv:2501.18512),
+* ``OverlappedSync`` — Streaming DiLoCo's "overlapping communication":
+                       the delta is captured at step *t* but the outer
+                       update lands at *t+delay*, hiding the exchange
+                       behind inner compute; per-worker H jitter emulates
+                       asynchronous / straggler workers (the delta of a
+                       straggler reflects fewer inner steps).
+
+A strategy has two faces:
+
+1. ``bind(engine, params) -> SyncRunner`` — a per-run state machine the
+   training loop calls after every inner step;
+2. ``payload_schedule(n_params, num_steps, cfg) -> [SyncEvent]`` — the pure
+   communication footprint, consumed by the event-driven wall-clock
+   simulator in ``repro.launch.comm_sim``.
+
+Adding a new sync variant means implementing those two methods (~50 lines),
+not writing a new training loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random as _pyrandom
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DiLoCoConfig
+from repro.core import outer_opt
+from repro.core.outer_opt import DELTA_WIDTH
+from repro.core.schedule import FixedH, HSchedule
+
+# history records a runner can emit: (history_key, value) pairs
+Records = List[Tuple[str, Any]]
+
+
+@dataclasses.dataclass(frozen=True)
+class SyncEvent:
+    """One cross-worker payload on the slow (inter-pod) boundary.
+
+    ``step`` is the inner step after which the payload leaves the worker;
+    ``apply_step`` is the step by which the result must have landed (equal
+    to ``step`` for blocking strategies, later for overlapped ones — the
+    gap is the window the transfer may hide behind compute).
+    """
+    step: int
+    bytes_per_worker: int
+    kind: str                   # "grads" | "delta" | "fragment"
+    apply_step: int
+    fragment: int = -1
+
+
+class SyncRunner:
+    """Per-run host-side state machine created by ``SyncStrategy.bind``."""
+
+    def after_step(self, state, step: int, loss: float):
+        """Called after every inner step; returns (state, records)."""
+        return state, []
+
+    def refresh(self, state):
+        """Bring ``global_params`` up to date for an observer (eval hook);
+        identity for strategies that maintain it on every sync."""
+        return state
+
+    def finalize(self, state, num_steps: int):
+        """Called once after the last step; returns (state, records)."""
+        return state, []
+
+
+class SyncStrategy:
+    name = "base"
+
+    def bind(self, engine, params) -> SyncRunner:
+        raise NotImplementedError
+
+    def payload_schedule(self, n_params: int, num_steps: int,
+                         cfg: DiLoCoConfig) -> List[SyncEvent]:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# DDP — synchronize every step
+# ---------------------------------------------------------------------------
+
+class _DDPRunner(SyncRunner):
+    def after_step(self, state, step, loss):
+        # K=1 + global batch: the worker IS the global model, synchronized
+        # by construction — nothing to exchange, just record the cadence.
+        return state, [("sync_steps", step)]
+
+    def refresh(self, state):
+        gp = jax.tree.map(lambda w: w[0], state.worker_params)
+        return state._replace(global_params=gp)
+
+    def finalize(self, state, num_steps):
+        return self.refresh(state), []
+
+
+@dataclasses.dataclass(frozen=True)
+class DDPSync(SyncStrategy):
+    """Fully synchronous baseline: fp32 gradient all-reduce every step."""
+    name = "ddp"
+
+    def bind(self, engine, params) -> SyncRunner:
+        if engine.cfg.num_workers != 1:
+            raise ValueError(
+                "DDPSync is the K=1 + global-batch baseline; "
+                f"got num_workers={engine.cfg.num_workers}.  Use DiLoCoSync "
+                "with H=1 for per-step delta averaging across workers.")
+        return _DDPRunner()
+
+    def payload_schedule(self, n_params, num_steps, cfg):
+        b = 4 * n_params  # fp32 grads, every step, blocking
+        return [SyncEvent(step=s, bytes_per_worker=b, kind="grads",
+                          apply_step=s) for s in range(num_steps)]
+
+
+# ---------------------------------------------------------------------------
+# DiLoCo — full delta exchange every H steps
+# ---------------------------------------------------------------------------
+
+class _DiLoCoRunner(SyncRunner):
+    def __init__(self, engine, hs: HSchedule):
+        self.hs = hs
+        self.since = 0
+        self._outer = jax.jit(engine.outer_step)
+
+    def after_step(self, state, step, loss):
+        self.since += 1
+        if self.hs.should_sync(step, self.since, loss):
+            self.since = 0
+            return self._outer(state), [("sync_steps", step)]
+        return state, []
+
+    def finalize(self, state, num_steps):
+        if self.since:  # trailing sync so global_params reflect all work
+            return self._outer(state), [("sync_steps", num_steps - 1)]
+        return state, []
+
+
+@dataclasses.dataclass(frozen=True)
+class DiLoCoSync(SyncStrategy):
+    """Paper §2.2: average parameter deltas + outer Nesterov SGD every H.
+
+    ``h`` overrides the config's ``h_inner_steps``; ``h_schedule`` plugs in
+    any ``HSchedule`` (e.g. ``AdaptiveH``) instead of fixed H.
+    """
+    name = "diloco"
+    h: Optional[int] = None
+    h_schedule: Optional[HSchedule] = None
+
+    def bind(self, engine, params) -> SyncRunner:
+        hs = self.h_schedule or FixedH(self.h or engine.cfg.h_inner_steps)
+        return _DiLoCoRunner(engine, hs)
+
+    def payload_schedule(self, n_params, num_steps, cfg):
+        h = self.h or cfg.h_inner_steps
+        b = DELTA_WIDTH[cfg.delta_dtype] * n_params
+        return [SyncEvent(step=s, bytes_per_worker=b, kind="delta",
+                          apply_step=s)
+                for s in range(h - 1, num_steps, h)]
+
+
+# ---------------------------------------------------------------------------
+# Streaming DiLoCo — one fragment every H/F steps, staggered
+# ---------------------------------------------------------------------------
+
+class _StreamingRunner(SyncRunner):
+    def __init__(self, engine, params):
+        from repro.core.streaming import fragment_masks
+        self.F = engine.num_fragments
+        self.masks = fragment_masks(params, self.F)
+        self.period = engine.fragment_schedule()
+        self._frag = jax.jit(engine.outer_step_fragment)
+
+    def after_step(self, state, step, loss):
+        if (step + 1) % self.period == 0:
+            f = ((step + 1) // self.period - 1) % self.F
+            return self._frag(state, self.masks[f]), [("frag_syncs", (step, f))]
+        return state, []
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamingSync(SyncStrategy):
+    """Fragment-wise staggered sync (arXiv:2501.18512): every parameter
+    still syncs each H, but instantaneous bandwidth demand drops F×."""
+    name = "streaming"
+    num_fragments: int = 4
+
+    def bind(self, engine, params) -> SyncRunner:
+        return _StreamingRunner(engine, params)
+
+    def payload_schedule(self, n_params, num_steps, cfg):
+        h = cfg.h_inner_steps
+        period = max(h // self.num_fragments, 1)
+        b = DELTA_WIDTH[cfg.delta_dtype] * (n_params // self.num_fragments)
+        return [SyncEvent(step=s, bytes_per_worker=b, kind="fragment",
+                          # a fragment may stream until its next slot
+                          apply_step=s + period - 1,
+                          fragment=((s + 1) // period - 1) % self.num_fragments)
+                for s in range(period - 1, num_steps, period)]
+
+
+# ---------------------------------------------------------------------------
+# Overlapped DiLoCo — delta captured at t, outer update applied at t+delay
+# ---------------------------------------------------------------------------
+
+class _OverlappedRunner(SyncRunner):
+    """Captures per-worker delta snapshots (with straggler jitter) at each
+    round boundary and applies the outer update ``delay`` steps later.
+    Inner progress made during the communication window is carried forward:
+    at apply time worker i becomes  new_global + (w_now_i − snap_i).
+    With delay=0 and jitter=0 this is exactly ``DiLoCoSync``."""
+
+    def __init__(self, engine, h: int, delay: int, jitter: int, seed: int):
+        if not 0 <= delay < h:
+            raise ValueError(f"need 0 <= delay < h, got delay={delay} h={h}")
+        if jitter < 0 or jitter + delay >= h:
+            raise ValueError(
+                f"need jitter + delay < h so every snapshot lands after the "
+                f"previous apply, got jitter={jitter} delay={delay} h={h}")
+        self.engine = engine
+        self.h, self.delay, self.jitter = h, delay, jitter
+        self.k = engine.cfg.num_workers
+        self.rng = _pyrandom.Random(seed)
+        self.round_end = h - 1
+        self.snap_steps = self._draw_snap_steps()
+        self.buf = None                 # snapshot buffer being filled
+        self.pending = None             # frozen snapshot awaiting apply
+        self.pending_apply = -1
+        self._snap_row = jax.jit(
+            lambda buf, wp, i: jax.tree.map(
+                lambda b, w: b.at[i].set(w[i]), buf, wp))
+        self._apply = jax.jit(self._apply_impl)
+        self._outer = jax.jit(engine.outer_step)
+
+    def _draw_snap_steps(self) -> Dict[int, int]:
+        """Worker i's delta leaves jitter_i steps before the boundary — a
+        straggler's contribution reflects fewer inner steps."""
+        return {i: self.round_end
+                - (self.rng.randint(0, self.jitter) if self.jitter else 0)
+                for i in range(self.k)}
+
+    def _apply_impl(self, state, snap):
+        cfg = self.engine.cfg
+        delta = jax.tree.map(
+            lambda s, g: s.astype(jnp.float32) - g.astype(jnp.float32)[None],
+            snap, state.global_params)
+        avg = outer_opt.average_deltas(delta, cfg, self.engine.replicate_fn)
+        new_global, new_outer = outer_opt.outer_update(
+            state.global_params, avg, state.outer, cfg)
+        # carry forward the inner progress made while the exchange was in
+        # flight: worker = synced base + (current − snapshot)
+        new_wp = jax.tree.map(
+            lambda w, s, ng: (ng.astype(jnp.float32)[None]
+                              + (w.astype(jnp.float32) - s.astype(jnp.float32))
+                              ).astype(w.dtype),
+            state.worker_params, snap, new_global)
+        return state._replace(global_params=new_global,
+                              worker_params=new_wp, outer=new_outer)
+
+    def after_step(self, state, step, loss):
+        records: Records = []
+        due = [i for i, s in self.snap_steps.items() if s == step]
+        if due:
+            if self.buf is None:
+                self.buf = state.worker_params
+            for i in due:
+                self.buf = self._snap_row(self.buf, state.worker_params,
+                                          jnp.int32(i))
+        if step == self.round_end:
+            self.pending = (self.buf if self.buf is not None
+                            else state.worker_params)
+            self.pending_apply = step + self.delay
+            self.buf = None
+            self.round_end += self.h
+            self.snap_steps = self._draw_snap_steps()
+        if self.pending is not None and step >= self.pending_apply:
+            state = self._apply(state, self.pending)
+            self.pending = None
+            records.append(("sync_steps", step))
+        return state, records
+
+    def finalize(self, state, num_steps):
+        records: Records = []
+        if self.pending is not None:  # flush the in-flight round
+            state = self._apply(state, self.pending)
+            self.pending = None
+            records.append(("sync_steps", num_steps - 1))
+        if num_steps % self.h:        # trailing partial round: full sync
+            state = self._outer(state)
+            records.append(("sync_steps", num_steps - 1))
+        return state, records
+
+
+@dataclasses.dataclass(frozen=True)
+class OverlappedSync(SyncStrategy):
+    """Streaming DiLoCo's overlapping communication for the *full* delta:
+    capture at t, apply at t+delay, with per-worker straggler jitter."""
+    name = "overlapped"
+    h: Optional[int] = None
+    delay: int = 0
+    jitter: int = 0
+    seed: int = 0
+
+    def bind(self, engine, params) -> SyncRunner:
+        h = self.h or engine.cfg.h_inner_steps
+        return _OverlappedRunner(engine, h, self.delay, self.jitter, self.seed)
+
+    def payload_schedule(self, n_params, num_steps, cfg):
+        h = self.h or cfg.h_inner_steps
+        b = DELTA_WIDTH[cfg.delta_dtype] * n_params
+        return [SyncEvent(step=s, bytes_per_worker=b, kind="delta",
+                          apply_step=s + self.delay)
+                for s in range(h - 1, num_steps, h)]
+
+
+# ---------------------------------------------------------------------------
+# Config-driven construction
+# ---------------------------------------------------------------------------
+
+STRATEGIES = ("ddp", "diloco", "streaming", "overlapped")
+
+
+def make_strategy(cfg: DiLoCoConfig, h_schedule: Optional[HSchedule] = None
+                  ) -> SyncStrategy:
+    """Build the strategy the ``DiLoCoConfig`` knobs describe."""
+    if cfg.strategy == "ddp":
+        return DDPSync()
+    if cfg.strategy == "diloco":
+        return DiLoCoSync(h_schedule=h_schedule)
+    if cfg.strategy == "streaming":
+        return StreamingSync(num_fragments=cfg.num_fragments)
+    if cfg.strategy == "overlapped":
+        return OverlappedSync(delay=cfg.sync_delay, jitter=cfg.h_jitter)
+    raise ValueError(f"unknown strategy {cfg.strategy!r}; "
+                     f"expected one of {STRATEGIES}")

@@ -1,5 +1,9 @@
-from repro.launch.mesh import (HBM_BW, HBM_PER_CHIP, ICI_BW, PEAK_FLOPS_BF16,
-                               make_host_mesh, make_production_mesh)
+from repro.launch.mesh import (DCN_BW, HBM_BW, HBM_PER_CHIP, ICI_BW,
+                               PEAK_FLOPS_BF16, make_host_mesh,
+                               make_production_mesh)
+from repro.launch.comm_sim import (CommModel, default_comm_model,
+                                   modeled_step_time, simulate_schedule)
 
 __all__ = ["make_production_mesh", "make_host_mesh", "PEAK_FLOPS_BF16",
-           "HBM_BW", "ICI_BW", "HBM_PER_CHIP"]
+           "HBM_BW", "ICI_BW", "DCN_BW", "HBM_PER_CHIP", "CommModel",
+           "simulate_schedule", "modeled_step_time", "default_comm_model"]

@@ -1,0 +1,102 @@
+"""Event-driven communication simulator: payload schedules -> modeled time.
+
+Converts a ``SyncStrategy.payload_schedule`` (what crosses the slow
+inter-pod boundary, and when) into modeled wall-clock, so strategies can be
+compared on *time*, not just bytes.  The model is deliberately simple and
+fully documented:
+
+* compute: every inner step costs ``step_time_s`` (derive it from the
+  analytic roofline via ``modeled_step_time``);
+* communication: each worker ships its payload over its own boundary link
+  (``CommModel.bandwidth`` bytes/s, plus a fixed per-transfer ``latency``).
+  Transfers on one link serialize; workers are symmetric, so one link is
+  simulated;
+* blocking: a transfer whose ``apply_step`` equals its emit step stalls the
+  loop immediately (DDP's per-step all-reduce, DiLoCo's outer step); a
+  later ``apply_step`` gives the transfer a window of inner compute to hide
+  behind (Streaming / Overlapped DiLoCo) — the loop stalls only for the
+  portion that does not fit.
+
+Bandwidth constants for the production fleet live in ``repro.launch.mesh``
+(``ICI_BW`` intra-pod, ``DCN_BW`` the inter-pod boundary DiLoCo targets).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List
+
+from repro.launch.mesh import DCN_BW, PEAK_FLOPS_BF16
+
+
+@dataclasses.dataclass(frozen=True)
+class CommModel:
+    bandwidth: float            # bytes/s per worker across the boundary
+    latency: float = 1e-3       # per-transfer fixed cost (s); DCN-ish default
+
+
+def transfer_time(nbytes: int, comm: CommModel) -> float:
+    return comm.latency + nbytes / comm.bandwidth
+
+
+def simulate_schedule(events: Iterable, num_steps: int, step_time_s: float,
+                      comm: CommModel) -> Dict[str, float]:
+    """Walk the step timeline, overlaying transfers on the boundary link.
+
+    ``events`` are ``repro.core.sync.SyncEvent``s sorted by ``step`` (the
+    strategies emit them sorted).  Returns wall-clock plus a breakdown:
+    ``comm_s`` is total link-busy time, ``stall_s`` the part of it the
+    compute timeline actually had to wait for (exposed communication).
+    """
+    by_step: Dict[int, List] = {}
+    total_bytes = 0
+    for ev in events:
+        by_step.setdefault(ev.step, []).append(ev)
+        total_bytes += ev.bytes_per_worker
+
+    now = 0.0            # compute-timeline clock
+    link_free = 0.0      # when the boundary link next idles
+    comm_s = 0.0
+    stall_s = 0.0
+    in_flight: List = []  # (done_time, apply_step)
+
+    for step in range(num_steps):
+        now += step_time_s
+        for ev in by_step.get(step, ()):
+            start = max(now, link_free)
+            done = start + transfer_time(ev.bytes_per_worker, comm)
+            comm_s += done - start
+            link_free = done
+            in_flight.append((done, ev.apply_step))
+        # block on every transfer whose result is due by this step
+        still = []
+        for done, apply_step in in_flight:
+            if apply_step <= step:
+                if done > now:
+                    stall_s += done - now
+                    now = done
+            else:
+                still.append((done, apply_step))
+        in_flight = still
+
+    # results still in flight at the end must land before training finishes
+    for done, _ in in_flight:
+        if done > now:
+            stall_s += done - now
+            now = done
+
+    compute_s = num_steps * step_time_s
+    return {"wall_clock_s": now, "compute_s": compute_s, "comm_s": comm_s,
+            "stall_s": stall_s, "total_bytes": float(total_bytes),
+            "overhead_frac": (now - compute_s) / max(now, 1e-12)}
+
+
+def modeled_step_time(total_flops_per_device: float, mfu: float = 0.4,
+                      peak_flops: float = PEAK_FLOPS_BF16) -> float:
+    """Inner-step seconds from the analytic per-device FLOPs (see
+    ``repro.launch.analytic.flops_per_device``) at an assumed MFU."""
+    return total_flops_per_device / (peak_flops * mfu)
+
+
+def default_comm_model() -> CommModel:
+    """The slow inter-pod boundary the paper's DiLoCo targets."""
+    return CommModel(bandwidth=DCN_BW)

@@ -11,7 +11,18 @@ state (the dry-run launcher must set XLA_FLAGS before first jax init).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5 exposes explicit mesh axis types
+    from jax.sharding import AxisType
+except ImportError:  # older jax (e.g. 0.4.37): meshes are Auto by default
+    AxisType = None
+
+
+def _make_mesh(shape, axes):
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False, num_pods: int = 2):
@@ -20,15 +31,13 @@ def make_production_mesh(*, multi_pod: bool = False, num_pods: int = 2):
     (one worker per pod) reuse the same axes."""
     shape = (num_pods, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Tiny mesh over however many (possibly fake) local devices exist —
     used by tests."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return _make_mesh((data, model), ("data", "model"))
 
 
 # Hardware constants for the roofline (TPU v5e-class chip).

@@ -3,9 +3,11 @@
 Runs the three-stage nanochat pipeline (base pretrain -> dialogue mid-train
 -> SFT) under any of the three configurations the paper compares:
 
-  --method ddp      fully synchronous baseline
-  --method diloco   DiLoCo wrapper (H, mu, eta from the paper)
-  --method hybrid   DiLoCo base, DDP mid+SFT (checkpoint hand-off)
+  --method ddp         fully synchronous baseline
+  --method diloco      DiLoCo wrapper (H, mu, eta from the paper)
+  --method streaming   Streaming DiLoCo (fragment-wise staggered sync)
+  --method overlapped  delayed outer application + straggler jitter
+  --method hybrid      DiLoCo base, DDP mid+SFT (checkpoint hand-off)
 
 On this CPU container the model is a reduced nanochat-style config and the
 corpora are synthetic (see repro.data.synthetic); on a TPU fleet the same
@@ -69,33 +71,40 @@ def run_stage(method: str, model, params, stage_ds, *, steps: int,
               workers: int, per_worker_batch: int, h: int,
               opt_cfg, diloco_cfg, seed: int = 0,
               h_schedule=None):
-    """Run one pipeline stage; returns (final params, history)."""
+    """Run one pipeline stage under any sync strategy; returns
+    (final params, history).  All methods go through the unified
+    ``DistTrainer`` runtime — ``method`` picks the ``SyncStrategy``."""
+    import dataclasses
     import jax.numpy as jnp
-    from repro.core import DDPTrainer, DiLoCoTrainer, run_ddp, run_diloco
+    from repro.core import DistTrainer, make_strategy
 
     if method == "ddp":
-        trainer = DDPTrainer(model.loss, opt_cfg)
-        state = trainer.init(params)
+        dcfg = dataclasses.replace(diloco_cfg, num_workers=1,
+                                   h_inner_steps=1, outer_lr=1.0,
+                                   outer_momentum=0.0, nesterov=False,
+                                   strategy="ddp")
 
         def data(step):
             b = stage_ds.batch(step, workers * per_worker_batch, seed=seed)
+            return {k: jnp.asarray(v)[None] for k, v in b.items()}
+    else:
+        # clamp the overlap knobs to the stage's H (stage budgets can shrink
+        # H below a globally-configured delay/jitter)
+        delay = min(diloco_cfg.sync_delay, h - 1)
+        jitter = min(diloco_cfg.h_jitter, h - 1 - delay)
+        dcfg = dataclasses.replace(diloco_cfg, num_workers=workers,
+                                   h_inner_steps=h, strategy=method,
+                                   sync_delay=delay, h_jitter=jitter)
+
+        def data(step):
+            b = stage_ds.worker_batches(step, workers, per_worker_batch,
+                                        seed=seed)
             return {k: jnp.asarray(v) for k, v in b.items()}
 
-        state, hist = run_ddp(trainer, state, data, steps)
-        return state.params, hist
-
-    dcfg = diloco_cfg
-    import dataclasses
-    dcfg = dataclasses.replace(dcfg, num_workers=workers, h_inner_steps=h)
-    trainer = DiLoCoTrainer(model.loss, opt_cfg, dcfg)
+    trainer = DistTrainer(model.loss, opt_cfg, dcfg,
+                          make_strategy(dcfg, h_schedule=h_schedule))
     state = trainer.init(params)
-
-    def data(step):
-        b = stage_ds.worker_batches(step, workers, per_worker_batch, seed=seed)
-        return {k: jnp.asarray(v) for k, v in b.items()}
-
-    state, hist = run_diloco(trainer, state, data, steps,
-                             h_schedule=h_schedule)
+    state, hist = trainer.run(state, data, steps)
     return state.global_params, hist
 
 
@@ -104,6 +113,8 @@ def run_pipeline(method: str = "diloco", arch: str = "tiny",
                  workers: int = 4, per_worker_batch: int = 8,
                  seq_len: int = 128, adaptive_h: bool = False,
                  delta_dtype: str = "float32", drift_aware: bool = False,
+                 sync_delay: int = 0, h_jitter: int = 0,
+                 num_fragments: int = 4,
                  seed: int = 0, out_dir: Optional[str] = None,
                  eval_after_each_stage: bool = True) -> Dict:
     """The full three-stage pipeline under one method.  Returns metrics."""
@@ -123,7 +134,8 @@ def run_pipeline(method: str = "diloco", arch: str = "tiny",
                               schedule="wsd", learning_rate=0.02,
                               adam_lr=1e-3)
     dcfg = DiLoCoConfig(num_workers=workers, delta_dtype=delta_dtype,
-                        drift_aware=drift_aware)
+                        drift_aware=drift_aware, sync_delay=sync_delay,
+                        h_jitter=h_jitter, num_fragments=num_fragments)
 
     # paper §3: H=100 base, H=30 mid/SFT (scaled to our step budget: the
     # ratio sync-count/steps matches — base gets ~3 syncs, mid/sft ~4 each)
@@ -167,7 +179,9 @@ def run_pipeline(method: str = "diloco", arch: str = "tiny",
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--method", choices=["ddp", "diloco", "hybrid"],
+    ap.add_argument("--method",
+                    choices=["ddp", "diloco", "streaming", "overlapped",
+                             "hybrid"],
                     default="diloco")
     ap.add_argument("--arch", type=str, default="tiny")
     ap.add_argument("--reduced", action="store_true", default=True)
@@ -176,6 +190,12 @@ def main(argv=None):
     ap.add_argument("--adaptive-h", action="store_true")
     ap.add_argument("--delta-dtype", default="float32")
     ap.add_argument("--drift-aware", action="store_true")
+    ap.add_argument("--sync-delay", type=int, default=0,
+                    help="overlapped: steps between delta capture and apply")
+    ap.add_argument("--h-jitter", type=int, default=0,
+                    help="overlapped: max per-worker straggler jitter")
+    ap.add_argument("--fragments", type=int, default=4,
+                    help="streaming: number of fragments F")
     ap.add_argument("--out-dir", type=str, default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -184,6 +204,8 @@ def main(argv=None):
                         "sft": args.steps // 2},
                  workers=args.workers, adaptive_h=args.adaptive_h,
                  delta_dtype=args.delta_dtype, drift_aware=args.drift_aware,
+                 sync_delay=args.sync_delay, h_jitter=args.h_jitter,
+                 num_fragments=args.fragments,
                  seed=args.seed, out_dir=args.out_dir)
 
 

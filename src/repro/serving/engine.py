@@ -47,8 +47,8 @@ class Engine:
                                static_argnames=("max_new", "greedy"))
 
     # -- core scan ------------------------------------------------------------
-    def _generate_scan(self, params, tokens, lens, key, *, max_new: int,
-                       greedy: bool, temperature: float = 1.0):
+    def _generate_scan(self, params, tokens, lens, key, temperature, *,
+                       max_new: int, greedy: bool):
         B, Tp = tokens.shape
         cache = self.model.init_cache(B, Tp + max_new)
 
@@ -87,8 +87,9 @@ class Engine:
         pad = self.tok.pad if self.tok else 0
         tokens, lens = _left_pad(prompts, pad)
         out = self._gen_fn(self.params, jnp.asarray(tokens), jnp.asarray(lens),
-                           jax.random.key(seed), max_new=max_new,
-                           greedy=greedy)
+                           jax.random.key(seed),
+                           jnp.asarray(temperature, jnp.float32),
+                           max_new=max_new, greedy=greedy)
         return np.asarray(out)
 
     def chat(self, prompts: List[str], max_new: int = 32,

@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs import ALL_IDS, get_config, get_reduced
+
+pytestmark = pytest.mark.slow  # one fwd+train step per architecture: ~100s
 from repro.configs.base import OptimizerConfig
 from repro.models.transformer import build_model, init_params
 from repro.optim import apply_updates, nanochat_optimizer

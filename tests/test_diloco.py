@@ -139,6 +139,7 @@ def test_run_diloco_converges_and_syncs():
     assert hist["loss"][-1] < hist["loss"][0]
 
 
+@pytest.mark.slow
 def test_hybrid_handoff_ddp_continues():
     """DiLoCo-pretrained global params must be a valid DDP starting point
     (the paper's Hybrid configuration)."""

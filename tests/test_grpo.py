@@ -3,6 +3,7 @@ must increase the probability of rewarded completions."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from helpers import tiny_cfg
 from repro.configs.base import OptimizerConfig
@@ -25,6 +26,7 @@ def test_grpo_loss_sign():
     assert abs(float(loss) + float(met["mean_logprob"])) < 1e-5
 
 
+@pytest.mark.slow
 def test_grpo_increases_reward_probability():
     """Reward completions whose FIRST token is a fixed target id; a few GRPO
     iterations must raise the probability of that token."""

@@ -145,6 +145,7 @@ def test_per_layer_window_pattern():
     assert float(jnp.max(jnp.abs(la - lw))) > 1e-4  # must differ
 
 
+@pytest.mark.slow
 def test_chunked_ce_matches_full():
     """cfg.loss_chunk must not change the loss value or its gradients."""
     from repro.models.transformer import lm_loss

@@ -1,8 +1,16 @@
-"""Property-based tests (hypothesis) on system invariants."""
+"""Property-based tests (hypothesis) on system invariants.
+
+``hypothesis`` is an optional test dependency (declared in pyproject.toml's
+``test`` extra); when absent the whole module degrades to a skip instead of
+breaking collection for the rest of the suite.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.outer_opt import dequantize_delta, quantize_delta
 from repro.configs.base import DiLoCoConfig

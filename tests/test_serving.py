@@ -57,3 +57,18 @@ def test_sampling_temperature_changes_output():
     a = eng.generate_ids([[1, 2, 3]], max_new=8, greedy=False, seed=0)
     b = eng.generate_ids([[1, 2, 3]], max_new=8, greedy=False, seed=1)
     assert not np.array_equal(a, b)
+
+
+def test_temperature_is_forwarded_to_sampler():
+    """temperature must actually reach the jitted sampler: near-zero
+    temperature collapses sampling onto greedy argmax, and a hot sample
+    (same PRNG seed) must differ from the cold one."""
+    cfg, eng = _engine()
+    prompt = [[1, 2, 3]]
+    greedy = eng.generate_ids(prompt, max_new=8)
+    cold = eng.generate_ids(prompt, max_new=8, greedy=False,
+                            temperature=1e-4, seed=0)
+    np.testing.assert_array_equal(cold, greedy)
+    hot = eng.generate_ids(prompt, max_new=8, greedy=False,
+                           temperature=5.0, seed=0)
+    assert not np.array_equal(hot, cold)

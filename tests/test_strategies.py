@@ -1,0 +1,215 @@
+"""Unified SyncStrategy runtime: strategy equivalences + comm simulator."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from helpers import tiny_cfg
+from repro.configs.base import DiLoCoConfig, OptimizerConfig
+from repro.core import (DDPSync, DiLoCoSync, DistTrainer, OverlappedSync,
+                        StreamingSync, make_strategy)
+from repro.core.sync import SyncEvent
+from repro.launch.comm_sim import (CommModel, modeled_step_time,
+                                   simulate_schedule)
+from repro.models.transformer import build_model, init_params
+
+OPT = OptimizerConfig(total_steps=100, warmup_steps=0, schedule="constant",
+                      learning_rate=0.02, adam_lr=1e-3)
+
+
+def _setup(k=2, h=4, **dkw):
+    cfg = tiny_cfg("dense")
+    m = build_model(cfg)
+    params, _ = init_params(cfg, jax.random.key(0))
+    dcfg = DiLoCoConfig(num_workers=k, h_inner_steps=h, **dkw)
+    return cfg, m, params, dcfg
+
+
+def _data(cfg, k, step, B=4, S=16):
+    key = jax.random.key(1000 + step)
+    toks = jax.random.randint(key, (k, B, S), 0, cfg.vocab_size)
+    return {"tokens": toks, "labels": (toks + 1) % cfg.vocab_size}
+
+
+def _run(m, params, dcfg, strategy, cfg, steps, k):
+    dt = DistTrainer(m.loss, OPT, dcfg, strategy)
+    state = dt.init(params)
+    return dt.run(state, lambda s: _data(cfg, k, s), steps)
+
+
+def _assert_tree_close(a, b, atol=0.0):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=atol,
+                                   rtol=0)
+
+
+# ---------------------------------------------------------------------------
+# Equivalences
+# ---------------------------------------------------------------------------
+
+def test_diloco_k1_h1_lr1_mu0_matches_ddp():
+    """DiLoCoSync degenerates to DDPSync when the outer step is the
+    identity hand-off: K=1, H=1, eta=1, mu=0."""
+    cfg, m, params, _ = _setup()
+    dcfg = DiLoCoConfig(num_workers=1, h_inner_steps=1, outer_lr=1.0,
+                        outer_momentum=0.0, nesterov=False)
+    ddp_state, ddp_hist = _run(m, params, dcfg, DDPSync(), cfg, 6, k=1)
+    dlc_state, dlc_hist = _run(m, params, dcfg, DiLoCoSync(), cfg, 6, k=1)
+    # eta*(theta_w - theta_g) addition round-trips through f32 arithmetic
+    _assert_tree_close(ddp_state.global_params, dlc_state.global_params,
+                       atol=1e-6)
+    np.testing.assert_allclose(ddp_hist["loss"], dlc_hist["loss"], rtol=1e-6)
+
+
+def test_overlapped_delay0_matches_diloco_exactly():
+    """With delay=0 and jitter=0 the overlapped runner applies the outer
+    update at the boundary from the boundary snapshot — bit-for-bit
+    DiLoCoSync."""
+    cfg, m, params, dcfg = _setup(k=2, h=4)
+    a_state, a_hist = _run(m, params, dcfg, DiLoCoSync(), cfg, 12, k=2)
+    b_state, b_hist = _run(m, params, dcfg, OverlappedSync(delay=0), cfg,
+                           12, k=2)
+    _assert_tree_close(a_state.global_params, b_state.global_params)
+    _assert_tree_close(a_state.worker_params, b_state.worker_params)
+    assert a_hist["sync_steps"] == b_hist["sync_steps"] == [3, 7, 11]
+    np.testing.assert_array_equal(a_hist["loss"], b_hist["loss"])
+
+
+def test_streaming_f1_matches_diloco():
+    """One fragment covering all params == vanilla DiLoCo (same boundary
+    steps, same masks-free math)."""
+    cfg, m, params, dcfg = _setup(k=2, h=4)
+    a_state, _ = _run(m, params, dcfg, DiLoCoSync(), cfg, 8, k=2)
+    b_state, b_hist = _run(m, params, dcfg, StreamingSync(num_fragments=1),
+                           cfg, 8, k=2)
+    assert [s for s, _ in b_hist["frag_syncs"]] == [3, 7]
+    _assert_tree_close(a_state.global_params, b_state.global_params,
+                       atol=1e-6)
+
+
+def test_overlapped_delay_and_jitter_converges():
+    """Delayed application with straggler jitter still trains: losses stay
+    finite and decrease, and every round produces exactly one sync."""
+    cfg, m, params, dcfg = _setup(k=3, h=6)
+    state, hist = _run(m, params, dcfg,
+                       OverlappedSync(delay=2, jitter=2, seed=7), cfg, 18,
+                       k=3)
+    assert np.isfinite(hist["loss"]).all()
+    assert hist["loss"][-1] < hist["loss"][0]
+    # boundaries at 5, 11, 17 -> applications at 7, 13, then the final
+    # pending round is flushed by finalize at the last step
+    assert hist["sync_steps"] == [7, 13, 17]
+
+
+def test_overlapped_rejects_bad_delay_jitter():
+    cfg, m, params, dcfg = _setup(k=2, h=4)
+    dt = DistTrainer(m.loss, OPT, dcfg, OverlappedSync(delay=4))
+    state = dt.init(params)
+    with pytest.raises(ValueError):
+        dt.run(state, lambda s: _data(cfg, 2, s), 4)
+    dt = DistTrainer(m.loss, OPT, dcfg, OverlappedSync(delay=2, jitter=2))
+    state = dt.init(params)
+    with pytest.raises(ValueError):
+        dt.run(state, lambda s: _data(cfg, 2, s), 4)
+
+
+def test_ddp_sync_rejects_multiple_workers():
+    """DDPSync is the K=1 + global-batch baseline; K>1 under it would be
+    silently-unsynchronized workers, so bind() must refuse."""
+    cfg, m, params, dcfg = _setup(k=2, h=4)
+    dt = DistTrainer(m.loss, OPT, dcfg, DDPSync())
+    state = dt.init(params)
+    with pytest.raises(ValueError, match="num_workers"):
+        dt.run(state, lambda s: _data(cfg, 2, s), 2)
+
+
+def test_make_strategy_from_config():
+    assert make_strategy(DiLoCoConfig(strategy="ddp")).name == "ddp"
+    assert make_strategy(DiLoCoConfig(strategy="diloco")).name == "diloco"
+    s = make_strategy(DiLoCoConfig(strategy="streaming", num_fragments=8))
+    assert s.num_fragments == 8
+    s = make_strategy(DiLoCoConfig(strategy="overlapped", sync_delay=5,
+                                   h_jitter=3))
+    assert (s.delay, s.jitter) == (5, 3)
+    with pytest.raises(ValueError):
+        make_strategy(DiLoCoConfig(strategy="nope"))
+
+
+# ---------------------------------------------------------------------------
+# Payload schedules + event-driven simulator
+# ---------------------------------------------------------------------------
+
+def test_payload_schedules_bytes_ratio():
+    """Over one H window, DDP ships H full fp32 payloads, DiLoCo one —
+    the paper's ~H× reduction, strategy-for-strategy."""
+    dcfg = DiLoCoConfig(h_inner_steps=10)
+    n = 1000
+    ddp = DDPSync().payload_schedule(n, 10, dcfg)
+    dlc = DiLoCoSync().payload_schedule(n, 10, dcfg)
+    stream = StreamingSync(num_fragments=5).payload_schedule(n, 10, dcfg)
+    assert sum(e.bytes_per_worker for e in ddp) == 10 * 4 * n
+    assert sum(e.bytes_per_worker for e in dlc) == 4 * n
+    assert sum(e.bytes_per_worker for e in stream) == 4 * n
+    # streaming: 5 slots of 1/5 the payload, staggered
+    assert len(stream) == 5 and len({e.fragment for e in stream}) == 5
+    # overlapped: same bytes as diloco, but a delay window to hide them in
+    ov = OverlappedSync(delay=4).payload_schedule(n, 10, dcfg)
+    assert [e.apply_step - e.step for e in ov] == [4]
+
+
+def test_simulator_blocking_vs_overlapped():
+    """A transfer with an apply window hides behind compute; a blocking one
+    stalls the timeline by exactly its transfer time."""
+    comm = CommModel(bandwidth=100.0, latency=0.0)
+    blocking = [SyncEvent(step=4, bytes_per_worker=200, kind="delta",
+                          apply_step=4)]
+    r = simulate_schedule(blocking, 10, step_time_s=1.0, comm=comm)
+    assert r["wall_clock_s"] == pytest.approx(12.0)   # 10 compute + 2 stall
+    assert r["stall_s"] == pytest.approx(2.0)
+    hidden = [SyncEvent(step=4, bytes_per_worker=200, kind="delta",
+                        apply_step=8)]
+    r = simulate_schedule(hidden, 10, step_time_s=1.0, comm=comm)
+    assert r["wall_clock_s"] == pytest.approx(10.0)   # fully overlapped
+    assert r["stall_s"] == 0.0
+    # window too small to hide everything: only the excess is exposed
+    partial = [SyncEvent(step=4, bytes_per_worker=300, kind="delta",
+                         apply_step=5)]
+    r = simulate_schedule(partial, 10, step_time_s=1.0, comm=comm)
+    assert r["stall_s"] == pytest.approx(2.0)         # 3s transfer, 1s hidden
+
+
+def test_simulator_serializes_link():
+    """Two transfers emitted back-to-back share one link: the second waits
+    for the first."""
+    comm = CommModel(bandwidth=100.0, latency=0.0)
+    evs = [SyncEvent(step=0, bytes_per_worker=500, kind="delta",
+                     apply_step=1),
+           SyncEvent(step=1, bytes_per_worker=500, kind="delta",
+                     apply_step=2)]
+    r = simulate_schedule(evs, 3, step_time_s=1.0, comm=comm)
+    # transfer #1: starts t=1, done t=6 (stall at step 1 -> now=6);
+    # transfer #2 waits for the link (emitted t=2, starts t=6), done t=11
+    assert r["wall_clock_s"] == pytest.approx(11.0)
+    assert r["comm_s"] == pytest.approx(10.0)
+
+
+def test_simulator_ddp_slower_than_diloco():
+    """End-to-end: modeled wall-clock orders the strategies the way the
+    paper argues — DDP pays every step, DiLoCo every H, overlapped hides
+    the exchange."""
+    dcfg = DiLoCoConfig(h_inner_steps=10)
+    n = 10_000_000
+    comm = CommModel(bandwidth=1e9, latency=0.0)
+    step_t = 0.01
+    res = {}
+    for strat in (DDPSync(), DiLoCoSync(), OverlappedSync(delay=5)):
+        evs = strat.payload_schedule(n, 100, dcfg)
+        res[strat.name] = simulate_schedule(evs, 100, step_t, comm)
+    assert res["ddp"]["wall_clock_s"] > res["diloco"]["wall_clock_s"]
+    assert res["diloco"]["wall_clock_s"] > res["overlapped"]["wall_clock_s"]
+    assert res["ddp"]["total_bytes"] == pytest.approx(
+        10 * res["diloco"]["total_bytes"])
+
+
+def test_modeled_step_time_positive():
+    assert modeled_step_time(1e15) > 0

@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from helpers import tiny_cfg
 from repro.configs.base import DiLoCoConfig, OptimizerConfig
@@ -63,6 +64,7 @@ def test_fragment_sync_touches_only_fragment():
         assert float(jnp.max(jnp.abs(diff_in))) < 1e-6
 
 
+@pytest.mark.slow
 def test_streaming_converges_like_vanilla():
     cfg, m, params, tr = _setup(k=2, h=8, F=4)
     state = tr.init(params)
