@@ -13,6 +13,7 @@
 | §4.3 drift hypothesis       | drift                                       |
 | TPU deployment (e,g)        | roofline (from the dry-run JSONs)           |
 | engine/step latencies       | micro                                       |
+| continuous vs static batch  | serving (paged-KV scheduler vs buckets)     |
 
 Prints ``name,us_per_call,derived`` CSV rows.
 """
@@ -50,7 +51,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", type=str, default=None,
                     help="comma list: micro,comm,strategies,roofline,"
-                         "table1,drift")
+                         "table1,drift,serving")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -74,6 +75,9 @@ def main() -> None:
     if want("drift"):
         from benchmarks import drift_analysis
         drift_analysis.main(steps=80)
+    if want("serving"):
+        from benchmarks import serving_bench
+        serving_bench.main()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,123 @@
+"""Serving benchmark: static bucketing vs continuous batching on a
+mixed-length synthetic request stream.
+
+The static arm is the legacy engine path: FIFO buckets of ``slots``
+requests, LEFT-padded to the bucket's longest prompt, every slot decoding
+until the bucket's largest ``max_new`` — the whole bucket stalls on its
+slowest member.  The continuous arm runs the same requests through the
+paged-KV scheduler: slots free as soon as their request finishes and queued
+requests backfill immediately.
+
+Both arms are warmed before timing (the static path's per-bucket-shape
+recompiles are its own, separately reported, pathology) and both count only
+*useful* tokens — each request's own ``max_new`` — so the static arm's
+padded decode steps show up as lost throughput, which is exactly the point.
+
+Prints ``name,us_per_call,derived`` CSV rows (serving/speedup carries the
+headline continuous-vs-static tokens/s ratio).
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.launch.serve import percentile as _pct
+
+
+def make_stream(n: int = 24, seed: int = 0,
+                vocab: int = 256) -> List[Tuple[List[int], int]]:
+    """Mixed-length synthetic stream: (prompt_ids, max_new) per request."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        plen = int(rng.integers(4, 40))
+        max_new = int(rng.choice([4, 8, 12, 16, 24, 32, 48]))
+        out.append((rng.integers(1, vocab, size=plen).tolist(), max_new))
+    return out
+
+
+REPS = 3        # best-of-N with the two arms INTERLEAVED: the host is a
+                # shared/quota'd CPU, so back-to-back arms sample different
+                # throttling windows — alternating reps and taking each
+                # arm's best measures the engines, not the scheduler du jour
+
+
+def _run_static(engine, stream, slots: int):
+    buckets = [stream[i:i + slots] for i in range(0, len(stream), slots)]
+    t0 = time.perf_counter()
+    done_at = []
+    for bucket in buckets:
+        prompts = [p for p, _ in bucket]
+        engine.generate_ids_static(prompts,
+                                   max_new=max(m for _, m in bucket))
+        done_at.extend([time.perf_counter() - t0] * len(bucket))
+    return time.perf_counter() - t0, done_at
+
+
+def _run_continuous(engine, stream):
+    from repro.serving import Request
+    rs = [Request(rid=i, prompt=list(p), max_new=m)
+          for i, (p, m) in enumerate(stream)]
+    stats = engine.run(rs, use_time=True)
+    return stats, [r.finish_time - r.arrival for r in rs]
+
+
+def bench_both(engine, stream, slots: int):
+    """Warm both arms, then alternate timed reps; best-of-REPS each.
+    Returns (static (tps, p50, p95), continuous (tps, p50, p95, stats))."""
+    useful = sum(m for _, m in stream)
+    _run_static(engine, stream, slots)            # warm (bucket compiles)
+    _run_continuous(engine, stream)               # warm (persistent step)
+    best_s, best_c = None, None
+    for _ in range(REPS):
+        wall, done_at = _run_static(engine, stream, slots)
+        if best_s is None or wall < best_s[0]:
+            best_s = (wall, done_at)
+        stats, lats = _run_continuous(engine, stream)
+        if best_c is None or stats["wall"] < best_c[0]["wall"]:
+            best_c = (stats, lats)
+    wall, done_at = best_s
+    stats, lats = best_c
+    return ((useful / wall, _pct(done_at, 50), _pct(done_at, 95)),
+            (stats["generated"] / stats["wall"], _pct(lats, 50),
+             _pct(lats, 95), stats))
+
+
+def main(n: int = 24, slots: int = 8) -> None:
+    import jax
+    from repro.configs.base import ModelConfig
+    from repro.kernels.decode_attention import pallas_mode
+    from repro.models.transformer import build_model, init_params
+    from repro.serving import Engine
+
+    print("name,us_per_call,derived")
+    cfg = ModelConfig(name="bench-serve", num_layers=4, d_model=128,
+                      num_heads=4, num_kv_heads=4, d_ff=512, vocab_size=256)
+    model = build_model(cfg)
+    params, _ = init_params(cfg, jax.random.key(0))
+    # prefill_chunk=12: the sweet spot on CPU between per-call dispatch
+    # amortization and finish-boundary waste for this stream's max_new mix
+    engine = Engine(model, params, max_len=128, num_slots=slots,
+                    block_size=16, prefill_chunk=12)
+    stream = make_stream(n=n)
+
+    (s_tps, s_p50, s_p95), (c_tps, c_p50, c_p95, stats) = bench_both(
+        engine, stream, slots)
+    print(f"serving/static,{1e6 / s_tps:.0f},"
+          f"tokens_per_s={s_tps:.1f} p50={s_p50:.2f}s p95={s_p95:.2f}s")
+    util = (stats["generated"] + stats["prefill_tokens"]) / max(
+        stats["token_slots"], 1)
+    print(f"serving/continuous,{1e6 / c_tps:.0f},"
+          f"tokens_per_s={c_tps:.1f} p50={c_p50:.2f}s p95={c_p95:.2f}s "
+          f"step_calls={stats['step_calls']} slot_util={util:.2f}")
+
+    print(f"serving/speedup,0.0,continuous_vs_static={c_tps / s_tps:.2f}x "
+          f"(acceptance >= 1.3x)")
+    print(f"serving/pallas,0.0,attn_impl={engine.attn_impl} "
+          f"mode={pallas_mode()} backend={jax.default_backend()}")
+
+
+if __name__ == "__main__":
+    main()

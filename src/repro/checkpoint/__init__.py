@@ -1,3 +1,4 @@
-from repro.checkpoint.checkpoint import load_pytree, save_pytree
+from repro.checkpoint.checkpoint import (load_config, load_pytree,
+                                         save_config, save_pytree)
 
-__all__ = ["save_pytree", "load_pytree"]
+__all__ = ["save_pytree", "load_pytree", "save_config", "load_config"]

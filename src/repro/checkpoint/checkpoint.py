@@ -7,9 +7,10 @@ leaf paths.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import numpy as np
@@ -66,3 +67,30 @@ def load_pytree(template: Any, path: str) -> Any:
         leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
     return jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(template), leaves)
+
+
+# ---------------------------------------------------------------------------
+# Model-config metadata (so a checkpoint is servable without knowing its arch)
+# ---------------------------------------------------------------------------
+
+def save_config(cfg, path: str) -> None:
+    """Write the ModelConfig next to the checkpoint as <path>.cfg.json."""
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path + ".cfg.json", "w") as f:
+        json.dump(dataclasses.asdict(cfg), f, indent=1)
+
+
+def load_config(path: str) -> Optional[Any]:
+    """Load the ModelConfig saved beside a checkpoint, or None if the
+    checkpoint predates config metadata."""
+    from repro.configs.base import ModelConfig
+    meta = path + ".cfg.json"
+    if not os.path.exists(meta):
+        return None
+    with open(meta) as f:
+        d = json.load(f)
+    if "window_pattern" in d:                 # tuples round-trip as lists
+        d["window_pattern"] = tuple(d["window_pattern"])
+    if "adam_betas" in d:
+        d["adam_betas"] = tuple(d["adam_betas"])
+    return ModelConfig(**d)

@@ -71,8 +71,17 @@ class GRPOTrainer:
                          ) -> Tuple[Dict, float, float]:
         """One GRPO iteration: sample G completions per prompt, reward,
         normalize within group, update.  reward_fn(prompt_idx, token_row)
-        -> float.  Returns (state, loss, mean_reward)."""
-        engine = Engine(self.model, state["params"])
+        -> float.  Returns (state, loss, mean_reward).
+
+        Rollouts go through the continuous-batching scheduler (the same
+        serving path as the evals): G×P sampling requests share the slot
+        set, each with its own PRNG stream (folded from ``seed`` and the
+        request id), so on-policy sampling is deterministic per seed and the
+        engine — and its compiled step — is reused across iterations."""
+        if not hasattr(self, "_engine") or self._engine.model is not self.model:
+            self._engine = Engine(self.model, state["params"])
+        engine = self._engine
+        engine.params = state["params"]     # jitted steps take params as args
         G = self.group_size
         rep_prompts = [p for p in prompts for _ in range(G)]
         out = engine.generate_ids(rep_prompts, max_new=self.max_new,

@@ -19,9 +19,20 @@ from repro.data.pipeline import PackedDataset
 from repro.models.transformer import ModelAPI
 
 
-def heldout_metrics(model: ModelAPI, params, ds: PackedDataset,
-                    batches: int = 8, batch_size: int = 16,
-                    seed: int = 4242) -> Dict[str, float]:
+def heldout_metrics(model: ModelAPI = None, params=None,
+                    ds: PackedDataset = None, batches: int = 8,
+                    batch_size: int = 16, seed: int = 4242,
+                    engine=None) -> Dict[str, float]:
+    """Pass ``engine`` (the serving ``Engine`` used for the generative task
+    evals) to score the exact params being served — eval and serving then
+    share one model/params stack instead of drifting apart."""
+    if engine is not None:
+        model, params = engine.model, engine.params
+    if model is None or params is None:
+        raise TypeError(
+            "heldout_metrics: pass model+params or engine=")
+    if ds is None:
+        raise TypeError("heldout_metrics: ds is required")
     loss_fn = jax.jit(model.loss)
     tot, n = 0.0, 0
     for i in range(batches):

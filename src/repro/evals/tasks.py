@@ -32,10 +32,15 @@ def mc_accuracy(engine: Engine, tok: BPETokenizer, items: List[dict]) -> float:
 
 def _gen_exact(engine: Engine, tok: BPETokenizer, items: List[dict],
                max_new: int = 12) -> float:
+    """Generative exact-match evals go through the same scheduler path that
+    serves traffic: one request per item, with EOS-based early eviction so
+    finished items free their slots for queued ones (``Engine.generate``
+    falls back to static buckets for ssm/hybrid archs)."""
     prompts = [tok.encode(it["prompt"]) for it in items]
-    out = engine.generate_ids(prompts, max_new=max_new, greedy=True)
+    rows = engine.generate(prompts, max_new=max_new, greedy=True,
+                           eos_id=tok.special_id("<|assistant_end|>"))
     correct = 0
-    for row, it in zip(out, items):
+    for row, it in zip(rows, items):
         text = tok.decode(list(row))
         if text.strip().startswith(it["answer"]):
             correct += 1

@@ -68,6 +68,98 @@ def _decode_kernel(qpos_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
                        / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
 
 
+def _paged_decode_kernel(tab_ref, qpos_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_scr, l_scr, acc_scr, *, scale: float, window: int,
+                         bs: int, n_b: int):
+    s_idx = pl.program_id(0)
+    ib = pl.program_id(2)
+
+    @pl.when(ib == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)               # (G, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)            # (bs, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)            # (bs, D)
+    q_pos = qpos_ref[s_idx]                           # scalar int32
+    mapped = tab_ref[s_idx, ib] >= 0                  # −1 = unmapped block
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    # blocks hold contiguous positions: logical position = ib*bs + lane
+    k_pos = ib * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)[0]
+    ok = (k_pos <= q_pos) & mapped
+    if window > 0:
+        ok &= (q_pos - k_pos) < window
+    s = jnp.where(ok[None, :], s, NEG_INF)            # (G, bs)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ib == n_b - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_decode_attention_fwd(q, k_pool, v_pool, block_tables, q_pos, *,
+                               window: int = 0, interpret: bool = True):
+    """Block-table-indexed decode attention over a shared paged KV pool.
+
+    q: (S, KV, G, D) one token per active slot; k_pool/v_pool: (NB, bs, KV, D)
+    fixed-size physical blocks; block_tables: (S, MB) int32 — logical block j
+    of slot s lives in physical block ``block_tables[s, j]`` (−1 = unmapped);
+    q_pos: (S,) int32 absolute query positions (−1 = inactive slot).
+
+    The block table is a scalar-prefetch operand, so the per-(slot, block)
+    pool tile is DMA'd straight from the physical block the table names — the
+    gather never materializes a per-slot contiguous cache.  Validity is
+    positional (blocks hold contiguous positions), so stale pool contents
+    beyond ``q_pos`` and unmapped table slots are masked, never read into the
+    softmax.  Returns (S, KV, G, D)."""
+    S, KV, G, D = q.shape
+    NB, bs = k_pool.shape[:2]
+    MB = block_tables.shape[1]
+    scale = 1.0 / math.sqrt(D)
+    kernel = functools.partial(_paged_decode_kernel, scale=scale,
+                               window=window, bs=bs, n_b=MB)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(S, KV, MB),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D),
+                         lambda s, h, ib, tab, qp: (s, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda s, h, ib, tab, qp:
+                         (jnp.maximum(tab[s, ib], 0), 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda s, h, ib, tab, qp:
+                         (jnp.maximum(tab[s, ib], 0), 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda s, h, ib, tab, qp: (s, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((S, KV, G, D), q.dtype),
+        interpret=interpret,
+    )(block_tables, q_pos, q, k_pool, v_pool)
+
+
 def decode_attention_fwd(q, k, v, pos, q_pos, *, window: int = 0,
                          bk: int = DEFAULT_BK, interpret: bool = True):
     """q: (B, KV, G, D) one token per request, grouped query heads;

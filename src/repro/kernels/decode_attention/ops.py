@@ -1,15 +1,62 @@
-"""Jitted wrapper for the decode attention Pallas kernel."""
+"""Jitted wrappers for the decode attention Pallas kernels.
+
+``interpret`` defaults to *backend-selected*: the Pallas interpreter is only
+used on CPU hosts (where Mosaic cannot compile); on TPU the kernels compile.
+``REPRO_PALLAS_INTERPRET=0|1`` force-overrides the selection, and
+``pallas_mode()`` reports the resolved mode so benchmarks can record which
+path actually ran.
+"""
 from __future__ import annotations
 
 import functools
+import os
+from typing import Optional
 
 import jax
 
-from repro.kernels.decode_attention.kernel import decode_attention_fwd
+from repro.kernels.decode_attention.kernel import (decode_attention_fwd,
+                                                   paged_decode_attention_fwd)
+
+
+def default_interpret() -> bool:
+    """Interpret only where Mosaic can't compile (CPU), unless overridden."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() == "cpu"
+
+
+def pallas_mode() -> str:
+    """'interpret' or 'compiled' — what the kernels will actually run as."""
+    return "interpret" if default_interpret() else "compiled"
 
 
 @functools.partial(jax.jit, static_argnames=("window", "bk", "interpret"))
-def decode_attention(q, k, v, pos, q_pos, *, window: int = 0, bk: int = 256,
-                     interpret: bool = True):
+def _decode_attention(q, k, v, pos, q_pos, *, window, bk, interpret):
     return decode_attention_fwd(q, k, v, pos, q_pos, window=window, bk=bk,
                                 interpret=interpret)
+
+
+def decode_attention(q, k, v, pos, q_pos, *, window: int = 0, bk: int = 256,
+                     interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = default_interpret()
+    return _decode_attention(q, k, v, pos, q_pos, window=window, bk=bk,
+                             interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def _paged_decode_attention(q, k_pool, v_pool, block_tables, q_pos, *,
+                            window, interpret):
+    return paged_decode_attention_fwd(q, k_pool, v_pool, block_tables, q_pos,
+                                      window=window, interpret=interpret)
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_tables, q_pos, *,
+                           window: int = 0,
+                           interpret: Optional[bool] = None):
+    """Block-table-indexed decode attention (see kernel.py for shapes)."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _paged_decode_attention(q, k_pool, v_pool, block_tables, q_pos,
+                                   window=window, interpret=interpret)

@@ -19,3 +19,31 @@ def reference_decode_attention(q, k, v, pos, q_pos, window: int = 0):
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhgs,bhsd->bhgd", p,
                       v.astype(jnp.float32)).astype(q.dtype)
+
+
+def reference_paged_decode_attention(q, k_pool, v_pool, block_tables, q_pos,
+                                     window: int = 0):
+    """Paged variant: the KV cache is a shared pool of fixed-size blocks and
+    each sequence maps logical block j to physical block ``block_tables[s,j]``
+    (−1 = unmapped).  Blocks hold contiguous positions, so logical slot i of
+    sequence s carries position i; validity is purely positional:
+    ``i <= q_pos[s]`` (and inside the sliding window, when one is set).
+
+    q: (S,KV,G,D); k_pool/v_pool: (NB,bs,KV,D); block_tables: (S,MB) int32;
+    q_pos: (S,) int32 (−1 = inactive slot).  Returns (S,KV,G,D)."""
+    S, KV, G, D = q.shape
+    NB, bs = k_pool.shape[:2]
+    MB = block_tables.shape[1]
+    safe = jnp.maximum(block_tables, 0)                    # (S, MB)
+    k = k_pool[safe].reshape(S, MB * bs, KV, D)            # (S, L, KV, D)
+    v = v_pool[safe].reshape(S, MB * bs, KV, D)
+    k_pos = jnp.arange(MB * bs)[None, :]                   # logical positions
+    ok = (k_pos <= q_pos[:, None]) & jnp.repeat(block_tables >= 0, bs, axis=1)
+    if window > 0:
+        ok &= (q_pos[:, None] - k_pos) < window
+    s = jnp.einsum("bhgd,bshd->bhgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    s = jnp.where(ok[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgs,bshd->bhgd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -160,8 +160,8 @@ def run_pipeline(method: str = "diloco", arch: str = "tiny",
                  "method": stage_method}
         if eval_after_each_stage:
             engine = Engine(model, params, tok)
-            entry["core"] = heldout_metrics(model, params, stages["base"],
-                                            batches=4, batch_size=8)
+            entry["core"] = heldout_metrics(ds=stages["base"], batches=4,
+                                            batch_size=8, engine=engine)
             entry["tasks"] = chat_suite(engine, tok, suites)
         results["stages"][stage] = entry
         print(f"[{method}:{stage}] loss {entry['loss_first']:.3f} -> "
@@ -170,8 +170,10 @@ def run_pipeline(method: str = "diloco", arch: str = "tiny",
 
     if out_dir:
         os.makedirs(out_dir, exist_ok=True)
-        from repro.checkpoint import save_pytree
-        save_pytree(params, os.path.join(out_dir, f"{method}_final"))
+        from repro.checkpoint import save_config, save_pytree
+        ckpt = os.path.join(out_dir, f"{method}_final")
+        save_pytree(params, ckpt)
+        save_config(cfg, ckpt)   # so serve.py can rebuild the model
         with open(os.path.join(out_dir, f"{method}_metrics.json"), "w") as f:
             json.dump(results, f, indent=1, default=float)
     return results

@@ -401,6 +401,82 @@ def decode_step_lm(params, cache, batch, cfg: ModelConfig
 
 
 # ---------------------------------------------------------------------------
+# Paged decode (continuous-batching serving path)
+# ---------------------------------------------------------------------------
+
+def paged_cache_supported(cfg: ModelConfig) -> bool:
+    """The paged pool stores attention K/V only; position-gating cannot mask
+    an SSM recurrence (state updates are unconditional), and cross-attention
+    memories are per-request, so ssm/hybrid/encoder-decoder archs stay on the
+    static-bucket path."""
+    return (cfg.arch_type != "ssm" and not cfg.hybrid
+            and not cfg.is_encoder_decoder)
+
+
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     dtype=None) -> Dict[str, jax.Array]:
+    """A pool of ``num_blocks`` fixed-size KV blocks shared by all serving
+    slots, stacked over layers: (L, NB, bs, KV, hd)."""
+    if not paged_cache_supported(cfg):
+        raise NotImplementedError(
+            f"paged KV cache unsupported for arch {cfg.arch_type!r} "
+            f"(hybrid={cfg.hybrid}, enc-dec={cfg.is_encoder_decoder})")
+    hd = cfg.resolved_head_dim()
+    dt = dtype or cfg.compute_dtype
+    shape = (cfg.num_layers, num_blocks, block_size, cfg.num_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def _paged_layers(params, h, pool, cfg: ModelConfig, positions, block_table,
+                  impl=None):
+    """Scan the stacked layers over the paged pool.  h: (S, 1, d);
+    positions: (S,); block_table: (S, MB).  Returns (h, new pool).
+
+    Uniform-window configs keep the window STATIC (so the Pallas block-table
+    kernel can specialize on it); heterogeneous ``window_pattern`` configs
+    thread traced per-layer windows through the scan (jnp path only)."""
+    heterogeneous = bool(cfg.window_pattern)
+    windows = layer_windows(cfg) if heterogeneous else None
+    static_w = None if heterogeneous else (cfg.window or None)
+
+    def body(hh, xs):
+        if heterogeneous:
+            lp, kc, vc, w = xs
+            w = _effective_window(w, 0)
+        else:
+            (lp, kc, vc), w = xs, static_w
+        x = apply_norm(lp["ln1"], hh, cfg)
+        a, nk, nv = attn.paged_decode_attention(
+            lp["attn"], x, cfg, kc, vc, positions=positions,
+            block_table=block_table, window=w, impl=impl)
+        hh = hh + a
+        x = apply_norm(lp["ln2"], hh, cfg)
+        if cfg.num_experts:
+            y, _ = moe_mod.apply_moe(lp["moe"], x, cfg)
+        else:
+            y = apply_mlp(lp["mlp"], x, cfg)
+        return hh + y, (nk, nv)
+
+    xs = (params["layers"], pool["k"], pool["v"])
+    h, (nk, nv) = jax.lax.scan(body, h, xs + (windows,) if heterogeneous
+                               else xs)
+    return h, {"k": nk, "v": nv}
+
+
+def decode_step_paged(params, pool, batch, cfg: ModelConfig,
+                      impl: Optional[str] = None
+                      ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decode step over the active slot set.  batch: {"token": (S,1)
+    int32, "position": (S,) int32 (−1 = inactive slot), "block_table":
+    (S, MB) int32}.  Returns (logits (S,1,V), new pool)."""
+    h = embed(params["embed"], batch["token"], cfg)
+    h, pool = _paged_layers(params, h, pool, cfg, batch["position"],
+                            batch["block_table"], impl=impl)
+    h = apply_norm(params["final_norm"], h, cfg)
+    return unembed(params["embed"], h, cfg), pool
+
+
+# ---------------------------------------------------------------------------
 # Model API
 # ---------------------------------------------------------------------------
 
@@ -411,6 +487,8 @@ class ModelAPI(NamedTuple):
     forward: Callable         # (params, batch) -> (logits, aux)
     init_cache: Callable      # (batch, capacity) -> cache
     decode_step: Callable     # (params, cache, batch) -> (logits, cache)
+    init_paged_cache: Callable  # (num_blocks, block_size) -> pool
+    decode_step_paged: Callable  # (params, pool, batch) -> (logits, pool)
 
 
 def build_model(cfg: ModelConfig) -> ModelAPI:
@@ -423,6 +501,10 @@ def build_model(cfg: ModelConfig) -> ModelAPI:
             cfg, batch, capacity, dtype=dtype),
         decode_step=lambda params, cache, batch: decode_step_lm(
             params, cache, batch, cfg),
+        init_paged_cache=lambda num_blocks, block_size, dtype=None:
+            init_paged_cache(cfg, num_blocks, block_size, dtype=dtype),
+        decode_step_paged=lambda params, pool, batch, impl=None:
+            decode_step_paged(params, pool, batch, cfg, impl=impl),
     )
 
 

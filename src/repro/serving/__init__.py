@@ -1,3 +1,6 @@
 from repro.serving.engine import Engine
+from repro.serving.kv_cache import KVBlockPool, pad_block_table
+from repro.serving.scheduler import Request, Scheduler
 
-__all__ = ["Engine"]
+__all__ = ["Engine", "KVBlockPool", "Request", "Scheduler",
+           "pad_block_table"]

@@ -1,27 +1,52 @@
-"""Batched KV-cache inference engine (nanochat ships a small engine + web UI;
-this is the JAX equivalent, built on the models' decode_step).
+"""Continuous-batching inference engine (nanochat ships a small engine + web
+UI; this is the JAX equivalent, built on the models' paged decode path).
 
-Prompts are LEFT-padded to a common length; padded slots are inserted into
-the cache with position −1, which the attention mask treats as invalid, so
-ragged batches decode correctly.  Both the prefill (teacher-forced) and the
-generation loop are single ``lax.scan``s — one compile per (batch, lengths)
-bucket.
+Layered design:
 
-Note: SSM/hybrid state updates are not position-gated, so ragged batches
-should use same-length prompts for those archs (documented limitation; the
-paper's nanochat model is dense attention).
+* ``repro.serving.kv_cache``  — paged KV-block pool (host allocator; the
+  device pool lives in ``models.transformer.init_paged_cache``);
+* ``repro.serving.scheduler`` — admission / eviction over a fixed slot set
+  (FIFO or longest-prefill-first);
+* this module              — the persistent decode loop: ONE jitted step over
+  the whole slot set, compiled once, with position-gated masking so slots at
+  different generation depths coexist.  Each call scans ``prefill_chunk``
+  token-steps: every slot either consumes its *scripted* pending tokens (the
+  prompt, fed in chunks of at most ``prefill_chunk`` per call — chunked
+  prefill, so a long prompt shares steps with running decodes instead of
+  stalling them) or chains on its own samples, so prefill and decode tokens
+  coexist in the same batched step and the pool round-trip + dispatch cost
+  is amortized over ``num_slots × prefill_chunk`` token-slots.
+
+The legacy static-bucket path (LEFT-padded batch, one ``lax.scan`` compile
+per ``(batch, lengths)`` bucket) is kept as ``generate_ids_static`` — it is
+the reference for the greedy-equivalence tests and the baseline arm of
+``benchmarks/serving_bench.py``.  ``generate_ids`` / ``chat`` are thin
+wrappers that route through the scheduler whenever the architecture supports
+the paged cache.
+
+Note on SSM/hybrid archs: the paged cache is position-gated — stale block
+contents are *masked*, not cleared, which is only sound when every read is
+gated on the token's absolute position (attention).  An SSM recurrence
+updates its O(1) state unconditionally, so a freed-and-reused slot would
+leak state across requests; ssm/hybrid (and encoder-decoder) archs therefore
+fall back to the static-bucket path, where ragged batches should use
+same-length prompts (documented limitation; the paper's nanochat model is
+dense attention).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Sequence, Tuple
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.data.tokenizer import BPETokenizer
-from repro.models.transformer import ModelAPI
+from repro.models.transformer import ModelAPI, paged_cache_supported
+from repro.serving.kv_cache import KVBlockPool, pad_block_table
+from repro.serving.scheduler import Request, Scheduler
 
 
 def _left_pad(prompts: Sequence[Sequence[int]], pad_id: int
@@ -40,13 +65,172 @@ class Engine:
     model: ModelAPI
     params: object
     tok: Optional[BPETokenizer] = None
-    max_len: int = 512
+    max_len: int = 256                 # per-request prompt+gen capacity
+                                       # (pool bytes scale with it; requests
+                                       # beyond it fall back to the static
+                                       # path, which is unbounded)
+    num_slots: int = 8                 # concurrent sequences in the step
+    block_size: int = 16               # KV tokens per pool block
+    num_blocks: Optional[int] = None   # pool size; default fits all slots
+    prefill_chunk: int = 8             # token-steps per persistent-step call
+    policy: str = "fifo"               # admission: fifo | longest_prefill
+    attn_impl: Optional[str] = None    # None=auto: pallas kernel off-CPU
 
     def __post_init__(self):
         self._gen_fn = jax.jit(self._generate_scan,
                                static_argnames=("max_new", "greedy"))
+        self.continuous = paged_cache_supported(self.model.cfg)
+        if not self.continuous:
+            return
+        self._mb = -(-self.max_len // self.block_size)   # blocks per slot
+        if self.num_blocks is None:
+            self.num_blocks = self.num_slots * self._mb
+        self.capacity = self._mb * self.block_size
+        self._pool = None       # device pool allocated lazily on first run()
+                                # so score-/static-only engines don't hold
+                                # num_blocks x block_size KV slots per layer
+        if self.attn_impl is None:
+            self.attn_impl = ("pallas" if jax.default_backend() == "tpu"
+                              else "jnp")
+        impl = self.attn_impl if self.attn_impl == "pallas" else None
+        model = self.model
+        T = self.prefill_chunk
 
-    # -- core scan ------------------------------------------------------------
+        def step(params, pool, script, n_script, start_pos, table, temps,
+                 greedy, base_key, rids):
+            """T token-steps over the whole slot set.  script: (S, T) pending
+            tokens (prompt chunk, or the carry token for decoding slots);
+            n_script: (S,) how many are scripted — beyond that a slot chains
+            on its own samples; start_pos: (S,) first write position (−1 =
+            inactive).  Returns (pool, samples (S, T)) where samples[:, t]
+            is the token sampled after feeding token t."""
+            active = start_pos >= 0
+
+            def body(carry, t):
+                pool, prev = carry
+                tok = jnp.where(t < n_script, script[:, t], prev)
+                pos = jnp.where(active, start_pos + t, -1)
+                logits, pool = model.decode_step_paged(
+                    params, pool, {"token": tok[:, None], "position": pos,
+                                   "block_table": table}, impl=impl)
+                logits = logits[:, 0].astype(jnp.float32)    # (S, V)
+                greedy_tok = jnp.argmax(logits, axis=-1)
+                # per-request PRNG stream: key = f(seed, rid, position) — the
+                # sample for a given position is deterministic no matter how
+                # requests were scheduled around it
+                keys = jax.vmap(lambda r, q: jax.random.fold_in(
+                    jax.random.fold_in(base_key, r), q))(rids, pos)
+                temp = jnp.maximum(jnp.where(greedy, 1.0, temps), 1e-6)
+                sampled = jax.vmap(jax.random.categorical)(
+                    keys, logits / temp[:, None])
+                nxt = jnp.where(greedy, greedy_tok, sampled).astype(jnp.int32)
+                return (pool, nxt), nxt
+
+            (pool, _), samples = jax.lax.scan(
+                body, (pool, jnp.zeros(script.shape[:1], jnp.int32)),
+                jnp.arange(T))
+            return pool, samples.T                           # (S, T)
+
+        self._step_fn = jax.jit(step)
+
+    # ======================================================================
+    # Continuous decode loop (the scheduler path)
+    # ======================================================================
+
+    def run(self, requests: Sequence[Request], *, seed: int = 0,
+            use_time: bool = False) -> Dict[str, float]:
+        """Drive the continuous loop until every request finished.  Mutates
+        each ``Request`` in place (``tokens``, admit/finish times) and
+        returns aggregate stats.  ``use_time`` honors ``Request.arrival``
+        (seconds relative to the call) against the wall clock; otherwise all
+        requests are immediately admissible."""
+        assert self.continuous, "continuous path unsupported for this arch"
+        S, MB, T = self.num_slots, self._mb, self.prefill_chunk
+        sched = Scheduler(S, KVBlockPool(self.num_blocks, self.block_size),
+                          MB, self.policy)
+        for r in requests:
+            assert r.max_new >= 1, "max_new must be >= 1"
+            sched.submit(r)
+        base_key = jax.random.key(seed)
+        if self._pool is None:
+            self._pool = self.model.init_paged_cache(self.num_blocks,
+                                                     self.block_size)
+        pool = self._pool
+        tables = np.full((S, MB), -1, np.int32)
+        stats = {"step_calls": 0, "prefill_tokens": 0, "generated": 0,
+                 "token_slots": 0}
+        t0 = time.perf_counter()
+        now = (lambda: time.perf_counter() - t0) if use_time else \
+            (lambda: float("inf"))
+
+        while sched.has_work():
+            for si in sched.admit(now()):
+                tables[si] = pad_block_table(sched.slots[si].blocks, MB)
+            act = sched.active_slots()
+            if not act:
+                time.sleep(5e-4)        # idle: waiting on future arrivals
+                continue
+
+            # -- build the scripted chunk for every active slot ------------
+            script = np.zeros((S, T), np.int32)
+            n_script = np.zeros((S,), np.int32)
+            start = np.full((S,), -1, np.int32)
+            temps = np.ones((S,), np.float32)
+            greedy = np.ones((S,), bool)
+            rids = np.zeros((S,), np.int32)
+            for si in act:
+                slot = sched.slots[si]
+                n = min(T, len(slot.feed))
+                script[si, :n] = slot.feed[:n]
+                n_script[si] = n
+                start[si] = slot.pos
+                temps[si] = slot.req.temperature
+                greedy[si] = slot.req.greedy
+                rids[si] = slot.req.rid
+
+            pool, samples = self._step_fn(
+                self.params, pool, jnp.asarray(script),
+                jnp.asarray(n_script), jnp.asarray(start),
+                jnp.asarray(tables), jnp.asarray(temps),
+                jnp.asarray(greedy), base_key, jnp.asarray(rids))
+            samples = np.asarray(samples)
+            stats["step_calls"] += 1
+            stats["token_slots"] += len(act) * T
+
+            # -- consume: scripted tokens advance, the rest are samples ----
+            for si in act:
+                slot = sched.slots[si]
+                n = int(n_script[si])
+                slot.pos += T
+                exhausted = n == len(slot.feed)
+                del slot.feed[:n]
+                stats["prefill_tokens"] += max(n - (1 if slot.generated
+                                                    else 0), 0)
+                if not exhausted:
+                    continue            # still mid-prompt: nothing sampled
+                done = False
+                for tok in samples[si, n - 1:]:
+                    tok = int(tok)
+                    slot.generated += 1
+                    slot.req.tokens.append(tok)
+                    stats["generated"] += 1
+                    if (slot.generated >= slot.req.max_new
+                            or tok == slot.req.eos_id):
+                        done = True
+                        break
+                if done:
+                    sched.finish(si, now() if use_time else 0.0)
+                    tables[si] = -1
+                else:                   # carry the last sample into the
+                    slot.feed = [slot.req.tokens[-1]]   # next chunk
+        self._pool = pool
+        stats["wall"] = time.perf_counter() - t0
+        return stats
+
+    # ======================================================================
+    # Legacy static-bucket path (reference + ssm/hybrid fallback)
+    # ======================================================================
+
     def _generate_scan(self, params, tokens, lens, key, temperature, *,
                        max_new: int, greedy: bool):
         B, Tp = tokens.shape
@@ -80,10 +264,12 @@ class Engine:
             gen_body, (cache, last_logits, key), jnp.arange(max_new))
         return toks.T                                    # (B, max_new)
 
-    # -- public API -------------------------------------------------------------
-    def generate_ids(self, prompts: Sequence[Sequence[int]], max_new: int = 16,
-                     greedy: bool = True, temperature: float = 1.0,
-                     seed: int = 0) -> np.ndarray:
+    def generate_ids_static(self, prompts: Sequence[Sequence[int]],
+                            max_new: int = 16, greedy: bool = True,
+                            temperature: float = 1.0,
+                            seed: int = 0) -> np.ndarray:
+        """The static-bucket path: one compile per (batch, lengths) bucket,
+        the whole batch stalls until its longest request finishes."""
         pad = self.tok.pad if self.tok else 0
         tokens, lens = _left_pad(prompts, pad)
         out = self._gen_fn(self.params, jnp.asarray(tokens), jnp.asarray(lens),
@@ -92,18 +278,64 @@ class Engine:
                            max_new=max_new, greedy=greedy)
         return np.asarray(out)
 
+    # ======================================================================
+    # Public API (wrappers over the scheduler)
+    # ======================================================================
+
+    def _fits(self, prompts: Sequence[Sequence[int]], max_new: int) -> bool:
+        """Whether the scheduler path can serve this batch; anything it
+        can't (empty prompts, max_new < 1, over-capacity requests — per-slot
+        OR whole-pool — or an unsupported arch) routes to the static path
+        instead."""
+        return (self.continuous and max_new >= 1
+                and all(1 <= len(p) and len(p) + max_new <= self.capacity
+                        and -(-(len(p) + max_new) // self.block_size)
+                        <= self.num_blocks
+                        for p in prompts))
+
+    def generate(self, prompts: Sequence[Sequence[int]], max_new: int = 16,
+                 greedy: bool = True, temperature: float = 1.0,
+                 seed: int = 0, eos_id: Optional[int] = None
+                 ) -> List[List[int]]:
+        """Ragged generation: the scheduler path when the batch fits (EOS
+        evicts early, freeing the slot for queued requests), the static
+        bucket otherwise (trimmed to match).  Rows include the EOS token
+        when one was produced."""
+        if self._fits(prompts, max_new):
+            reqs = [Request(rid=i, prompt=list(p), max_new=max_new,
+                            temperature=temperature, greedy=greedy,
+                            eos_id=eos_id)
+                    for i, p in enumerate(prompts)]
+            self.run(reqs, seed=seed)
+            return [r.tokens for r in reqs]
+        rows = [list(r) for r in self.generate_ids_static(
+            prompts, max_new=max_new, greedy=greedy,
+            temperature=temperature, seed=seed)]
+        if eos_id is not None:
+            rows = [row[:row.index(eos_id) + 1] if eos_id in row else row
+                    for row in rows]
+        return rows
+
+    def generate_ids(self, prompts: Sequence[Sequence[int]],
+                     max_new: int = 16, greedy: bool = True,
+                     temperature: float = 1.0, seed: int = 0) -> np.ndarray:
+        return np.asarray(self.generate(prompts, max_new=max_new,
+                                        greedy=greedy,
+                                        temperature=temperature, seed=seed),
+                          np.int32)
+
     def chat(self, prompts: List[str], max_new: int = 32,
-             greedy: bool = True) -> List[str]:
+             greedy: bool = True, temperature: float = 1.0) -> List[str]:
         assert self.tok is not None
         ids = [self.tok.encode(p) for p in prompts]
-        out = self.generate_ids(ids, max_new=max_new, greedy=greedy)
         stop = self.tok.special_id("<|assistant_end|>")
+        rows = self.generate(ids, max_new=max_new, greedy=greedy,
+                             temperature=temperature, eos_id=stop)
         texts = []
-        for row in out:
-            row = list(row)
+        for row in rows:
             if stop in row:
                 row = row[:row.index(stop)]
-            texts.append(self.tok.decode(row))
+            texts.append(self.tok.decode(list(row)))
         return texts
 
     # -- scoring (used by the MC eval) ----------------------------------------

@@ -1,0 +1,82 @@
+"""Paged KV-cache block pool — the host-side allocator behind the
+continuous-batching engine.
+
+The device side is a pool of ``num_blocks`` fixed-size KV blocks per layer
+(see ``repro.models.transformer.init_paged_cache``); this module owns the
+*mapping*: which physical blocks belong to which request, which are free,
+and the padded per-slot block tables the jitted step consumes.  Blocks hold
+contiguous positions (logical position i of a request lives at offset
+``i % block_size`` of its ``i // block_size``-th block), so device-side
+validity is purely positional and the allocator never has to touch device
+memory to recycle a block — stale contents are masked by the position gate
+until overwritten.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+
+class KVBlockPool:
+    """Fixed-size block allocator (free-list).  Raises on double-alloc /
+    double-free so scheduler bugs surface as exceptions, not silent KV
+    corruption."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        assert num_blocks > 0 and block_size > 0
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self._allocated: set = set()
+
+    # -- queries ------------------------------------------------------------
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_allocated(self) -> int:
+        return len(self._allocated)
+
+    def blocks_for(self, num_tokens: int) -> int:
+        """Blocks needed to hold ``num_tokens`` cache entries."""
+        return -(-max(num_tokens, 0) // self.block_size)
+
+    def can_allocate(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    # -- alloc / free -------------------------------------------------------
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise RuntimeError(
+                f"KV pool exhausted: want {n} blocks, {len(self._free)} free")
+        out = [self._free.pop() for _ in range(n)]
+        self._allocated.update(out)
+        return out
+
+    def free(self, blocks: Sequence[int]) -> None:
+        for b in blocks:
+            if b not in self._allocated:
+                raise RuntimeError(f"double-free / foreign block {b}")
+            self._allocated.remove(b)
+            self._free.append(b)
+
+    def check_invariants(self) -> None:
+        """free ∪ allocated must partition [0, num_blocks) exactly."""
+        free = set(self._free)
+        if len(free) != len(self._free):
+            raise AssertionError("duplicate block on the free list")
+        if free & self._allocated:
+            raise AssertionError(
+                f"blocks both free and allocated: {free & self._allocated}")
+        if free | self._allocated != set(range(self.num_blocks)):
+            raise AssertionError("leaked or out-of-range blocks")
+
+
+def pad_block_table(blocks: Sequence[int], max_blocks: int) -> np.ndarray:
+    """(max_blocks,) int32 table row; −1 marks unmapped logical blocks."""
+    assert len(blocks) <= max_blocks, (len(blocks), max_blocks)
+    row = np.full((max_blocks,), -1, np.int32)
+    row[:len(blocks)] = blocks
+    return row

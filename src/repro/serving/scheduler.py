@@ -1,0 +1,142 @@
+"""Request scheduler for the continuous-batching engine.
+
+Owns the waiting queue, the fixed slot set, and the block-pool bookkeeping:
+
+* **admission** — a waiting request enters a free slot once its arrival time
+  has passed and the pool can hold its full footprint
+  (``ceil((len(prompt) + max_new) / block_size)`` blocks, reserved up front so
+  a running request can never hit a mid-flight pool OOM);
+* **eviction** — finished slots (EOS or ``max_new`` reached) free their
+  blocks immediately, so the next waiting request backfills the slot while
+  the remaining slots keep decoding;
+* **policies** — ``fifo`` admits in arrival order; ``longest_prefill`` admits
+  the longest waiting prompt first (front-loads heavy prefills so they
+  overlap with many short decodes instead of serializing at the tail).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.serving.kv_cache import KVBlockPool
+
+POLICIES = ("fifo", "longest_prefill")
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.  ``tokens`` is filled by the engine."""
+    rid: int
+    prompt: List[int]
+    max_new: int = 16
+    temperature: float = 1.0
+    greedy: bool = True
+    eos_id: Optional[int] = None
+    arrival: float = 0.0
+    # -- engine-filled ------------------------------------------------------
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    admit_time: Optional[float] = None
+    finish_time: Optional[float] = None
+
+    @property
+    def total_tokens(self) -> int:
+        return len(self.prompt) + self.max_new
+
+
+@dataclasses.dataclass
+class Slot:
+    """Per-slot decode state.  ``pos`` is the next cache position to write
+    (== tokens already written).  ``feed`` holds the tokens still to be fed
+    through the persistent step: the prompt at admission (consumed in
+    chunks — chunked prefill), then the single carry token once the slot is
+    sampling; the first sampled token therefore comes out of the same jitted
+    step as every other one."""
+    req: Request
+    blocks: List[int]
+    feed: List[int] = dataclasses.field(default_factory=list)
+    pos: int = 0
+    generated: int = 0
+
+    @property
+    def in_prefill(self) -> bool:
+        return self.generated == 0 and len(self.feed) > 1
+
+
+class Scheduler:
+    def __init__(self, num_slots: int, pool: KVBlockPool,
+                 max_blocks_per_slot: int, policy: str = "fifo"):
+        if policy not in POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; one of {POLICIES}")
+        self.pool = pool
+        self.policy = policy
+        self.max_blocks_per_slot = max_blocks_per_slot
+        self.waiting: List[Request] = []
+        self.slots: List[Optional[Slot]] = [None] * num_slots
+
+    # -- queries ------------------------------------------------------------
+    @property
+    def num_slots(self) -> int:
+        return len(self.slots)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting) or any(s is not None for s in self.slots)
+
+    def active_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is not None]
+
+    # -- submission / admission --------------------------------------------
+    def submit(self, req: Request) -> None:
+        cap = self.max_blocks_per_slot * self.pool.block_size
+        if req.total_tokens > cap:
+            raise ValueError(
+                f"request {req.rid}: {req.total_tokens} tokens exceeds the "
+                f"per-slot capacity {cap}")
+        need = self.pool.blocks_for(req.total_tokens)
+        if need > self.pool.num_blocks:
+            # would never admit -> the engine loop would spin forever
+            raise ValueError(
+                f"request {req.rid}: needs {need} blocks but the pool only "
+                f"has {self.pool.num_blocks}")
+        if not req.prompt:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        self.waiting.append(req)
+
+    def _pick(self, now: float) -> Optional[int]:
+        ready = [i for i, r in enumerate(self.waiting) if r.arrival <= now]
+        if not ready:
+            return None
+        if self.policy == "longest_prefill":
+            return max(ready, key=lambda i: (len(self.waiting[i].prompt),
+                                             -i))
+        return ready[0]
+
+    def admit(self, now: float = float("inf")) -> List[int]:
+        """Admit as many ready requests as slots + blocks allow; returns the
+        newly filled slot indices."""
+        newly: List[int] = []
+        free_slots = [i for i, s in enumerate(self.slots) if s is None]
+        while free_slots and self.waiting:
+            pick = self._pick(now)
+            if pick is None:
+                break
+            req = self.waiting[pick]
+            need = self.pool.blocks_for(req.total_tokens)
+            if not self.pool.can_allocate(need):
+                break                       # head-of-line blocks until frees
+            self.waiting.pop(pick)
+            si = free_slots.pop(0)
+            slot = Slot(req=req, blocks=self.pool.alloc(need),
+                        feed=list(req.prompt))
+            slot.req.admit_time = now if now != float("inf") else 0.0
+            self.slots[si] = slot
+            newly.append(si)
+        return newly
+
+    # -- eviction -----------------------------------------------------------
+    def finish(self, si: int, now: float = 0.0) -> Request:
+        slot = self.slots[si]
+        assert slot is not None, f"finish on empty slot {si}"
+        self.pool.free(slot.blocks)
+        self.slots[si] = None
+        slot.req.finish_time = now
+        return slot.req

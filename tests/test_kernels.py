@@ -1,6 +1,7 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.kernels.flash_attention import flash_attention, reference_attention
@@ -171,4 +172,66 @@ def test_decode_attention_ignores_empty_slots():
     k2 = k.at[:, :, 100:].set(1e4)
     v2 = v.at[:, :, 100:].set(-1e4)
     out2 = decode_attention(q, k2, v2, pos_full, q_pos, bk=64)
+    assert float(jnp.max(jnp.abs(out1 - out2))) == 0.0
+
+
+@pytest.mark.parametrize("S,KV,G,NB,bs,MB,D,window", [
+    (3, 2, 2, 8, 16, 3, 32, 0),
+    (2, 1, 4, 6, 8, 4, 64, 0),
+    (4, 2, 1, 8, 16, 2, 32, 12),    # sliding window
+])
+def test_paged_decode_attention_kernel(S, KV, G, NB, bs, MB, D, window):
+    """Block-table-indexed kernel vs the paged jnp oracle, and the paged
+    oracle vs the contiguous oracle on the gathered layout."""
+    from repro.kernels.decode_attention import (
+        paged_decode_attention, reference_decode_attention,
+        reference_paged_decode_attention)
+    ks = jax.random.split(jax.random.key(S * NB + D), 4)
+    q = jax.random.normal(ks[0], (S, KV, G, D), jnp.float32)
+    kp = jax.random.normal(ks[1], (NB, bs, KV, D), jnp.float32)
+    vp = jax.random.normal(ks[2], (NB, bs, KV, D), jnp.float32)
+    # each slot owns a random prefix of mapped (shuffled) physical blocks
+    rng = np.random.default_rng(S + NB)
+    tables = np.full((S, MB), -1, np.int32)
+    perm = rng.permutation(NB)
+    q_pos = np.zeros((S,), np.int32)
+    off = 0
+    for s in range(S):
+        n = int(rng.integers(1, MB + 1))
+        tables[s, :n] = perm[off:off + n]
+        off += n
+        q_pos[s] = int(rng.integers((n - 1) * bs, n * bs))
+    tables, q_pos = jnp.asarray(tables), jnp.asarray(q_pos)
+    out = paged_decode_attention(q, kp, vp, tables, q_pos, window=window)
+    ref = reference_paged_decode_attention(q, kp, vp, tables, q_pos,
+                                           window=window)
+    assert float(jnp.max(jnp.abs(out - ref))) < 2e-5
+    # cross-check against the contiguous oracle on the gathered layout
+    kc = kp[jnp.maximum(tables, 0)].reshape(S, MB * bs, KV, D)
+    vc = vp[jnp.maximum(tables, 0)].reshape(S, MB * bs, KV, D)
+    pos = jnp.where(jnp.repeat(tables >= 0, bs, axis=1),
+                    jnp.arange(MB * bs)[None], -1)
+    ref2 = reference_decode_attention(q, kc.transpose(0, 2, 1, 3),
+                                      vc.transpose(0, 2, 1, 3), pos, q_pos,
+                                      window=window)
+    assert float(jnp.max(jnp.abs(ref - ref2))) < 2e-5
+
+
+def test_paged_decode_attention_ignores_unmapped_and_stale():
+    """Poisoning unmapped blocks and positions beyond q_pos must not change
+    the output."""
+    from repro.kernels.decode_attention import paged_decode_attention
+    ks = jax.random.split(jax.random.key(9), 3)
+    S, KV, G, NB, bs, MB, D = 1, 1, 2, 4, 16, 3, 32
+    q = jax.random.normal(ks[0], (S, KV, G, D))
+    kp = jax.random.normal(ks[1], (NB, bs, KV, D))
+    vp = jax.random.normal(ks[2], (NB, bs, KV, D))
+    tables = jnp.asarray([[2, 0, -1]], jnp.int32)
+    q_pos = jnp.asarray([20], jnp.int32)          # valid: block 2 + 5 of blk 0
+    out1 = paged_decode_attention(q, kp, vp, tables, q_pos)
+    kp2 = kp.at[1].set(1e4).at[3].set(1e4)        # unmapped blocks
+    vp2 = vp.at[1].set(-1e4).at[3].set(-1e4)
+    kp2 = kp2.at[0, 5:].set(1e4)                  # stale: beyond q_pos
+    vp2 = vp2.at[0, 5:].set(-1e4)
+    out2 = paged_decode_attention(q, kp2, vp2, tables, q_pos)
     assert float(jnp.max(jnp.abs(out1 - out2))) == 0.0
