@@ -9,7 +9,8 @@
 |                             | output of examples/pipeline_table1.py)      |
 | Fig 1-3 loss curves         | table1 (per-stage loss trajectories)        |
 | "~100x comm reduction"      | comm                                        |
-| per-strategy bytes + time   | strategies (event-driven comm simulator)    |
+| codec x strategy x fleet    | strategies (bytes x modeled wall-clock x    |
+| grid (DiLoCoX transport)    | loss-impact, event-driven comm simulator)   |
 | §4.3 drift hypothesis       | drift                                       |
 | TPU deployment (e,g)        | roofline (from the dry-run JSONs)           |
 | engine/step latencies       | micro                                       |
@@ -52,6 +53,12 @@ def main() -> None:
     ap.add_argument("--only", type=str, default=None,
                     help="comma list: micro,comm,strategies,roofline,"
                          "table1,drift,serving")
+    ap.add_argument("--small", action="store_true",
+                    help="CI-smoke sizes (fewer steps, smaller loss runs)")
+    ap.add_argument("--calibration", type=str, default=None,
+                    help="launch.dryrun JSON (e.g. dryrun_outer.json) to "
+                         "calibrate the strategies grid's step time / sync "
+                         "bytes against")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -66,7 +73,8 @@ def main() -> None:
         comm_volume.main()
     if want("strategies"):
         from benchmarks import strategies_bench
-        strategies_bench.main()
+        strategies_bench.main(small=args.small,
+                              calibration_path=args.calibration)
     if want("roofline"):
         from benchmarks import roofline
         roofline.main(csv=True)

@@ -1,65 +1,213 @@
-"""Per-strategy communication benchmark: payload bytes AND modeled time.
+"""Codec × strategy × fleet communication grid: bytes, modeled time, loss.
 
-For each sync strategy (DDP / DiLoCo / Streaming / Overlapped) this emits
-the total boundary traffic over a fixed step budget plus the wall-clock the
-event-driven simulator (``repro.launch.comm_sim``) models for it on the
-production constants (inner step from the analytic roofline at 40% MFU,
-exchange over the ``DCN_BW`` inter-pod boundary).
+For every wire codec (f32 / bf16 / int8) × sync strategy (blocking DiLoCo /
+streaming fragments / overlapped full delta / pipelined DiLoCoX fragments)
+× fleet (homogeneous / heterogeneous per-worker step clocks) this emits the
+total boundary traffic over a fixed step budget plus the wall-clock the
+event-driven simulator (``repro.launch.comm_sim``) models on the
+production constants (inner step from the analytic roofline at 40% MFU —
+or calibrated from a ``launch.dryrun`` JSON via ``--calibration`` — and
+the ``DCN_BW`` inter-pod boundary).  A DDP f32 row anchors the speedups.
 
-CSV rows: ``strategies/<arch>/<strategy>,0.0,<derived>`` with bytes,
-modeled wall-clock, exposed-comm stall, and speedup over DDP.
+The ``loss-impact`` rows then actually TRAIN a tiny model under a sample
+of (codec, strategy) combos on identical data and report the final loss
+against the f32 blocking-DiLoCo baseline — quantization is only a win if
+the loss curve holds, so the grid shows bytes × wall-clock × loss side by
+side.
+
+CSV rows: ``strategies/<arch>/<codec>/<strategy>/<fleet>,0.0,<derived>``
+and ``strategies/loss/<codec>-<strategy>,0.0,<derived>``.
 """
 from __future__ import annotations
+
+import dataclasses
+from typing import Optional
 
 from repro.configs import get_config
 from repro.configs.base import DiLoCoConfig, TRAIN_4K
 from repro.core.sync import (DDPSync, DiLoCoSync, OverlappedSync,
-                             StreamingSync)
+                             PipelinedSync, StreamingSync)
+from repro.core.transport import wire_width
 from repro.launch.analytic import flops_per_device
-from repro.launch.comm_sim import (default_comm_model, modeled_step_time,
-                                   simulate_schedule)
+from repro.launch.comm_sim import (CommCalibration, default_comm_model,
+                                   load_calibration, modeled_step_time,
+                                   simulate_heterogeneous, simulate_schedule)
 
 CHIPS_PER_WORKER = 256   # one pod per DiLoCo worker
+CODECS = ("float32", "bfloat16", "int8")
+# heterogeneous fleet: relative per-worker step-time multipliers (one pod
+# throttled 1.5x, a couple mildly slow — a realistic mixed-generation fleet)
+HET_SPEEDS = (1.0, 1.0, 1.0, 1.0, 1.05, 1.1, 1.25, 1.5)
+
+
+def _strategies(h: int, fragments: int = 4):
+    return [
+        ("blocking", DiLoCoSync()),
+        ("streaming", StreamingSync(num_fragments=fragments)),
+        ("overlapped", OverlappedSync(delay=h // 2)),
+        ("pipelined", PipelinedSync(num_fragments=fragments, delay=h // 2)),
+    ]
+
+
+def _scale_events(events, byte_scale: float):
+    if byte_scale == 1.0:
+        return events
+    return [dataclasses.replace(
+        e, bytes_per_worker=int(e.bytes_per_worker * byte_scale))
+        for e in events]
+
+
+def _byte_scale(calibration: Optional[CommCalibration], n_params: int
+                ) -> float:
+    """Ratio of the HLO-measured outer-exchange wire bytes to the analytic
+    width×n for the dtype the dry-run was compiled with — scales every
+    schedule proportionally (captures sharding/protocol overhead the
+    width×n model misses)."""
+    if calibration is None or not calibration.sync_bytes_per_worker:
+        return 1.0
+    analytic = wire_width(calibration.sync_dtype) * float(n_params)
+    return calibration.sync_bytes_per_worker / analytic
 
 
 def rows_for(arch_id: str, steps: int = 500, h: int = 100,
-             delta_dtype: str = "float32"):
+             calibration: Optional[CommCalibration] = None):
     cfg = get_config(arch_id)
     n = cfg.param_count()
-    dcfg = DiLoCoConfig(h_inner_steps=h, delta_dtype=delta_dtype)
+    k = len(HET_SPEEDS)
     step_time = modeled_step_time(
-        flops_per_device(cfg, TRAIN_4K, CHIPS_PER_WORKER)["total_flops"])
+        flops_per_device(cfg, TRAIN_4K, CHIPS_PER_WORKER)["total_flops"],
+        calibration=calibration)
+    byte_scale = _byte_scale(calibration, n)
     comm = default_comm_model()
-    strategies = [
-        DDPSync(),
-        DiLoCoSync(),
-        StreamingSync(num_fragments=dcfg.num_fragments),
-        OverlappedSync(delay=h // 2),
-    ]
+    staleness = max(h // 4, 1)
+
     out = []
-    ddp_wall = None
-    for strat in strategies:
-        events = strat.payload_schedule(n, steps, dcfg)
-        r = simulate_schedule(events, steps, step_time, comm)
-        r.update(arch=arch_id, strategy=strat.name, params=n,
-                 step_time_s=step_time)
-        if strat.name == "ddp":
-            ddp_wall = r["wall_clock_s"]
-        r["speedup_vs_ddp"] = ddp_wall / r["wall_clock_s"]
-        out.append(r)
+    ddp_events = _scale_events(
+        DDPSync().payload_schedule(n, steps, DiLoCoConfig()), byte_scale)
+    ddp = simulate_schedule(ddp_events, steps, step_time, comm)
+    ddp.update(arch=arch_id, codec="f32", strategy="ddp",
+               fleet="homogeneous", params=n, step_time_s=step_time)
+    out.append(ddp)
+    f32_diloco_bytes = None
+    for codec in CODECS:
+        dcfg = DiLoCoConfig(num_workers=k, h_inner_steps=h,
+                            delta_dtype=codec)
+        for sname, strat in _strategies(h):
+            events = _scale_events(strat.payload_schedule(n, steps, dcfg),
+                                   byte_scale)
+            for fleet in ("homogeneous", "heterogeneous"):
+                if fleet == "homogeneous":
+                    r = simulate_schedule(events, steps, step_time, comm)
+                else:
+                    r = simulate_heterogeneous(
+                        events, steps, [step_time * m for m in HET_SPEEDS],
+                        comm, staleness_steps=staleness)
+                r.update(arch=arch_id, codec=events[0].codec if events
+                         else "f32", strategy=sname, fleet=fleet, params=n,
+                         step_time_s=step_time)
+                if codec == "float32" and sname == "blocking":
+                    f32_diloco_bytes = r["total_bytes"]
+                r["speedup_vs_ddp"] = (ddp["wall_clock_s"]
+                                       / r["wall_clock_s"])
+                r["xbytes_vs_f32_diloco"] = (
+                    f32_diloco_bytes / max(r["total_bytes"], 1.0))
+                out.append(r)
     return out
 
 
-def main(arch_id: str = "nanochat-d20", steps: int = 500) -> None:
+# ---------------------------------------------------------------------------
+# Loss impact — tiny real runs on identical data
+# ---------------------------------------------------------------------------
+
+LOSS_COMBOS = (
+    ("float32", "blocking"),      # baseline
+    ("bfloat16", "blocking"),
+    ("int8", "blocking"),
+    ("int8", "overlapped"),
+    ("int8", "pipelined"),
+)
+
+
+def loss_impact_rows(steps: int = 24, workers: int = 2, h: int = 4):
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import ModelConfig, OptimizerConfig
+    from repro.core import DistTrainer
+    from repro.models.transformer import build_model, init_params
+
+    cfg = ModelConfig(name="lossgrid", num_layers=2, d_model=64, num_heads=4,
+                      num_kv_heads=4, d_ff=128, vocab_size=128)
+    model = build_model(cfg)
+    params, _ = init_params(cfg, jax.random.key(0))
+    opt = OptimizerConfig(total_steps=steps, warmup_steps=0,
+                          schedule="constant", learning_rate=0.02,
+                          adam_lr=1e-3)
+
+    def data(step):
+        key = jax.random.key(1000 + step)
+        toks = jax.random.randint(key, (workers, 4, 16), 0, cfg.vocab_size)
+        return {"tokens": toks, "labels": (toks + 1) % cfg.vocab_size}
+
+    strat_by_name = dict(_strategies(h, fragments=2))
+
+    rows = []
+    base_loss = None
+    for codec, sname in LOSS_COMBOS:
+        dcfg = DiLoCoConfig(num_workers=workers, h_inner_steps=h,
+                            delta_dtype=codec)
+        dt = DistTrainer(model.loss, opt, dcfg, strat_by_name[sname])
+        state = dt.init(params)
+        state, hist = dt.run(state, data, steps)
+        final = hist["loss"][-1]
+        if base_loss is None:
+            base_loss = final
+        rows.append({"codec": codec, "strategy": sname, "final_loss": final,
+                     "vs_f32_frac": (final - base_loss) / base_loss})
+    return rows
+
+
+def main(arch_id: str = "nanochat-d20", steps: int = 500,
+         small: bool = False, calibration_path: Optional[str] = None,
+         loss_impact: bool = True) -> None:
+    cal = load_calibration(calibration_path, arch=arch_id) \
+        if calibration_path else None
+    if small:
+        steps, h = 60, 20
+    else:
+        h = 100
     print("name,us_per_call,derived")
-    for r in rows_for(arch_id, steps):
-        print(f"strategies/{r['arch']}/{r['strategy']},0.0,"
-              f"bytes={r['total_bytes']/1e9:.2f}GB "
+    if calibration_path and cal is None:
+        print(f"strategies/calibration,0.0,WARNING: {calibration_path} "
+              f"unreadable or has no usable entries for {arch_id} — "
+              f"falling back to the analytic 40%-MFU model")
+    if cal is not None:
+        scale = _byte_scale(cal, get_config(arch_id).param_count())
+        print(f"strategies/calibration,0.0,source={cal.source} "
+              f"step_time_s={cal.step_time_s} "
+              f"sync_bytes={cal.sync_bytes_per_worker} "
+              f"sync_dtype={cal.sync_dtype} byte_scale={scale:.3f}")
+    for r in rows_for(arch_id, steps, h=h, calibration=cal):
+        extra = ""
+        if "xbytes_vs_f32_diloco" in r:
+            extra = (f" xbytes_vs_f32_diloco="
+                     f"{r['xbytes_vs_f32_diloco']:.1f}x")
+        if "straggler_s" in r:
+            extra += f" straggler={r['straggler_s']:.1f}s"
+        print(f"strategies/{r['arch']}/{r['codec']}/{r['strategy']}/"
+              f"{r['fleet']},0.0,"
+              f"bytes={r['total_bytes']/1e9:.3f}GB "
               f"wall={r['wall_clock_s']:.1f}s "
               f"compute={r['compute_s']:.1f}s "
               f"stall={r['stall_s']:.1f}s "
               f"overhead={100 * r['overhead_frac']:.1f}% "
-              f"speedup_vs_ddp={r['speedup_vs_ddp']:.2f}x")
+              f"speedup_vs_ddp={r.get('speedup_vs_ddp', 1.0):.2f}x"
+              + extra)
+    if loss_impact:
+        lsteps = 16 if small else 24
+        for r in loss_impact_rows(steps=lsteps):
+            print(f"strategies/loss/{r['codec']}-{r['strategy']},0.0,"
+                  f"final_loss={r['final_loss']:.4f} "
+                  f"vs_f32={100 * r['vs_f32_frac']:+.2f}%")
 
 
 if __name__ == "__main__":

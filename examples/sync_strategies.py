@@ -13,7 +13,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import DiLoCoConfig, ModelConfig, OptimizerConfig
 from repro.core import (DDPSync, DiLoCoSync, DistTrainer, OverlappedSync,
-                        StreamingSync)
+                        PipelinedSync, StreamingSync)
 from repro.data import PackedDataset, build_tokenizer, synthetic
 from repro.launch.comm_sim import default_comm_model, simulate_schedule
 from repro.models.transformer import build_model, init_params
@@ -46,6 +46,8 @@ def main():
         return {k: jnp.asarray(v)[None] for k, v in b.items()}
 
     dcfg = DiLoCoConfig(num_workers=WORKERS, h_inner_steps=H)
+    int8_cfg = DiLoCoConfig(num_workers=WORKERS, h_inner_steps=H,
+                            delta_dtype="int8")
     ddp_cfg = DiLoCoConfig(num_workers=1, h_inner_steps=1, outer_lr=1.0,
                            outer_momentum=0.0, nesterov=False)
     runs = [
@@ -53,6 +55,9 @@ def main():
         ("diloco", DiLoCoSync(), dcfg, worker_data),
         ("streaming", StreamingSync(num_fragments=4), dcfg, worker_data),
         ("overlapped", OverlappedSync(delay=3, jitter=2), dcfg, worker_data),
+        # DiLoCoX shape: int8 fragments, one per round, overlapped apply
+        ("pipelined8", PipelinedSync(num_fragments=4, delay=3), int8_cfg,
+         worker_data),
     ]
     comm = default_comm_model()
     step_time = 0.25  # assumed inner-step seconds on the production fleet

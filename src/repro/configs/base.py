@@ -172,18 +172,25 @@ class DiLoCoConfig:
     outer_momentum: float = 0.9       # mu_outer (Nesterov)
     nesterov: bool = True
     # --- beyond-paper knobs ------------------------------------------------
-    delta_dtype: str = "float32"      # float32 | bfloat16 | int8 (compressed sync)
+    delta_dtype: str = "float32"      # float32 | bfloat16 | int8: the outer
+                                      # sync's wire codec (core.transport)
+    error_feedback: bool = True       # lossy codecs carry a per-worker
+                                      # residual so quantization noise
+                                      # cannot bias the outer optimizer
     drift_aware: bool = False         # drift-weighted averaging (paper §5 future work)
     adaptive_h: bool = False          # adaptive H schedule (paper §5 future work)
     h_min: int = 10
     h_max: int = 200
     # --- sync-strategy runtime (repro.core.sync / DistTrainer) -------------
     strategy: str = "diloco"          # ddp | diloco | streaming | overlapped
-    num_fragments: int = 4            # streaming: F fragments, one per H/F slot
-    sync_delay: int = 0               # overlapped: steps between delta capture
-                                      # and outer-update application
+                                      # | pipelined (DiLoCoX-style fragments)
+    num_fragments: int = 4            # streaming/pipelined: F fragments
+    sync_delay: int = 0               # overlapped/pipelined: steps between
+                                      # delta capture and outer application
     h_jitter: int = 0                 # overlapped: max per-worker straggler
                                       # jitter (inner steps) on delta capture
+    sync_seed: int = 0                # seeds the per-worker straggler jitter
+                                      # draws (reproducible runs)
 
 
 @dataclass(frozen=True)

@@ -9,8 +9,11 @@ from repro.core.grpo import GRPOTrainer, arith_reward_fn, grpo_loss
 from repro.core.streaming import (StreamingDiLoCoTrainer, fragment_masks,
                                   run_streaming_diloco)
 from repro.core.sync import (DDPSync, DiLoCoSync, OverlappedSync,
-                             StreamingSync, SyncEvent, SyncStrategy,
-                             make_strategy)
+                             PipelinedSync, StreamingSync, SyncEvent,
+                             SyncStrategy, make_strategy)
+from repro.core.transport import (BF16Cast, Codec, F32Passthrough,
+                                  Int8Symmetric, OuterPayload, Transport,
+                                  make_codec)
 from repro.core.dist_trainer import DistTrainer
 from repro.core import drift, outer_opt
 
@@ -20,4 +23,6 @@ __all__ = ["DiLoCoTrainer", "DiLoCoState", "run_diloco", "DDPTrainer",
            "StreamingDiLoCoTrainer", "fragment_masks",
            "run_streaming_diloco", "DistTrainer", "SyncStrategy", "SyncEvent",
            "DDPSync", "DiLoCoSync", "StreamingSync", "OverlappedSync",
-           "make_strategy"]
+           "PipelinedSync", "make_strategy", "Codec", "OuterPayload",
+           "Transport", "F32Passthrough", "BF16Cast", "Int8Symmetric",
+           "make_codec"]

@@ -91,18 +91,38 @@ class DiLoCoTrainer:
                 loss, metrics)
 
     # -- outer step ----------------------------------------------------------
-    def outer_step(self, state: DiLoCoState) -> DiLoCoState:
+    def init_residual(self, params):
+        """Per-worker (K, ...) error-feedback residual for lossy codecs, or
+        None when the codec is lossless / error feedback is disabled.  Held
+        host-side by the sync runners, NOT in ``DiLoCoState`` — checkpoints
+        and the multi-pod abstract state stay unchanged."""
+        from repro.core.transport import make_codec
+        if not (self.cfg.error_feedback
+                and make_codec(self.cfg.delta_dtype).lossy):
+            return None
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        return _broadcast(zeros, self.cfg.num_workers)
+
+    def outer_step_ef(self, state: DiLoCoState, residual=None):
+        """Outer sync through the codec transport with an optional
+        error-feedback residual; returns (new state, new residual)."""
         delta = jax.tree.map(
             lambda w, g: w.astype(jnp.float32) - g.astype(jnp.float32)[None],
             state.worker_params, state.global_params)
-        avg = outer_opt.average_deltas(delta, self.cfg, self.replicate_fn)
+        avg, new_residual = outer_opt.exchange_and_average(
+            delta, self.cfg, self.replicate_fn, residual=residual)
         new_global, new_outer = outer_opt.outer_update(
             state.global_params, avg, state.outer, self.cfg)
         # re-broadcast the synchronized params; inner optimizer state is kept
         # per-worker across syncs (paper §3 — AdamW/Muon state is local)
         new_wp = _broadcast(new_global, self.cfg.num_workers)
         return state._replace(global_params=new_global,
-                              worker_params=new_wp, outer=new_outer)
+                              worker_params=new_wp,
+                              outer=new_outer), new_residual
+
+    def outer_step(self, state: DiLoCoState) -> DiLoCoState:
+        return self.outer_step_ef(state)[0]
 
     # -- jitted entry points ---------------------------------------------------
     def jit_steps(self):
@@ -111,9 +131,9 @@ class DiLoCoTrainer:
     # -- communication accounting (paper: "communication reduced ~100x") ------
     def bytes_per_sync(self, params) -> int:
         """Bytes each worker ships per outer sync (payload dtype)."""
-        width = {"float32": 4, "bfloat16": 2, "int8": 1}[self.cfg.delta_dtype]
+        from repro.core.transport import wire_width
         n = sum(x.size for x in jax.tree.leaves(params))
-        return n * width
+        return n * wire_width(self.cfg.delta_dtype)
 
     def ddp_bytes_per_step(self, params) -> int:
         """What synchronous DDP would ship per *inner* step (fp32 grads)."""

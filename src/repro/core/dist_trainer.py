@@ -12,11 +12,14 @@ recording, eval hooks, history.  ``run_ddp`` / ``run_diloco`` /
 
 History keys: ``step`` / ``loss`` (every ``record_every``), ``sync_steps``
 (full outer exchanges), ``frag_syncs`` (``(step, fragment)`` pairs),
-``evals`` (``(step, eval_fn(global_params))`` pairs).
+``evals`` (``(step, eval_fn(global_params))`` pairs), ``step_seconds``
+(median measured seconds per inner step — robust to jit-compile spikes;
+feeds the comm simulator's calibration).
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -63,6 +66,8 @@ class DistTrainer:
             for key, val in recs:
                 history[key].append(val)
 
+        step_durations = []
+        t_prev = time.time()
         for step in range(num_steps):
             state, loss, _ = inner_jit(state, data_fn(step))
             loss_mean = float(jnp.mean(loss))
@@ -71,11 +76,21 @@ class DistTrainer:
                 history["loss"].append(loss_mean)
             state, recs = runner.after_step(state, step, loss_mean)
             record(recs)
+            # loss_mean + after_step forced this step (and any sync it
+            # triggered) to complete before the clock is read
+            t_now = time.time()
+            step_durations.append(t_now - t_prev)
+            t_prev = t_now
             if eval_fn is not None and eval_every and (step + 1) % eval_every == 0:
                 state = runner.refresh(state)
                 history["evals"].append((step, eval_fn(state.global_params)))
         state, recs = runner.finalize(state, num_steps)
         record(recs)
+        # measured steady-state seconds/step: the median is robust to the
+        # one-off jit-compile spikes (inner step at 0, outer step at the
+        # first sync) that a mean over a short run would smear in
+        history["step_seconds"] = sorted(step_durations)[
+            len(step_durations) // 2] if step_durations else 0.0
         return state, history
 
     # -- communication accounting -------------------------------------------

@@ -7,16 +7,13 @@ The outer step (paper §2.2):
     v_{t+1} = μ v_t + Δθ̄
     θ_{t+1} = θ_t + η v_{t+1}      (Nesterov variant applies μ v + Δθ̄ lookahead)
 
-Beyond-paper extensions (both listed as future work in §5):
-
-* **Delta compression** — quantize Δθ_i to bf16/int8 before the cross-worker
-  exchange.  In the mesh implementation the quantized stacked deltas are
-  explicitly resharded to replicated, which forces the all-gather to move the
-  *narrow* dtype on the wire (2–4× fewer inter-pod bytes on top of DiLoCo's
-  ~H× reduction).
-* **Drift-aware averaging** — weight workers by the cosine alignment of their
-  delta with the mean delta, down-weighting stragglers/outliers:
-  w_i = softmax(τ · cos(Δθ_i, Δθ̄)).
+The cross-worker exchange itself lives in ``repro.core.transport``: deltas
+are encoded into ``OuterPayload`` objects by a pluggable ``Codec``
+(f32 passthrough / bf16 cast / symmetric int8 with per-tensor scales and
+error-feedback residuals), shipped over the replicate hop in the wire
+dtype, and decoded back to f32 before the averaging below.  This module
+keeps the *optimizer* semantics: plain vs drift-aware averaging and the
+Nesterov outer update.
 """
 from __future__ import annotations
 
@@ -26,10 +23,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import DiLoCoConfig
+from repro.core.transport import Transport, make_codec, wire_width
 
-# wire width (bytes/element) of each supported delta payload dtype — shared
-# by the trainers' byte accounting and the strategies' payload schedules
-DELTA_WIDTH = {"float32": 4, "bfloat16": 2, "int8": 1}
+# wire width (bytes/element) of each supported delta payload dtype — a
+# compat view of the transport table for older byte-accounting calls
+DELTA_WIDTH = {d: wire_width(d) for d in ("float32", "bfloat16", "int8")}
 
 
 class OuterState(NamedTuple):
@@ -44,31 +42,24 @@ def init_outer_state(params) -> OuterState:
 
 
 # ---------------------------------------------------------------------------
-# Delta compression
+# Transport construction + compat wrappers
 # ---------------------------------------------------------------------------
 
+def make_transport(cfg: DiLoCoConfig, replicate_fn=None) -> Transport:
+    """The transport the config describes.  The Pallas quantize kernels are
+    used on the single-device simulation path; mesh paths (``replicate_fn``
+    set) fall back to the jnp oracle, which XLA partitions like any other
+    elementwise code."""
+    codec = make_codec(cfg.delta_dtype, use_kernel=replicate_fn is None)
+    return Transport(codec, replicate_fn)
+
+
 def quantize_delta(delta, dtype: str):
-    """Per-tensor symmetric quantization of a (K, ...) stacked delta tree.
-    Returns (payload_tree, scales_tree) — the payload is what crosses the
-    inter-pod link."""
-    if dtype == "float32":
-        return delta, None
-    if dtype == "bfloat16":
-        return jax.tree.map(lambda d: d.astype(jnp.bfloat16), delta), None
-    if dtype == "int8":
-        def q(d):
-            amax = jnp.max(jnp.abs(d), axis=tuple(range(1, d.ndim)),
-                           keepdims=True)
-            scale = jnp.maximum(amax, 1e-12) / 127.0
-            return (jnp.clip(jnp.round(d / scale), -127, 127)
-                    .astype(jnp.int8), scale)
-        out = jax.tree.map(q, delta)
-        payload = jax.tree.map(lambda o: o[0], out,
-                               is_leaf=lambda x: isinstance(x, tuple))
-        scales = jax.tree.map(lambda o: o[1], out,
-                              is_leaf=lambda x: isinstance(x, tuple))
-        return payload, scales
-    raise ValueError(dtype)
+    """Compat wrapper: per-tensor symmetric quantization of a (K, ...)
+    stacked delta tree via the codec's jnp oracle.  Returns
+    (payload_tree, scales_tree)."""
+    payload, _ = make_codec(dtype, use_kernel=False).encode(delta)
+    return payload.data, payload.scales
 
 
 def dequantize_delta(payload, scales):
@@ -87,36 +78,8 @@ def _tree_dot(a, b) -> jax.Array:
                for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
 
 
-def average_deltas(stacked_delta, cfg: DiLoCoConfig,
-                   replicate_fn=None) -> Any:
-    """(K, ...) stacked per-worker deltas -> averaged delta pytree.
-
-    ``replicate_fn(tree)`` reshards the stacked payload to replicated — on a
-    pod mesh this is where the inter-pod all-gather happens (in the payload
-    dtype).  On a single device it is the identity.
-    """
-    payload, scales = quantize_delta(stacked_delta, cfg.delta_dtype)
-    if replicate_fn is not None:
-        if cfg.delta_dtype == "bfloat16":
-            # bitcast to u16 around the exchange: XLA may otherwise fold the
-            # f32->bf16->f32 convert pair into the gather's producer and move
-            # full-width f32 on the wire (observed on the CPU backend)
-            payload = jax.tree.map(
-                lambda x: jax.lax.bitcast_convert_type(x, jnp.uint16), payload)
-        if cfg.delta_dtype != "float32":
-            # keep the narrow payload opaque so XLA cannot fold the
-            # dequant-convert into the producer and all-gather f32 instead
-            # (it legally can: s8 roundtrip == round+clamp in f32)
-            payload = jax.lax.optimization_barrier(payload)
-        payload = replicate_fn(payload)
-        if cfg.delta_dtype == "bfloat16":
-            payload = jax.tree.map(
-                lambda x: jax.lax.bitcast_convert_type(x, jnp.bfloat16),
-                payload)
-        if scales is not None:
-            scales = replicate_fn(scales)
-    delta = dequantize_delta(payload, scales)
-
+def _average(delta, cfg: DiLoCoConfig) -> Any:
+    """Decoded f32 (K, ...) stacked deltas -> averaged delta pytree."""
     if not cfg.drift_aware:
         return jax.tree.map(lambda d: jnp.mean(d, axis=0), delta)
 
@@ -134,6 +97,32 @@ def average_deltas(stacked_delta, cfg: DiLoCoConfig,
     w = jax.nn.softmax(4.0 * cos)                       # (K,)
     return jax.tree.map(
         lambda d: jnp.tensordot(w, d.astype(jnp.float32), axes=(0, 0)), delta)
+
+
+def exchange_and_average(stacked_delta, cfg: DiLoCoConfig, replicate_fn=None,
+                         residual=None, kind: str = "delta",
+                         fragment: int = -1) -> Tuple[Any, Optional[Any]]:
+    """Full outer-sync data path: encode -> ship -> decode -> average.
+
+    ``residual`` is the per-worker error-feedback carry for lossy codecs
+    (None disables error feedback); returns (averaged delta, new residual).
+    """
+    transport = make_transport(cfg, replicate_fn)
+    full, new_residual = transport.exchange(stacked_delta, residual,
+                                            kind=kind, fragment=fragment)
+    return _average(full, cfg), new_residual
+
+
+def average_deltas(stacked_delta, cfg: DiLoCoConfig,
+                   replicate_fn=None) -> Any:
+    """(K, ...) stacked per-worker deltas -> averaged delta pytree.
+
+    ``replicate_fn(tree)`` reshards the stacked payload to replicated — on a
+    pod mesh this is where the inter-pod all-gather happens (in the payload
+    dtype).  On a single device it is the identity.
+    """
+    avg, _ = exchange_and_average(stacked_delta, cfg, replicate_fn)
+    return avg
 
 
 # ---------------------------------------------------------------------------

@@ -77,12 +77,20 @@ class StreamingDiLoCoTrainer(DiLoCoTrainer):
         """Steps between fragment syncs (every fragment syncs each H)."""
         return max(self.cfg.h_inner_steps // self.num_fragments, 1)
 
-    def outer_step_fragment(self, state: DiLoCoState, mask) -> DiLoCoState:
+    def outer_step_fragment_ef(self, state: DiLoCoState, mask, residual=None):
+        """One fragment's outer sync through the codec transport.  The
+        error-feedback residual is masked on the way in and merged on the
+        way out, so each element's carry only ever reflects its own
+        fragment's quantization error.  Returns (state, new residual)."""
         delta = jax.tree.map(
             lambda w, g, m: (w.astype(jnp.float32)
                              - g.astype(jnp.float32)[None]) * m[None],
             state.worker_params, state.global_params, mask)
-        avg = outer_opt.average_deltas(delta, self.cfg, self.replicate_fn)
+        res_in = residual if residual is None else jax.tree.map(
+            lambda r, m: r * m[None], residual, mask)
+        avg, new_res = outer_opt.exchange_and_average(
+            delta, self.cfg, self.replicate_fn, residual=res_in,
+            kind="fragment")
         new_global, new_outer = outer_opt.outer_update(
             state.global_params, avg, state.outer, self.cfg)
         # merge: fragment slots take the synced value, others keep global
@@ -93,12 +101,20 @@ class StreamingDiLoCoTrainer(DiLoCoTrainer):
         new_wp = jax.tree.map(
             lambda w, ng, m: jnp.where(m[None], ng[None].astype(w.dtype), w),
             state.worker_params, new_global, mask)
+        if residual is not None:
+            new_res = jax.tree.map(
+                lambda nr, r, m: jnp.where(m[None], nr, r), new_res, residual,
+                mask)
         return state._replace(global_params=new_global,
-                              worker_params=new_wp, outer=new_outer)
+                              worker_params=new_wp, outer=new_outer), new_res
+
+    def outer_step_fragment(self, state: DiLoCoState, mask) -> DiLoCoState:
+        return self.outer_step_fragment_ef(state, mask)[0]
 
     def bytes_per_fragment_sync(self, params, mask) -> int:
-        width = {"float32": 4, "bfloat16": 2, "int8": 1}[self.cfg.delta_dtype]
-        return int(sum(int(m.sum()) for m in jax.tree.leaves(mask)) * width)
+        from repro.core.transport import wire_width
+        return int(sum(int(m.sum()) for m in jax.tree.leaves(mask))
+                   * wire_width(self.cfg.delta_dtype))
 
 
 def run_streaming_diloco(trainer: StreamingDiLoCoTrainer, state, data_fn,

@@ -16,7 +16,13 @@ in ``repro.core.dist_trainer``) drives vmapped inner steps, and a
                        update lands at *t+delay*, hiding the exchange
                        behind inner compute; per-worker H jitter emulates
                        asynchronous / straggler workers (the delta of a
-                       straggler reflects fewer inner steps).
+                       straggler reflects fewer inner steps),
+* ``PipelinedSync``  — the DiLoCoX shape (arXiv:2506.21263): ONE fragment
+                       per outer round, captured at the boundary and
+                       applied ``delay`` steps later.  Each parameter syncs
+                       every F·H steps, so combined with the int8 codec the
+                       boundary traffic drops another ~4F× below f32
+                       DiLoCo at unchanged compute.
 
 A strategy has two faces:
 
@@ -25,6 +31,19 @@ A strategy has two faces:
 2. ``payload_schedule(n_params, num_steps, cfg) -> [SyncEvent]`` — the pure
    communication footprint, consumed by the event-driven wall-clock
    simulator in ``repro.launch.comm_sim``.
+
+Transport-layer contract (see ``repro.core.transport`` for the wire format)
+---------------------------------------------------------------------------
+Strategies never ship raw f32 pytrees.  Every exchange goes delta ->
+``Codec.encode`` -> ``OuterPayload`` (wire-dtype data + per-tensor scales)
+-> ``Transport.ship`` (the replicate hop, narrow dtype on the wire) ->
+``Codec.decode`` -> averaged f32 — that path is
+``outer_opt.exchange_and_average``, which every engine outer step calls.
+Runners own the codec's per-worker error-feedback residual (created by
+``engine.init_residual``; None for lossless codecs), thread it through
+each ``*_ef`` outer step, and the payload schedules report bytes in the
+codec's wire width with the codec name stamped on each ``SyncEvent`` so
+the simulator can account bytes per codec.
 
 Adding a new sync variant means implementing those two methods (~50 lines),
 not writing a new training loop.
@@ -40,8 +59,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import DiLoCoConfig
 from repro.core import outer_opt
-from repro.core.outer_opt import DELTA_WIDTH
 from repro.core.schedule import FixedH, HSchedule
+from repro.core.transport import make_codec
 
 # history records a runner can emit: (history_key, value) pairs
 Records = List[Tuple[str, Any]]
@@ -54,13 +73,15 @@ class SyncEvent:
     ``step`` is the inner step after which the payload leaves the worker;
     ``apply_step`` is the step by which the result must have landed (equal
     to ``step`` for blocking strategies, later for overlapped ones — the
-    gap is the window the transfer may hide behind compute).
+    gap is the window the transfer may hide behind compute).  ``codec``
+    names the wire codec so the simulator can account bytes per codec.
     """
     step: int
     bytes_per_worker: int
     kind: str                   # "grads" | "delta" | "fragment"
     apply_step: int
     fragment: int = -1
+    codec: str = "f32"
 
 
 class SyncRunner:
@@ -133,21 +154,26 @@ class DDPSync(SyncStrategy):
 # ---------------------------------------------------------------------------
 
 class _DiLoCoRunner(SyncRunner):
-    def __init__(self, engine, hs: HSchedule):
+    def __init__(self, engine, params, hs: HSchedule):
         self.hs = hs
         self.since = 0
-        self._outer = jax.jit(engine.outer_step)
+        self.residual = engine.init_residual(params)
+        self._outer = jax.jit(engine.outer_step_ef)
+
+    def _sync(self, state):
+        state, self.residual = self._outer(state, self.residual)
+        return state
 
     def after_step(self, state, step, loss):
         self.since += 1
         if self.hs.should_sync(step, self.since, loss):
             self.since = 0
-            return self._outer(state), [("sync_steps", step)]
+            return self._sync(state), [("sync_steps", step)]
         return state, []
 
     def finalize(self, state, num_steps):
         if self.since:  # trailing sync so global_params reflect all work
-            return self._outer(state), [("sync_steps", num_steps - 1)]
+            return self._sync(state), [("sync_steps", num_steps - 1)]
         return state, []
 
 
@@ -164,13 +190,14 @@ class DiLoCoSync(SyncStrategy):
 
     def bind(self, engine, params) -> SyncRunner:
         hs = self.h_schedule or FixedH(self.h or engine.cfg.h_inner_steps)
-        return _DiLoCoRunner(engine, hs)
+        return _DiLoCoRunner(engine, params, hs)
 
     def payload_schedule(self, n_params, num_steps, cfg):
         h = self.h or cfg.h_inner_steps
-        b = DELTA_WIDTH[cfg.delta_dtype] * n_params
+        codec = make_codec(cfg.delta_dtype)
+        b = codec.schedule_bytes(n_params)
         return [SyncEvent(step=s, bytes_per_worker=b, kind="delta",
-                          apply_step=s)
+                          apply_step=s, codec=codec.name)
                 for s in range(h - 1, num_steps, h)]
 
 
@@ -184,12 +211,15 @@ class _StreamingRunner(SyncRunner):
         self.F = engine.num_fragments
         self.masks = fragment_masks(params, self.F)
         self.period = engine.fragment_schedule()
-        self._frag = jax.jit(engine.outer_step_fragment)
+        self.residual = engine.init_residual(params)
+        self._frag = jax.jit(engine.outer_step_fragment_ef)
 
     def after_step(self, state, step, loss):
         if (step + 1) % self.period == 0:
             f = ((step + 1) // self.period - 1) % self.F
-            return self._frag(state, self.masks[f]), [("frag_syncs", (step, f))]
+            state, self.residual = self._frag(state, self.masks[f],
+                                              self.residual)
+            return state, [("frag_syncs", (step, f))]
         return state, []
 
 
@@ -206,11 +236,13 @@ class StreamingSync(SyncStrategy):
     def payload_schedule(self, n_params, num_steps, cfg):
         h = cfg.h_inner_steps
         period = max(h // self.num_fragments, 1)
-        b = DELTA_WIDTH[cfg.delta_dtype] * (n_params // self.num_fragments)
+        codec = make_codec(cfg.delta_dtype)
+        b = codec.schedule_bytes(n_params // self.num_fragments)
         return [SyncEvent(step=s, bytes_per_worker=b, kind="fragment",
                           # a fragment may stream until its next slot
                           apply_step=s + period - 1,
-                          fragment=((s + 1) // period - 1) % self.num_fragments)
+                          fragment=((s + 1) // period - 1) % self.num_fragments,
+                          codec=codec.name)
                 for s in range(period - 1, num_steps, period)]
 
 
@@ -225,7 +257,8 @@ class _OverlappedRunner(SyncRunner):
     at apply time worker i becomes  new_global + (w_now_i − snap_i).
     With delay=0 and jitter=0 this is exactly ``DiLoCoSync``."""
 
-    def __init__(self, engine, h: int, delay: int, jitter: int, seed: int):
+    def __init__(self, engine, params, h: int, delay: int, jitter: int,
+                 seed: int):
         if not 0 <= delay < h:
             raise ValueError(f"need 0 <= delay < h, got delay={delay} h={h}")
         if jitter < 0 or jitter + delay >= h:
@@ -241,11 +274,12 @@ class _OverlappedRunner(SyncRunner):
         self.buf = None                 # snapshot buffer being filled
         self.pending = None             # frozen snapshot awaiting apply
         self.pending_apply = -1
+        self.residual = engine.init_residual(params)
         self._snap_row = jax.jit(
             lambda buf, wp, i: jax.tree.map(
                 lambda b, w: b.at[i].set(w[i]), buf, wp))
         self._apply = jax.jit(self._apply_impl)
-        self._outer = jax.jit(engine.outer_step)
+        self._outer = jax.jit(engine.outer_step_ef)
 
     def _draw_snap_steps(self) -> Dict[int, int]:
         """Worker i's delta leaves jitter_i steps before the boundary — a
@@ -254,12 +288,13 @@ class _OverlappedRunner(SyncRunner):
                 - (self.rng.randint(0, self.jitter) if self.jitter else 0)
                 for i in range(self.k)}
 
-    def _apply_impl(self, state, snap):
+    def _apply_impl(self, state, snap, residual):
         cfg = self.engine.cfg
         delta = jax.tree.map(
             lambda s, g: s.astype(jnp.float32) - g.astype(jnp.float32)[None],
             snap, state.global_params)
-        avg = outer_opt.average_deltas(delta, cfg, self.engine.replicate_fn)
+        avg, new_res = outer_opt.exchange_and_average(
+            delta, cfg, self.engine.replicate_fn, residual=residual)
         new_global, new_outer = outer_opt.outer_update(
             state.global_params, avg, state.outer, cfg)
         # carry forward the inner progress made while the exchange was in
@@ -270,7 +305,7 @@ class _OverlappedRunner(SyncRunner):
                               ).astype(w.dtype),
             state.worker_params, snap, new_global)
         return state._replace(global_params=new_global,
-                              worker_params=new_wp, outer=new_outer)
+                              worker_params=new_wp, outer=new_outer), new_res
 
     def after_step(self, state, step, loss):
         records: Records = []
@@ -289,7 +324,8 @@ class _OverlappedRunner(SyncRunner):
             self.round_end += self.h
             self.snap_steps = self._draw_snap_steps()
         if self.pending is not None and step >= self.pending_apply:
-            state = self._apply(state, self.pending)
+            state, self.residual = self._apply(state, self.pending,
+                                               self.residual)
             self.pending = None
             records.append(("sync_steps", step))
         return state, records
@@ -297,11 +333,12 @@ class _OverlappedRunner(SyncRunner):
     def finalize(self, state, num_steps):
         records: Records = []
         if self.pending is not None:  # flush the in-flight round
-            state = self._apply(state, self.pending)
+            state, self.residual = self._apply(state, self.pending,
+                                               self.residual)
             self.pending = None
             records.append(("sync_steps", num_steps - 1))
         if num_steps % self.h:        # trailing partial round: full sync
-            state = self._outer(state)
+            state, self.residual = self._outer(state, self.residual)
             records.append(("sync_steps", num_steps - 1))
         return state, records
 
@@ -309,7 +346,10 @@ class _OverlappedRunner(SyncRunner):
 @dataclasses.dataclass(frozen=True)
 class OverlappedSync(SyncStrategy):
     """Streaming DiLoCo's overlapping communication for the *full* delta:
-    capture at t, apply at t+delay, with per-worker straggler jitter."""
+    capture at t, apply at t+delay, with per-worker straggler jitter.
+
+    ``seed`` makes the jitter draws reproducible; ``make_strategy`` threads
+    ``DiLoCoConfig.sync_seed`` here."""
     name = "overlapped"
     h: Optional[int] = None
     delay: int = 0
@@ -318,13 +358,131 @@ class OverlappedSync(SyncStrategy):
 
     def bind(self, engine, params) -> SyncRunner:
         h = self.h or engine.cfg.h_inner_steps
-        return _OverlappedRunner(engine, h, self.delay, self.jitter, self.seed)
+        return _OverlappedRunner(engine, params, h, self.delay, self.jitter,
+                                 self.seed)
 
     def payload_schedule(self, n_params, num_steps, cfg):
         h = self.h or cfg.h_inner_steps
-        b = DELTA_WIDTH[cfg.delta_dtype] * n_params
+        codec = make_codec(cfg.delta_dtype)
+        b = codec.schedule_bytes(n_params)
         return [SyncEvent(step=s, bytes_per_worker=b, kind="delta",
-                          apply_step=s + self.delay)
+                          apply_step=s + self.delay, codec=codec.name)
+                for s in range(h - 1, num_steps, h)]
+
+
+# ---------------------------------------------------------------------------
+# Pipelined (DiLoCoX) — ONE quantized fragment per round, delayed apply
+# ---------------------------------------------------------------------------
+
+class _PipelinedRunner(SyncRunner):
+    """One fragment per outer round: at each H boundary the round's
+    fragment (round mod F) is snapshotted, its encoded delta crosses the
+    boundary while inner compute continues, and the outer update lands
+    ``delay`` steps later.  Worker progress made in flight is carried
+    forward on the fragment slots (like ``_OverlappedRunner``); the other
+    slots keep diverging until their round comes up.  With F=1, delay=0
+    this is exactly ``DiLoCoSync``."""
+
+    def __init__(self, engine, params, h: int, delay: int, num_fragments: int):
+        if not 0 <= delay < h:
+            raise ValueError(f"need 0 <= delay < h, got delay={delay} h={h}")
+        from repro.core.streaming import fragment_masks
+        self.engine = engine
+        self.h, self.delay, self.F = h, delay, num_fragments
+        self.masks = fragment_masks(params, num_fragments)
+        self.residual = engine.init_residual(params)
+        self.round = 0
+        self.pending = None             # (snapshot, fragment) awaiting apply
+        self.pending_apply = -1
+        self._apply = jax.jit(self._apply_impl, static_argnames=("frag",))
+        self._outer = jax.jit(engine.outer_step_ef)
+
+    def _apply_impl(self, state, snap, residual, *, frag: int):
+        cfg = self.engine.cfg
+        mask = self.masks[frag]
+        delta = jax.tree.map(
+            lambda s, g, m: (s.astype(jnp.float32)
+                             - g.astype(jnp.float32)[None]) * m[None],
+            snap, state.global_params, mask)
+        res_in = residual if residual is None else jax.tree.map(
+            lambda r, m: r * m[None], residual, mask)
+        avg, new_res = outer_opt.exchange_and_average(
+            delta, cfg, self.engine.replicate_fn, residual=res_in,
+            kind="fragment", fragment=frag)
+        new_global, new_outer = outer_opt.outer_update(
+            state.global_params, avg, state.outer, cfg)
+        new_global = jax.tree.map(
+            lambda ng, g, m: jnp.where(m, ng, g),
+            new_global, state.global_params, mask)
+        # fragment slots: synced base + progress made while in flight;
+        # other slots untouched
+        new_wp = jax.tree.map(
+            lambda w, s, ng, m: jnp.where(
+                m[None],
+                (ng.astype(jnp.float32)[None]
+                 + (w.astype(jnp.float32) - s.astype(jnp.float32))
+                 ).astype(w.dtype),
+                w),
+            state.worker_params, snap, new_global, mask)
+        if residual is not None:
+            new_res = jax.tree.map(
+                lambda nr, r, m: jnp.where(m[None], nr, r), new_res,
+                residual, mask)
+        return state._replace(global_params=new_global,
+                              worker_params=new_wp, outer=new_outer), new_res
+
+    def after_step(self, state, step, loss):
+        records: Records = []
+        if (step + 1) % self.h == 0:
+            self.pending = (state.worker_params, self.round % self.F)
+            self.pending_apply = step + self.delay
+            self.round += 1
+        if self.pending is not None and step >= self.pending_apply:
+            snap, frag = self.pending
+            state, self.residual = self._apply(state, snap, self.residual,
+                                               frag=frag)
+            self.pending = None
+            records.append(("frag_syncs", (step, frag)))
+        return state, records
+
+    def finalize(self, state, num_steps):
+        records: Records = []
+        if self.pending is not None:  # flush the in-flight fragment
+            snap, frag = self.pending
+            state, self.residual = self._apply(state, snap, self.residual,
+                                               frag=frag)
+            self.pending = None
+            records.append(("frag_syncs", (num_steps - 1, frag)))
+        if num_steps % self.h:        # trailing partial round: full sync
+            state, self.residual = self._outer(state, self.residual)
+            records.append(("sync_steps", num_steps - 1))
+        return state, records
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelinedSync(SyncStrategy):
+    """DiLoCoX-style pipelined low-bandwidth sync (arXiv:2506.21263): one
+    fragment per outer round, overlapped with compute via ``delay``.  Each
+    parameter syncs every F·H steps — combine with the int8 codec for the
+    compounded ~4F× boundary-byte reduction over f32 DiLoCo."""
+    name = "pipelined"
+    h: Optional[int] = None
+    num_fragments: int = 4
+    delay: int = 0
+
+    def bind(self, engine, params) -> SyncRunner:
+        h = self.h or engine.cfg.h_inner_steps
+        return _PipelinedRunner(engine, params, h, self.delay,
+                                self.num_fragments)
+
+    def payload_schedule(self, n_params, num_steps, cfg):
+        h = self.h or cfg.h_inner_steps
+        codec = make_codec(cfg.delta_dtype)
+        b = codec.schedule_bytes(n_params // self.num_fragments)
+        return [SyncEvent(step=s, bytes_per_worker=b, kind="fragment",
+                          apply_step=s + self.delay,
+                          fragment=((s + 1) // h - 1) % self.num_fragments,
+                          codec=codec.name)
                 for s in range(h - 1, num_steps, h)]
 
 
@@ -332,7 +490,7 @@ class OverlappedSync(SyncStrategy):
 # Config-driven construction
 # ---------------------------------------------------------------------------
 
-STRATEGIES = ("ddp", "diloco", "streaming", "overlapped")
+STRATEGIES = ("ddp", "diloco", "streaming", "overlapped", "pipelined")
 
 
 def make_strategy(cfg: DiLoCoConfig, h_schedule: Optional[HSchedule] = None
@@ -345,6 +503,10 @@ def make_strategy(cfg: DiLoCoConfig, h_schedule: Optional[HSchedule] = None
     if cfg.strategy == "streaming":
         return StreamingSync(num_fragments=cfg.num_fragments)
     if cfg.strategy == "overlapped":
-        return OverlappedSync(delay=cfg.sync_delay, jitter=cfg.h_jitter)
+        return OverlappedSync(delay=cfg.sync_delay, jitter=cfg.h_jitter,
+                              seed=cfg.sync_seed)
+    if cfg.strategy == "pipelined":
+        return PipelinedSync(num_fragments=cfg.num_fragments,
+                             delay=cfg.sync_delay)
     raise ValueError(f"unknown strategy {cfg.strategy!r}; "
                      f"expected one of {STRATEGIES}")

@@ -1,0 +1,242 @@
+"""Codec-aware outer-sync transport: what actually crosses the slow link.
+
+Strategies used to hand raw f32 pytrees straight to the averaging code;
+this module makes the wire explicit.  A sync round now flows
+
+    delta (f32 pytree, stacked (K, ...) per worker)
+      -> Codec.encode   -> OuterPayload (wire-dtype data + scales)
+      -> Transport.ship -> the SAME payload, resharded to replicated —
+                           on a pod mesh this is the inter-pod all-gather,
+                           moving the NARROW dtype on the wire
+      -> Codec.decode   -> f32 pytree, averaged by the outer optimizer.
+
+Wire format of an ``OuterPayload``
+----------------------------------
+* ``data``    — pytree mirroring the delta tree, leaves in the codec's
+  wire dtype (f32 / bf16 / int8), leading K worker dim intact.
+* ``scales``  — None, or a pytree of per-tensor-per-worker f32 scales
+  shaped ``(K, 1, ..., 1)`` (keepdims over every non-worker axis).  These
+  4 bytes/tensor/worker ride along with the payload (negligible next to
+  the tensor bytes; schedule accounting ignores them).
+* ``kind`` / ``codec`` / ``fragment`` — static routing metadata (what the
+  payload is, how to decode it, which fragment slot it belongs to).
+
+What a ``Codec`` must implement
+-------------------------------
+* ``name`` (wire id), ``width`` (wire bytes/element), ``lossy``;
+* ``encode(delta, residual=None, kind=..., fragment=...) ->
+  (OuterPayload, new_residual)`` — when ``residual`` is given the codec
+  must quantize the error-compensated delta ``e = delta + residual`` and
+  return ``e - decode(payload)`` as the new residual (error feedback, so
+  quantization noise cannot bias the outer optimizer: every bit that
+  fails to cross the wire this round is retried next round);
+* ``decode(payload) -> f32 pytree``.
+
+``Int8Symmetric`` is backed by the fused Pallas kernels in
+``repro.kernels.quantize`` (quantize+residual-update in one pass);
+``use_kernel=False`` selects the pure-jnp oracle — the transport does
+that automatically on mesh paths, where a Pallas call inside the sharded
+outer step would have to partition by hand.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# wire width (bytes/element) per codec name — the single source of truth
+# for every byte-accounting path (schedules, simulator, benchmarks)
+WIRE_WIDTH = {"f32": 4, "bf16": 2, "int8": 1}
+
+# config spellings -> canonical codec names
+_ALIASES = {"float32": "f32", "f32": "f32",
+            "bfloat16": "bf16", "bf16": "bf16",
+            "int8": "int8"}
+
+
+@dataclasses.dataclass
+class OuterPayload:
+    """One encoded cross-worker payload (see module docstring wire format)."""
+    data: Any
+    scales: Optional[Any] = None
+    kind: str = "delta"            # "delta" | "fragment" | "grads"
+    codec: str = "f32"
+    fragment: int = -1
+
+    def nbytes(self) -> int:
+        """Wire bytes per worker-row set: tensor payload + scale sideband."""
+        n = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(self.data))
+        if self.scales is not None:
+            n += sum(x.size * x.dtype.itemsize
+                     for x in jax.tree.leaves(self.scales))
+        return int(n)
+
+
+jax.tree_util.register_dataclass(
+    OuterPayload, data_fields=["data", "scales"],
+    meta_fields=["kind", "codec", "fragment"])
+
+
+class Codec:
+    """Base codec: lossless identity semantics, subclasses override
+    ``_enc`` / ``_dec`` (and optionally ``encode`` for fused paths)."""
+    name = "f32"
+    lossy = False
+
+    @property
+    def width(self) -> int:
+        """Wire bytes per element (from the shared ``WIRE_WIDTH`` table)."""
+        return WIRE_WIDTH[self.name]
+
+    def _enc(self, e) -> Tuple[Any, Optional[Any]]:
+        return e, None
+
+    def _dec(self, data, scales) -> Any:
+        return jax.tree.map(lambda p: p.astype(jnp.float32), data)
+
+    def encode(self, delta, residual=None, kind: str = "delta",
+               fragment: int = -1) -> Tuple[OuterPayload, Optional[Any]]:
+        e = (delta if residual is None else
+             jax.tree.map(lambda d, r: d.astype(jnp.float32) + r,
+                          delta, residual))
+        data, scales = self._enc(e)
+        payload = OuterPayload(data=data, scales=scales, kind=kind,
+                               codec=self.name, fragment=fragment)
+        new_residual = None
+        if residual is not None:
+            dq = self._dec(data, scales)
+            new_residual = jax.tree.map(lambda x, y: x - y, e, dq)
+        return payload, new_residual
+
+    def decode(self, payload: OuterPayload) -> Any:
+        return self._dec(payload.data, payload.scales)
+
+    def schedule_bytes(self, n_elems: int) -> int:
+        """Wire bytes for ``n_elems`` payload elements (per worker)."""
+        return self.width * n_elems
+
+
+@dataclasses.dataclass(frozen=True)
+class F32Passthrough(Codec):
+    name = "f32"
+    lossy = False
+
+
+@dataclasses.dataclass(frozen=True)
+class BF16Cast(Codec):
+    """Round-to-nearest-even bf16 cast; exact on bf16-representable values.
+    Lossy in general, so error feedback applies when a residual is carried."""
+    name = "bf16"
+    lossy = True
+
+    def _enc(self, e):
+        return jax.tree.map(lambda d: d.astype(jnp.bfloat16), e), None
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8Symmetric(Codec):
+    """Per-tensor-per-worker symmetric int8: q = round(e / s), s = amax/127.
+
+    With a residual, encode runs the FUSED quantize+residual-update Pallas
+    kernel (one pass produces q, new_residual, and the scales); without,
+    the same kernel runs and the residual output is dropped.
+    ``use_kernel=False`` selects the pure-jnp oracle instead.
+    """
+    name = "int8"
+    lossy = True
+    use_kernel: bool = True
+
+    def _quant(self, e, residual):
+        # residual leaves may be None (no error feedback): tree.map flattens
+        # up to e's structure, so a None in a leaf slot passes through
+        if self.use_kernel:
+            from repro.kernels.quantize import quantize_ef
+            return jax.tree.map(lambda d, r: quantize_ef(d, r), e, residual)
+        from repro.kernels.quantize import reference_quantize_ef
+        return jax.tree.map(lambda d, r: reference_quantize_ef(d, r), e,
+                            residual)
+
+    def encode(self, delta, residual=None, kind: str = "delta",
+               fragment: int = -1):
+        # the kernel consumes (delta, residual) directly — e = d + r is
+        # formed inside the fused pass, not materialized here
+        res_tree = (residual if residual is not None
+                    else jax.tree.map(lambda _: None, delta))
+        out = self._quant(delta, res_tree)
+        is3 = lambda x: isinstance(x, tuple)
+        q = jax.tree.map(lambda o: o[0], out, is_leaf=is3)
+        nr = jax.tree.map(lambda o: o[1], out, is_leaf=is3)
+        scales = jax.tree.map(lambda o: o[2], out, is_leaf=is3)
+        payload = OuterPayload(data=q, scales=scales, kind=kind,
+                               codec=self.name, fragment=fragment)
+        return payload, (nr if residual is not None else None)
+
+    def _dec(self, data, scales):
+        if self.use_kernel:
+            from repro.kernels.quantize import dequantize
+            return jax.tree.map(dequantize, data, scales)
+        from repro.kernels.quantize import reference_dequantize
+        return jax.tree.map(reference_dequantize, data, scales)
+
+
+def make_codec(dtype: str, use_kernel: bool = True) -> Codec:
+    """Codec for a config ``delta_dtype`` spelling (float32/bfloat16/int8)."""
+    name = _ALIASES.get(dtype)
+    if name == "f32":
+        return F32Passthrough()
+    if name == "bf16":
+        return BF16Cast()
+    if name == "int8":
+        return Int8Symmetric(use_kernel=use_kernel)
+    raise ValueError(f"unknown delta dtype {dtype!r}; "
+                     f"expected one of {sorted(_ALIASES)}")
+
+
+def wire_width(dtype: str) -> int:
+    return WIRE_WIDTH[_ALIASES[dtype]]
+
+
+@dataclasses.dataclass(frozen=True)
+class Transport:
+    """Codec + the replicate hop: everything between "delta captured" and
+    "f32 delta available on every worker"."""
+    codec: Codec
+    replicate_fn: Optional[Callable] = None
+
+    def ship(self, payload: OuterPayload) -> OuterPayload:
+        """Reshard the encoded payload to replicated — the inter-pod
+        all-gather on a pod mesh, identity on a single device.
+
+        The narrow-dtype games mirror what ``average_deltas`` did inline:
+        bf16 is bitcast to u16 around the exchange and every non-f32
+        payload sits behind an optimization barrier, so XLA cannot fold
+        the dequant converts into the gather's producer and move
+        full-width f32 on the wire.
+        """
+        if self.replicate_fn is None:
+            return payload
+        data = payload.data
+        if payload.codec == "bf16":
+            data = jax.tree.map(
+                lambda x: jax.lax.bitcast_convert_type(x, jnp.uint16), data)
+        if payload.codec != "f32":
+            data = jax.lax.optimization_barrier(data)
+        data = self.replicate_fn(data)
+        if payload.codec == "bf16":
+            data = jax.tree.map(
+                lambda x: jax.lax.bitcast_convert_type(x, jnp.bfloat16), data)
+        scales = payload.scales
+        if scales is not None:
+            scales = self.replicate_fn(scales)
+        return dataclasses.replace(payload, data=data, scales=scales)
+
+    def exchange(self, stacked_delta, residual=None, kind: str = "delta",
+                 fragment: int = -1) -> Tuple[Any, Optional[Any]]:
+        """encode -> ship -> decode; returns (f32 stacked delta, new
+        error-feedback residual or None)."""
+        payload, new_residual = self.codec.encode(
+            stacked_delta, residual, kind=kind, fragment=fragment)
+        payload = self.ship(payload)
+        return self.codec.decode(payload), new_residual

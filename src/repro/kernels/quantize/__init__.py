@@ -1,0 +1,6 @@
+from repro.kernels.quantize.ops import dequantize, quantize_ef
+from repro.kernels.quantize.ref import (reference_dequantize,
+                                        reference_quantize_ef)
+
+__all__ = ["quantize_ef", "dequantize", "reference_quantize_ef",
+           "reference_dequantize"]

@@ -1,0 +1,88 @@
+"""Fused symmetric-int8 quantization kernels for the outer-sync transport.
+
+Two kernels back the ``Int8Symmetric`` codec (``repro.core.transport``):
+
+* ``quantize_ef_fwd`` — fused quantize + error-feedback residual update.
+  One grid program per worker row: computes the per-tensor (per-worker)
+  amax scale, the clipped/rounded int8 payload, AND the new residual
+  ``e - q*scale`` in a single VMEM-resident pass, where ``e = delta +
+  residual`` is the error-compensated delta.  Unfused XLA does this as
+  abs/max/div/round/clip/convert/mul/sub over separate HBM round-trips;
+  the kernel makes the fusion structural.
+* ``dequantize_fwd`` — int8 payload × per-row scale -> f32, column-tiled.
+
+Rows are whole (1, M) blocks so the amax reduction needs no cross-program
+pass; production-scale tensors would tile columns with a two-phase amax
+reduction, which we trade away for simplicity (the deltas this repo syncs
+fit VMEM comfortably at the reduced configs; real fleets shard the K rows
+over pods first, see ``launch/dryrun_lib.dryrun_outer_step``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128          # TPU lane width: flattened payloads pad to a multiple
+SCALE_EPS = 1e-12   # matches the jnp oracle: scale = max(amax, eps) / 127
+
+
+def _quantize_ef_kernel(x_ref, r_ref, q_ref, nr_ref, s_ref):
+    e = x_ref[...].astype(jnp.float32) + r_ref[...].astype(jnp.float32)
+    amax = jnp.max(jnp.abs(e))
+    scale = jnp.maximum(amax, SCALE_EPS) / 127.0
+    q = jnp.clip(jnp.round(e / scale), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    nr_ref[...] = e - q * scale
+    s_ref[...] = jnp.full((1, 1), scale, jnp.float32)
+
+
+def _dequantize_kernel(q_ref, s_ref, o_ref):
+    o_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[0, 0]
+
+
+def quantize_ef_fwd(x, residual, *, interpret: bool = True):
+    """x, residual: (K, M) f32 with M % LANE == 0.
+
+    Returns ``(q, new_residual, scale)``: int8 (K, M), f32 (K, M), and the
+    per-row f32 scales (K, 1).
+    """
+    K, M = x.shape
+    assert M % LANE == 0, (K, M)
+    return pl.pallas_call(
+        _quantize_ef_kernel,
+        grid=(K,),
+        in_specs=[pl.BlockSpec((1, M), lambda i: (i, 0)),
+                  pl.BlockSpec((1, M), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((1, M), lambda i: (i, 0)),
+                   pl.BlockSpec((1, M), lambda i: (i, 0)),
+                   pl.BlockSpec((1, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((K, M), jnp.int8),
+                   jax.ShapeDtypeStruct((K, M), jnp.float32),
+                   jax.ShapeDtypeStruct((K, 1), jnp.float32)],
+        interpret=interpret,
+    )(x, residual)
+
+
+def dequantize_fwd(q, scale, *, bc: int = 0, interpret: bool = True):
+    """q: (K, M) int8, scale: (K, 1) f32 -> f32 (K, M)."""
+    K, M = q.shape
+    assert M % LANE == 0, (K, M)
+    if not bc:
+        bc = M
+        for cand in (65536, 32768, 16384, 8192, 4096, 2048, 1024, 512, 256,
+                     LANE):
+            if M % cand == 0:
+                bc = cand
+                break
+    return pl.pallas_call(
+        functools.partial(_dequantize_kernel),
+        grid=(K, M // bc),
+        in_specs=[pl.BlockSpec((1, bc), lambda i, j: (i, j)),
+                  pl.BlockSpec((1, 1), lambda i, j: (i, 0))],
+        out_specs=pl.BlockSpec((1, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((K, M), jnp.float32),
+        interpret=interpret,
+    )(q, scale)

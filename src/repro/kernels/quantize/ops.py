@@ -1,0 +1,75 @@
+"""Jitted wrappers for the quantize kernels: arbitrary leaf shapes in,
+flattened LANE-padded (K, M) kernel views inside.
+
+``interpret`` defaults to *backend-selected* exactly like
+``decode_attention/ops.py``: interpret on CPU hosts (Mosaic cannot
+compile), compiled on TPU, force-overridable via
+``REPRO_PALLAS_INTERPRET=0|1``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.ops import default_interpret, pallas_mode
+from repro.kernels.quantize.kernel import (LANE, dequantize_fwd,
+                                           quantize_ef_fwd)
+
+__all__ = ["quantize_ef", "dequantize", "default_interpret", "pallas_mode"]
+
+
+def _flatten_pad(x) -> Tuple[jax.Array, int]:
+    """(K, ...) -> (K, M) with M padded to a LANE multiple.
+
+    Zero padding is invisible to the kernel: padded lanes contribute 0 to
+    the amax, quantize to 0, and leave a 0 residual.
+    """
+    k = x.shape[0]
+    flat = x.reshape(k, -1)
+    pad = (-flat.shape[1]) % LANE
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    return flat, x.size // k
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _quantize_ef(x, residual, *, interpret: bool):
+    xf, m = _flatten_pad(x.astype(jnp.float32))
+    rf = (jnp.zeros_like(xf) if residual is None
+          else _flatten_pad(residual.astype(jnp.float32))[0])
+    q, nr, s = quantize_ef_fwd(xf, rf, interpret=interpret)
+    shape = x.shape
+    q = q[:, :m].reshape(shape)
+    nr = nr[:, :m].reshape(shape)
+    s = s.reshape((shape[0],) + (1,) * (len(shape) - 1))
+    return q, nr, s
+
+
+def quantize_ef(x, residual=None, *, interpret: Optional[bool] = None):
+    """Fused per-worker-row symmetric int8 quantize + residual update.
+
+    ``x``: (K, ...) delta; ``residual``: matching error-feedback carry (or
+    None for plain quantization).  Returns ``(q, new_residual, scale)``
+    shaped like the jnp oracle (``ref.reference_quantize_ef``).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return _quantize_ef(x, residual, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _dequantize(q, scale, *, interpret: bool):
+    qf, m = _flatten_pad(q)
+    out = dequantize_fwd(qf, scale.reshape(q.shape[0], 1),
+                         interpret=interpret)
+    return out[:, :m].reshape(q.shape)
+
+
+def dequantize(q, scale, *, interpret: Optional[bool] = None):
+    """int8 (K, ...) payload x per-row scale -> f32 delta."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _dequantize(q, scale, interpret=interpret)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the fused quantize+error-feedback kernels.
+
+These are the semantics of record: the Pallas kernels must match them
+bit-for-bit (same round/clip ops on the same f32 intermediates), and the
+transport codecs fall back to them wherever a Pallas call is undesirable
+(sharded multi-pod lowering, property tests over many shapes).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+SCALE_EPS = 1e-12
+
+
+def reference_quantize_ef(x, residual=None):
+    """Per-row symmetric int8 quantization with error feedback.
+
+    ``x``: (K, ...) f32 — one row per worker; scales reduce over every
+    non-leading axis (per-tensor-per-worker).  Returns ``(q, new_residual,
+    scale)`` with ``scale`` keepdims-shaped ``(K, 1, ..., 1)``.
+    """
+    e = x.astype(jnp.float32)
+    if residual is not None:
+        e = e + residual.astype(jnp.float32)
+    axes = tuple(range(1, e.ndim))
+    amax = jnp.max(jnp.abs(e), axis=axes, keepdims=True) if axes else \
+        jnp.abs(e)
+    scale = jnp.maximum(amax, SCALE_EPS) / 127.0
+    q = jnp.clip(jnp.round(e / scale), -127, 127).astype(jnp.int8)
+    new_residual = e - q.astype(jnp.float32) * scale
+    return q, new_residual, scale
+
+
+def reference_dequantize(q, scale):
+    return q.astype(jnp.float32) * scale

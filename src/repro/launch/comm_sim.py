@@ -6,16 +6,25 @@ compared on *time*, not just bytes.  The model is deliberately simple and
 fully documented:
 
 * compute: every inner step costs ``step_time_s`` (derive it from the
-  analytic roofline via ``modeled_step_time``);
+  analytic roofline via ``modeled_step_time``, or calibrate it against a
+  ``launch.dryrun`` JSON dump via ``load_calibration``);
 * communication: each worker ships its payload over its own boundary link
   (``CommModel.bandwidth`` bytes/s, plus a fixed per-transfer ``latency``).
-  Transfers on one link serialize; workers are symmetric, so one link is
-  simulated;
+  Transfers on one link serialize.  ``simulate_schedule`` models the
+  symmetric fleet (one link); ``simulate_heterogeneous`` gives every
+  worker its own step clock (``step_times[w]``) and link, with a
+  bounded-staleness apply rule;
 * blocking: a transfer whose ``apply_step`` equals its emit step stalls the
   loop immediately (DDP's per-step all-reduce, DiLoCo's outer step); a
   later ``apply_step`` gives the transfer a window of inner compute to hide
-  behind (Streaming / Overlapped DiLoCo) — the loop stalls only for the
-  portion that does not fit.
+  behind (Streaming / Overlapped / Pipelined DiLoCo) — the loop stalls only
+  for the portion that does not fit.  In the heterogeneous simulator the
+  outer update is a fleet barrier: a round completes when the LAST worker's
+  payload lands, and every worker may run at most ``staleness_steps`` past
+  the round's ``apply_step`` before blocking on the result.
+
+Bytes are accounted per codec (``SyncEvent.codec``): results carry a
+``bytes_by_codec`` breakdown next to ``total_bytes``.
 
 Bandwidth constants for the production fleet live in ``repro.launch.mesh``
 (``ICI_BW`` intra-pod, ``DCN_BW`` the inter-pod boundary DiLoCo targets).
@@ -23,9 +32,11 @@ Bandwidth constants for the production fleet live in ``repro.launch.mesh``
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List
+import json
+import re
+from typing import Dict, Iterable, List, Optional, Sequence
 
-from repro.launch.mesh import DCN_BW, PEAK_FLOPS_BF16
+from repro.launch.mesh import DCN_BW, HBM_BW, PEAK_FLOPS_BF16
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,6 +49,18 @@ def transfer_time(nbytes: int, comm: CommModel) -> float:
     return comm.latency + nbytes / comm.bandwidth
 
 
+def _index_events(events: Iterable):
+    by_step: Dict[int, List] = {}
+    total_bytes = 0
+    by_codec: Dict[str, float] = {}
+    for ev in events:
+        by_step.setdefault(ev.step, []).append(ev)
+        total_bytes += ev.bytes_per_worker
+        codec = getattr(ev, "codec", "f32")
+        by_codec[codec] = by_codec.get(codec, 0.0) + ev.bytes_per_worker
+    return by_step, total_bytes, by_codec
+
+
 def simulate_schedule(events: Iterable, num_steps: int, step_time_s: float,
                       comm: CommModel) -> Dict[str, float]:
     """Walk the step timeline, overlaying transfers on the boundary link.
@@ -47,11 +70,7 @@ def simulate_schedule(events: Iterable, num_steps: int, step_time_s: float,
     ``comm_s`` is total link-busy time, ``stall_s`` the part of it the
     compute timeline actually had to wait for (exposed communication).
     """
-    by_step: Dict[int, List] = {}
-    total_bytes = 0
-    for ev in events:
-        by_step.setdefault(ev.step, []).append(ev)
-        total_bytes += ev.bytes_per_worker
+    by_step, total_bytes, by_codec = _index_events(events)
 
     now = 0.0            # compute-timeline clock
     link_free = 0.0      # when the boundary link next idles
@@ -87,13 +106,159 @@ def simulate_schedule(events: Iterable, num_steps: int, step_time_s: float,
     compute_s = num_steps * step_time_s
     return {"wall_clock_s": now, "compute_s": compute_s, "comm_s": comm_s,
             "stall_s": stall_s, "total_bytes": float(total_bytes),
+            "bytes_by_codec": by_codec,
             "overhead_frac": (now - compute_s) / max(now, 1e-12)}
 
 
+def simulate_heterogeneous(events: Iterable, num_steps: int,
+                           step_times: Sequence[float], comm: CommModel,
+                           staleness_steps: int = 0) -> Dict[str, float]:
+    """Per-worker step clocks + bounded-staleness apply rule.
+
+    ``step_times[w]`` is worker w's inner-step seconds (heterogeneous
+    fleet).  Every worker ships each scheduled payload over its own link
+    when ITS clock reaches the emit step; the round's outer update is
+    ready when the last worker's transfer lands, and workers block on it
+    at ``apply_step + staleness_steps`` (staleness 0 = synchronous apply).
+    With identical ``step_times`` and staleness 0 this reduces exactly to
+    ``simulate_schedule``.
+
+    ``compute_s`` is the slowest worker's pure-compute time (the fleet's
+    compute critical path); ``straggler_s`` the spread the slowest worker
+    adds over the fastest.
+    """
+    w_n = len(step_times)
+    if w_n == 0:
+        raise ValueError("need at least one worker step time")
+    by_step, total_bytes, by_codec = _index_events(events)
+
+    clock = [0.0] * w_n
+    link_free = [0.0] * w_n
+    busy = [0.0] * w_n
+    stall = [0.0] * w_n
+    in_flight: List = []  # (round_done_time, block_step)
+
+    def block_on(done: float):
+        for w in range(w_n):
+            if done > clock[w]:
+                stall[w] += done - clock[w]
+                clock[w] = done
+
+    for step in range(num_steps):
+        for w in range(w_n):
+            clock[w] += step_times[w]
+        for ev in by_step.get(step, ()):
+            round_done = 0.0
+            for w in range(w_n):
+                start = max(clock[w], link_free[w])
+                done = start + transfer_time(ev.bytes_per_worker, comm)
+                busy[w] += done - start
+                link_free[w] = done
+                round_done = max(round_done, done)
+            in_flight.append((round_done, ev.apply_step + staleness_steps))
+        still = []
+        for done, block_step in in_flight:
+            if block_step <= step:
+                block_on(done)
+            else:
+                still.append((done, block_step))
+        in_flight = still
+
+    for done, _ in in_flight:
+        block_on(done)
+
+    now = max(clock)
+    compute_s = num_steps * max(step_times)
+    return {"wall_clock_s": now, "compute_s": compute_s,
+            "comm_s": max(busy), "stall_s": max(stall),
+            "straggler_s": num_steps * (max(step_times) - min(step_times)),
+            "total_bytes": float(total_bytes), "bytes_by_codec": by_codec,
+            "overhead_frac": (now - compute_s) / max(now, 1e-12)}
+
+
+# ---------------------------------------------------------------------------
+# Step-time modeling + dry-run calibration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CommCalibration:
+    """Measured / HLO-derived overrides for the simulator's two analytic
+    assumptions: the inner-step seconds and the outer-sync wire bytes.
+    ``sync_dtype`` records which delta dtype the measured outer step was
+    compiled with (from the entry's ``outer[<dtype>]`` shape tag), so
+    consumers can normalize the bytes against the right analytic width."""
+    step_time_s: Optional[float] = None
+    sync_bytes_per_worker: Optional[float] = None
+    sync_dtype: str = "float32"
+    source: str = "analytic"
+
+
+def load_calibration(path: str, arch: Optional[str] = None
+                     ) -> Optional[CommCalibration]:
+    """Calibrate against a ``launch.dryrun --json-out`` dump (e.g.
+    ``dryrun_outer.json``).
+
+    * step time — from a ``train`` / ``diloco-inner`` entry: its
+      ``measured_step_s`` field if present (real profiled seconds merged
+      into the dump), else the roofline bound max(flops/peak,
+      hbm_bytes/hbm_bw) from its analytic terms — either replaces the
+      fixed 40%-MFU assumption;
+    * sync bytes — the outer-step entry's HLO-parsed cross-pod wire bytes
+      (falling back to total wire bytes), replacing width×n_params.
+    """
+    try:
+        with open(path) as f:
+            entries = json.load(f)
+    except (OSError, ValueError):
+        return None
+    if isinstance(entries, dict):
+        entries = [entries]
+    step_time = None
+    sync_bytes = None
+    sync_dtype = "float32"
+    for e in entries:
+        if arch is not None and e.get("arch") != arch:
+            continue
+        measured = e.get("measured_step_s")
+        kind = e.get("step_kind", "")
+        analytic = e.get("analytic") or {}
+        if step_time is None and kind in ("train", "diloco-inner"):
+            # only inner/train entries describe a training step; measured
+            # seconds on decode/prefill/outer entries are other latencies
+            if measured:
+                step_time = float(measured)
+            else:
+                flops = float(analytic.get("total_flops") or 0.0)
+                hbm = float(analytic.get("bytes") or 0.0)
+                derived = max(flops / PEAK_FLOPS_BF16, hbm / HBM_BW)
+                if derived > 0:
+                    step_time = derived
+        if sync_bytes is None and kind == "diloco-outer":
+            colls = (e.get("collectives_weighted") or e.get("collectives")
+                     or {})
+            b = (colls.get("cross_pod_bytes_per_device")
+                 or colls.get("wire_bytes_per_device"))
+            if b:
+                sync_bytes = float(b)
+                m = re.match(r"outer\[(\w+)\]", e.get("shape", ""))
+                if m:
+                    sync_dtype = m.group(1)
+    if step_time is None and sync_bytes is None:
+        return None
+    return CommCalibration(step_time_s=step_time,
+                           sync_bytes_per_worker=sync_bytes,
+                           sync_dtype=sync_dtype, source=path)
+
+
 def modeled_step_time(total_flops_per_device: float, mfu: float = 0.4,
-                      peak_flops: float = PEAK_FLOPS_BF16) -> float:
+                      peak_flops: float = PEAK_FLOPS_BF16,
+                      calibration: Optional[CommCalibration] = None) -> float:
     """Inner-step seconds from the analytic per-device FLOPs (see
-    ``repro.launch.analytic.flops_per_device``) at an assumed MFU."""
+    ``repro.launch.analytic.flops_per_device``) at an assumed MFU — unless
+    a ``CommCalibration`` carries a measured / roofline-derived step time,
+    which then takes precedence over the MFU guess."""
+    if calibration is not None and calibration.step_time_s:
+        return calibration.step_time_s
     return total_flops_per_device / (peak_flops * mfu)
 
 

@@ -7,7 +7,15 @@ Runs the three-stage nanochat pipeline (base pretrain -> dialogue mid-train
   --method diloco      DiLoCo wrapper (H, mu, eta from the paper)
   --method streaming   Streaming DiLoCo (fragment-wise staggered sync)
   --method overlapped  delayed outer application + straggler jitter
+  --method pipelined   DiLoCoX shape: one fragment per round, delayed apply
   --method hybrid      DiLoCo base, DDP mid+SFT (checkpoint hand-off)
+
+``--sync-dtype f32|bf16|int8`` picks the outer-sync wire codec (int8 adds
+per-tensor scales + error feedback, see repro.core.transport);
+``--worker-speeds 1,1,1.2,1.5`` models a heterogeneous fleet: after the
+run, the comm simulator replays the sync schedule with per-worker step
+clocks (calibrated from the measured inner-step seconds of the base
+stage) and reports the modeled homogeneous vs heterogeneous wall-clock.
 
 On this CPU container the model is a reduced nanochat-style config and the
 corpora are synthetic (see repro.data.synthetic); on a TPU fleet the same
@@ -23,7 +31,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
-from typing import Dict, Optional
+from typing import Dict, Optional, Sequence
 
 import jax
 import numpy as np
@@ -108,13 +116,45 @@ def run_stage(method: str, model, params, stage_ds, *, steps: int,
     return state.global_params, hist
 
 
+def comm_report(dcfg, method: str, n_params: int, steps: int, h: int,
+                step_time_s: float, worker_speeds: Sequence[float],
+                staleness: int = 0) -> Dict:
+    """Replay the run's sync schedule through the comm simulator: the
+    symmetric fleet vs one with per-worker step clocks (``worker_speeds``
+    are relative per-worker multipliers on the measured step seconds)."""
+    import dataclasses
+    from repro.core import make_strategy
+    from repro.launch.comm_sim import (default_comm_model,
+                                       simulate_heterogeneous,
+                                       simulate_schedule)
+    # mirror run_stage's clamping so the replayed schedule matches the
+    # schedule the run actually executed
+    delay = min(dcfg.sync_delay, h - 1)
+    jitter = min(dcfg.h_jitter, h - 1 - delay)
+    dcfg = dataclasses.replace(dcfg, h_inner_steps=h, sync_delay=delay,
+                               h_jitter=jitter,
+                               strategy=method if method != "hybrid"
+                               else "diloco")
+    strat = make_strategy(dcfg)
+    events = strat.payload_schedule(n_params, steps, dcfg)
+    comm = default_comm_model()
+    homo = simulate_schedule(events, steps, step_time_s, comm)
+    het = simulate_heterogeneous(
+        events, steps, [step_time_s * m for m in worker_speeds], comm,
+        staleness_steps=staleness)
+    return {"homogeneous": homo, "heterogeneous": het,
+            "worker_speeds": list(worker_speeds),
+            "step_time_s": step_time_s}
+
+
 def run_pipeline(method: str = "diloco", arch: str = "tiny",
                  reduced: bool = True, steps: Dict[str, int] = None,
                  workers: int = 4, per_worker_batch: int = 8,
                  seq_len: int = 128, adaptive_h: bool = False,
                  delta_dtype: str = "float32", drift_aware: bool = False,
                  sync_delay: int = 0, h_jitter: int = 0,
-                 num_fragments: int = 4,
+                 num_fragments: int = 4, error_feedback: bool = True,
+                 worker_speeds: Sequence[float] = (),
                  seed: int = 0, out_dir: Optional[str] = None,
                  eval_after_each_stage: bool = True) -> Dict:
     """The full three-stage pipeline under one method.  Returns metrics."""
@@ -125,6 +165,9 @@ def run_pipeline(method: str = "diloco", arch: str = "tiny",
     from repro.serving import Engine
 
     steps = steps or {"base": 300, "mid": 120, "sft": 120}
+    if worker_speeds and method != "ddp" and len(worker_speeds) != workers:
+        raise ValueError(f"--worker-speeds needs one multiplier per worker: "
+                         f"got {len(worker_speeds)} for {workers} workers")
     world, tok, stages, suites = build_pipeline(seq_len=seq_len, seed=seed)
     cfg, model = make_model(arch, reduced, tok.vocab_size)
     params, _ = init_params(cfg, jax.random.key(seed))
@@ -135,7 +178,8 @@ def run_pipeline(method: str = "diloco", arch: str = "tiny",
                               adam_lr=1e-3)
     dcfg = DiLoCoConfig(num_workers=workers, delta_dtype=delta_dtype,
                         drift_aware=drift_aware, sync_delay=sync_delay,
-                        h_jitter=h_jitter, num_fragments=num_fragments)
+                        h_jitter=h_jitter, num_fragments=num_fragments,
+                        error_feedback=error_feedback, sync_seed=seed)
 
     # paper §3: H=100 base, H=30 mid/SFT (scaled to our step budget: the
     # ratio sync-count/steps matches — base gets ~3 syncs, mid/sft ~4 each)
@@ -157,7 +201,8 @@ def run_pipeline(method: str = "diloco", arch: str = "tiny",
             opt_cfg=opt_cfg, diloco_cfg=dcfg, seed=seed, h_schedule=hs)
         entry = {"loss_first": hist["loss"][0], "loss_last": hist["loss"][-1],
                  "losses": hist["loss"][:: max(1, len(hist["loss"]) // 50)],
-                 "method": stage_method}
+                 "method": stage_method,
+                 "step_seconds": hist["step_seconds"]}
         if eval_after_each_stage:
             engine = Engine(model, params, tok)
             entry["core"] = heldout_metrics(ds=stages["base"], batches=4,
@@ -167,6 +212,24 @@ def run_pipeline(method: str = "diloco", arch: str = "tiny",
         print(f"[{method}:{stage}] loss {entry['loss_first']:.3f} -> "
               f"{entry['loss_last']:.3f} "
               + (f"tasks={entry.get('tasks')}" if eval_after_each_stage else ""))
+
+    if worker_speeds and method != "ddp":
+        n_params = sum(int(x.size) for x in jax.tree.leaves(params))
+        # staleness stays 0: the schedules' apply_step already carries the
+        # strategy's overlap window (sync_delay) — adding it again would
+        # double-count the hiding budget
+        rep = comm_report(dcfg, method, n_params, steps["base"],
+                          h_by_stage["base"],
+                          results["stages"]["base"]["step_seconds"],
+                          worker_speeds)
+        results["comm_model"] = rep
+        homo, het = rep["homogeneous"], rep["heterogeneous"]
+        print(f"[comm:{method}/{delta_dtype}] "
+              f"bytes={homo['total_bytes']/1e6:.2f}MB/worker "
+              f"homogeneous wall={homo['wall_clock_s']:.2f}s "
+              f"heterogeneous wall={het['wall_clock_s']:.2f}s "
+              f"(straggler adds {het['straggler_s']:.2f}s compute, "
+              f"stall {het['stall_s']:.2f}s)")
 
     if out_dir:
         os.makedirs(out_dir, exist_ok=True)
@@ -183,31 +246,50 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--method",
                     choices=["ddp", "diloco", "streaming", "overlapped",
-                             "hybrid"],
+                             "pipelined", "hybrid"],
                     default="diloco")
     ap.add_argument("--arch", type=str, default="tiny")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--adaptive-h", action="store_true")
-    ap.add_argument("--delta-dtype", default="float32")
+    ap.add_argument("--sync-dtype", default=None,
+                    choices=["f32", "bf16", "int8", "float32", "bfloat16"],
+                    help="outer-sync wire codec (preferred spelling; "
+                         "overrides --delta-dtype)")
+    ap.add_argument("--delta-dtype", default="float32",
+                    help="legacy spelling of --sync-dtype")
+    ap.add_argument("--no-error-feedback", action="store_true",
+                    help="disable the lossy-codec error-feedback residual")
     ap.add_argument("--drift-aware", action="store_true")
     ap.add_argument("--sync-delay", type=int, default=0,
-                    help="overlapped: steps between delta capture and apply")
+                    help="overlapped/pipelined: steps between delta capture "
+                         "and apply")
     ap.add_argument("--h-jitter", type=int, default=0,
                     help="overlapped: max per-worker straggler jitter")
     ap.add_argument("--fragments", type=int, default=4,
-                    help="streaming: number of fragments F")
+                    help="streaming/pipelined: number of fragments F")
+    ap.add_argument("--worker-speeds", type=str, default="",
+                    help="comma list of per-worker relative step-time "
+                         "multipliers (heterogeneous fleet); feeds the "
+                         "post-run comm-simulator report")
     ap.add_argument("--out-dir", type=str, default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    canon = {"f32": "float32", "bf16": "bfloat16", "int8": "int8",
+             "float32": "float32", "bfloat16": "bfloat16"}
+    delta_dtype = canon[args.sync_dtype] if args.sync_dtype \
+        else args.delta_dtype
+    speeds = tuple(float(s) for s in args.worker_speeds.split(",") if s)
     run_pipeline(method=args.method, arch=args.arch, reduced=args.reduced,
                  steps={"base": args.steps, "mid": args.steps // 2,
                         "sft": args.steps // 2},
                  workers=args.workers, adaptive_h=args.adaptive_h,
-                 delta_dtype=args.delta_dtype, drift_aware=args.drift_aware,
+                 delta_dtype=delta_dtype, drift_aware=args.drift_aware,
                  sync_delay=args.sync_delay, h_jitter=args.h_jitter,
                  num_fragments=args.fragments,
+                 error_feedback=not args.no_error_feedback,
+                 worker_speeds=speeds,
                  seed=args.seed, out_dir=args.out_dir)
 
 

@@ -15,6 +15,7 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 from repro.core.outer_opt import dequantize_delta, quantize_delta
 from repro.configs.base import DiLoCoConfig
 from repro.core.outer_opt import average_deltas
+from repro.core.transport import BF16Cast, Int8Symmetric
 from repro.models.layers import softmax_cross_entropy
 from repro.optim import newton_schulz
 from repro.optim.schedule import lr_schedule
@@ -32,6 +33,36 @@ def test_int8_quantization_error_bound(seed, k, n):
     for i in range(k):
         amax = np.abs(x[i]).max()
         assert np.abs(back[i] - x[i]).max() <= amax / 254 + 1e-9
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 4), st.integers(2, 24))
+def test_int8_codec_roundtrip_error_bound(seed, k, n):
+    """Codec-level statement of the int8 bound: |dec(enc(x)) - x| is at
+    most half a quantization step (amax/254) per worker row, and the
+    error-feedback residual equals the round-trip error exactly."""
+    codec = Int8Symmetric(use_kernel=False)   # oracle path: shapes vary
+    x = np.asarray(jax.random.normal(jax.random.key(seed), (k, n)))
+    res0 = {"w": jnp.zeros((k, n))}
+    payload, new_res = codec.encode({"w": jnp.asarray(x)}, res0)
+    back = np.asarray(codec.decode(payload)["w"])
+    for i in range(k):
+        amax = np.abs(x[i]).max()
+        assert np.abs(back[i] - x[i]).max() <= amax / 254 + 1e-9
+    np.testing.assert_allclose(np.asarray(new_res["w"]), x - back,
+                               atol=1e-7)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 16))
+def test_bf16_codec_exact_on_representable(seed, n):
+    """bf16 cast is the identity on values that already fit in bf16 (f32
+    values rounded to bf16 up front round-trip bit-exactly)."""
+    codec = BF16Cast()
+    x = jax.random.normal(jax.random.key(seed), (2, n))
+    x = x.astype(jnp.bfloat16).astype(jnp.float32)   # representable by construction
+    back = codec.decode(codec.encode({"w": x})[0])["w"]
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
 
 
 @settings(**SETTINGS)
