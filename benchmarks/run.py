@@ -15,6 +15,8 @@
 | TPU deployment (e,g)        | roofline (from the dry-run JSONs)           |
 | engine/step latencies       | micro                                       |
 | continuous vs static batch  | serving (paged-KV scheduler vs buckets)     |
+| device-speed inner loop     | train (per-step vs scan-chunked vs          |
+|                             | chunked+donate+prefetch, BENCH_train.json)  |
 
 Prints ``name,us_per_call,derived`` CSV rows.
 """
@@ -52,7 +54,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", type=str, default=None,
                     help="comma list: micro,comm,strategies,roofline,"
-                         "table1,drift,serving")
+                         "table1,drift,serving,train")
     ap.add_argument("--small", action="store_true",
                     help="CI-smoke sizes (fewer steps, smaller loss runs)")
     ap.add_argument("--calibration", type=str, default=None,
@@ -86,6 +88,9 @@ def main() -> None:
     if want("serving"):
         from benchmarks import serving_bench
         serving_bench.main()
+    if want("train"):
+        from benchmarks import train_bench
+        train_bench.main(small=args.small)
 
 
 if __name__ == "__main__":

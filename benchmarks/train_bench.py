@@ -1,0 +1,187 @@
+"""Training-loop benchmark: the pre-PR per-step loop vs scan-fused chunks
+vs chunks + donation + async prefetch (ISSUE 4's headline numbers).
+
+Four arms run the SAME DiLoCo config (nanochat-d20-tiny — the d20 family
+shrunk to the CPU CI regime where fixed per-step costs rival device
+compute) on the same synthetic token stream:
+
+  legacy_per_step   the pre-PR loop, faithfully: one dispatch + one EAGER
+                    ``float(jnp.mean(loss))`` device round-trip + one
+                    synchronous host batch assembly PER INNER STEP
+  per_step          today's ``run(chunked=False)`` reference loop (still
+                    per-step dispatch, but the loss sync is a raw fetch
+                    + host-side mean)
+  chunked           ``lax.scan`` from sync boundary to sync boundary, one
+                    loss fetch per chunk (H fewer dispatches + host syncs
+                    per outer round)
+  chunked_donate_prefetch
+                    chunked with donated state buffers and the background
+                    ``Prefetcher`` assembling/device-putting batches
+                    ahead of the loop
+
+steps/s uses each run's ``step_seconds`` (median per-step seconds —
+robust to the first-chunk compile spike), so the numbers feed the same
+comm-simulator calibration contract as training runs.  The headline
+``speedup_full`` compares chunked+donate+prefetch against the pre-PR
+loop (``legacy_per_step``), which is the loop this PR replaced.
+
+Emits ``BENCH_train.json`` and ``name,us_per_call,derived`` CSV rows;
+``--only train`` in ``benchmarks/run.py`` runs it (``--small`` for the
+CI-smoke size).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict
+
+# tiny-op regime: one XLA worker thread beats thread-pool handoffs for
+# sub-ms kernels, and it leaves the second CI core free for the
+# prefetcher (best-effort: a no-op if another bench initialised jax
+# first, and force-overridable by setting XLA_FLAGS yourself)
+os.environ.setdefault(
+    "XLA_FLAGS",
+    "--xla_cpu_multi_thread_eigen=false intra_op_parallelism_threads=1")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _make_data_fn(k: int, B: int, S: int, tok, texts, seed: int = 0):
+    """Tokenise-on-demand per-worker batches — the honest host cost of a
+    pretraining data pipeline (BPE encode + pack + shard per step), which
+    the per-step loop pays synchronously and the prefetcher overlaps."""
+    def data(step):
+        need = B * (S + 1)
+        outs = []
+        for w in range(k):
+            rng = np.random.default_rng((seed, step, w))
+            ids: list = []
+            while len(ids) < need:
+                ids.extend(tok.encode(texts[int(rng.integers(len(texts)))]))
+            outs.append(np.asarray(ids[:need], np.int32).reshape(B, S + 1))
+        c = np.stack(outs)
+        return {"tokens": c[:, :, :-1], "labels": c[:, :, 1:]}
+    return data
+
+
+def _legacy_per_step_run(dt, state, data_fn, num_steps: int):
+    """The pre-PR ``DistTrainer.run`` loop, verbatim: per-step jit
+    dispatch, per-step EAGER ``float(jnp.mean(loss))`` host round-trip,
+    synchronous per-step batch assembly.  This is the baseline the
+    chunked hot path replaced."""
+    eng = dt.engine()
+    runner = dt.strategy.bind(eng, state.global_params, donate=False)
+    inner_jit = jax.jit(eng.inner_step)
+    losses = []
+    durs = []
+    t_prev = time.time()
+    for step in range(num_steps):
+        state, loss, _ = inner_jit(state, data_fn(step))
+        loss_mean = float(jnp.mean(loss))
+        losses.append(loss_mean)
+        state, _ = runner.after_step(state, step, loss_mean)
+        t_now = time.time()
+        durs.append(t_now - t_prev)
+        t_prev = t_now
+    state, _ = runner.finalize(state, num_steps)
+    return state, {"loss": losses,
+                   "step_seconds": sorted(durs)[len(durs) // 2]}
+
+
+def bench_train(steps: int = 96, k: int = 2, B: int = 6, S: int = 16,
+                h: int = 32, small: bool = False) -> Dict:
+    import dataclasses
+
+    from repro.configs import get_reduced
+    from repro.configs.base import DiLoCoConfig, OptimizerConfig
+    from repro.core import DiLoCoSync, DistTrainer
+    from repro.data import build_tokenizer, synthetic
+    from repro.models import build_model
+    from repro.models.transformer import init_params
+
+    if small:
+        steps, h = 48, 16
+
+    # nanochat-d20-tiny: the d20 family shrunk until per-step FIXED costs
+    # (dispatch, host loss sync, batch assembly) rival device compute —
+    # the regime the chunked loop exists to fix, and the regime every
+    # tiny-config CI run and paper-repro simulation actually lives in
+    # (muon_ns_steps/grad_clip trimmed for the same reason: identical in
+    # every arm, fewer sub-ms ops drowning the loop mechanics)
+    cfg = dataclasses.replace(
+        get_reduced("nanochat-d20"), name="nanochat-d20-tiny",
+        num_layers=1, d_model=16, num_heads=1, num_kv_heads=1, head_dim=16,
+        d_ff=64, vocab_size=512)
+    model = build_model(cfg)
+    params, _ = init_params(cfg, jax.random.key(0))
+    opt_cfg = OptimizerConfig(total_steps=steps, warmup_steps=0,
+                              schedule="constant", learning_rate=0.02,
+                              adam_lr=1e-3, muon_ns_steps=2, grad_clip=0.0)
+    dcfg = DiLoCoConfig(num_workers=k, h_inner_steps=h)
+    world = synthetic.World.make(40, seed=1234)
+    texts = synthetic.gen_pretrain_texts(world, 2000, seed=0)
+    tok = build_tokenizer(texts[:500], cfg.vocab_size)
+    data = _make_data_fn(k, B, S, tok, texts)
+
+    arms = {
+        "legacy_per_step": None,
+        "per_step": dict(chunked=False),
+        "chunked": dict(chunked=True, donate=False, prefetch=0),
+        "chunked_donate_prefetch": dict(chunked=True, donate=True,
+                                        prefetch=2 * h),
+    }
+    results: Dict = {"config": {"arch": cfg.name, "steps": steps, "k": k,
+                                "B": B, "S": S, "h": h}}
+    tokens_per_step = k * B * S
+    for name, kw in arms.items():
+        dt = DistTrainer(model.loss, opt_cfg, dcfg, DiLoCoSync())
+        state = dt.init(params)
+        if kw is None:
+            _, hist = _legacy_per_step_run(dt, state, data, steps)
+        else:
+            _, hist = dt.run(state, data, steps, **kw)
+        sec = hist["step_seconds"]
+        results[name] = {
+            "step_seconds": sec,
+            "steps_per_s": 1.0 / sec if sec else float("inf"),
+            "tokens_per_s": tokens_per_step / sec if sec else float("inf"),
+            "loss_first": hist["loss"][0],
+            "loss_last": hist["loss"][-1],
+        }
+    legacy = results["legacy_per_step"]["step_seconds"]
+    results["speedup_chunked"] = (legacy
+                                  / results["chunked"]["step_seconds"])
+    results["speedup_full"] = (
+        legacy / results["chunked_donate_prefetch"]["step_seconds"])
+    # the arms run identical math on identical data (chunked-vs-per-step
+    # bit-exactness is enforced by tests/test_chunked.py) — a diverging
+    # loss beyond reduction-order noise means the benchmark is comparing
+    # different runs
+    losses = [results[a]["loss_last"] for a in arms]
+    results["losses_agree"] = all(abs(l - losses[0]) < 1e-5 for l in losses)
+    return results
+
+
+def main(small: bool = False) -> None:
+    res = bench_train(small=small)
+    with open("BENCH_train.json", "w") as f:
+        json.dump(res, f, indent=1)
+    print("name,us_per_call,derived")
+    for arm in ("legacy_per_step", "per_step", "chunked",
+                "chunked_donate_prefetch"):
+        r = res[arm]
+        print(f"train/{arm},{r['step_seconds'] * 1e6:.1f},"
+              f"steps_per_s={r['steps_per_s']:.2f} "
+              f"tokens_per_s={r['tokens_per_s']:.0f} "
+              f"loss_last={r['loss_last']:.4f}")
+    print(f"train/speedup,0.0,"
+          f"chunked={res['speedup_chunked']:.2f}x "
+          f"chunked_donate_prefetch={res['speedup_full']:.2f}x "
+          f"losses_agree={res['losses_agree']}")
+
+
+if __name__ == "__main__":
+    main()

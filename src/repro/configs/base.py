@@ -204,6 +204,9 @@ class OptimizerConfig:
     muon_momentum: float = 0.95
     muon_ns_steps: int = 5
     grad_clip: float = 1.0
+    fused_adamw: bool = False         # fused Pallas AdamW update kernel
+                                      # (repro.kernels.fused_adamw): same
+                                      # update math, ulp-level agreement
     warmup_steps: int = 32
     schedule: str = "wsd"             # wsd | cosine | constant
     total_steps: int = 1000

@@ -90,6 +90,40 @@ class DiLoCoTrainer:
                                inner_step=state.inner_step + 1),
                 loss, metrics)
 
+    def inner_chunk(self, state: DiLoCoState, batches
+                    ) -> Tuple[DiLoCoState, jax.Array]:
+        """Scan-fused run of T inner steps — the device-speed hot path.
+
+        ``batches`` carry a leading (T, K, ...) time dim; the scan compiles
+        ONE program for the whole chunk, so the T per-step dispatches (and
+        their host round-trips) collapse into a single device call.
+        Returns ``(state, losses)`` with ``losses`` the (T, K) per-worker
+        per-step losses — fetched once per chunk by the caller, never per
+        step.  The losses leave the program RAW, exactly like the
+        per-step jit's loss output: reducing them on device here would
+        let XLA fuse (and reassociate) the loss reduction differently
+        than the per-step program does, breaking recorded-loss
+        bit-exactness; the worker mean is instead taken on the host in a
+        fixed order (``dist_trainer._host_mean``) in both loops.
+
+        The scan carry holds ONLY what the inner step mutates
+        (``worker_params``, ``inner_opt``, ``inner_step``);
+        ``global_params`` and the outer-optimizer state are loop-invariant
+        closures, so XLA hoists them instead of threading (and on some
+        backends copying) them through every iteration.
+        """
+        def body(carry, batch):
+            wp, opt, istep = carry
+            st = state._replace(worker_params=wp, inner_opt=opt,
+                                inner_step=istep)
+            st, loss, _ = self.inner_step(st, batch)
+            return (st.worker_params, st.inner_opt, st.inner_step), loss
+
+        carry = (state.worker_params, state.inner_opt, state.inner_step)
+        (wp, opt, istep), losses = jax.lax.scan(body, carry, batches)
+        return (state._replace(worker_params=wp, inner_opt=opt,
+                               inner_step=istep), losses)
+
     # -- outer step ----------------------------------------------------------
     def init_residual(self, params):
         """Per-worker (K, ...) error-feedback residual for lossy codecs, or

@@ -15,21 +15,96 @@ History keys: ``step`` / ``loss`` (every ``record_every``), ``sync_steps``
 ``evals`` (``(step, eval_fn(global_params))`` pairs), ``step_seconds``
 (median measured seconds per inner step — robust to jit-compile spikes;
 feeds the comm simulator's calibration).
+
+The hot path (chunked execution)
+--------------------------------
+DiLoCo's premise is that the H local steps dominate wall-clock while sync
+is rare — so the device must never wait on Python between syncs.  The
+default ``chunked=True`` loop makes that true:
+
+* **chunk = steps to the next sync event.**  Each ``SyncRunner`` exposes
+  ``next_event(step)`` — the next step whose ``after_step`` touches device
+  state (an outer sync, a delayed apply, a straggler snapshot).  The loop
+  ``lax.scan``s the inner step from the current step to exactly that
+  boundary (further split by ``eval_every`` and ``num_steps``), so one
+  device dispatch replaces ~H per-step dispatches.  For DiLoCo the chunk
+  boundaries ARE the H boundaries; for streaming/pipelined schedules the
+  fragment events fire at the same steps they would per-step.
+* **one fetch per chunk.**  Per-step per-worker losses come back as one
+  (T, K) device array fetched with a single ``device_get``; ``after_step``
+  is then replayed per step on the host with fixed-order means of those
+  rows (between events it is pure bookkeeping by contract, see
+  ``SyncRunner``), so histories —
+  ``step``/``loss``/``sync_steps``/``frag_syncs``/``evals`` — are
+  bit-identical to the per-step loop's.
+* **buffer donation.**  The chunk jit donates the state (params, momenta,
+  and optimizer moments update in place on accelerators), as do the
+  runners' outer-step jits.  ``run`` defensively copies the caller's
+  state once at entry so the passed-in state object survives the run.
+* **async prefetch.**  ``prefetch=N`` sources batches from a background
+  ``repro.data.pipeline.Prefetcher`` that assembles batches up to N steps
+  ahead (one stacked ``device_put`` per chunk at take time), overlapping
+  host data work with device compute.
+* ``step_seconds`` is each chunk's wall-clock divided by its length
+  (median over chunks), preserving the comm-simulator calibration
+  contract.
+
+``chunked=False`` keeps the original per-step loop — the reference the
+bit-exactness tests (and ``benchmarks/train_bench.py``) compare against.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+import numpy as np
 
 from repro.configs.base import DiLoCoConfig, OptimizerConfig
 from repro.core.diloco import DiLoCoState
 from repro.core.streaming import StreamingDiLoCoTrainer
 from repro.core.sync import SyncStrategy
 
+# the loop's single deliberate device->host read per chunk — module-level so
+# the one-fetch guard test can count calls
+_fetch = jax.device_get
+
+# CPU backends ignore donation for some buffers; the advisory warning would
+# fire once per compiled chunk length.  Applied via catch_warnings inside
+# run() only — a library import must not rewrite global warning filters.
+_DONATION_WARNING = "Some donated buffers were not usable"
+
+
+def _bind(strategy: SyncStrategy, engine, params, donate: bool):
+    """strategy.bind with the ``donate`` flag, tolerating pre-existing
+    custom strategies whose bind() lacks the parameter."""
+    import inspect
+    try:
+        has_donate = "donate" in inspect.signature(strategy.bind).parameters
+    except (TypeError, ValueError):
+        has_donate = False
+    return (strategy.bind(engine, params, donate=donate) if has_donate
+            else strategy.bind(engine, params))
+
+
+def _host_mean(row: np.ndarray) -> float:
+    """Worker-mean of a fetched (K,) loss row, in a FIXED summation order.
+
+    Both loops record means of the RAW per-worker losses their jits
+    output; reducing on device would let XLA pick a different reduce
+    association per program (eager op vs scan body — a 1-ulp wobble that
+    breaks chunked-vs-per-step bit-exactness and, through ``AdaptiveH``'s
+    loss window, could even flip a sync decision).  Host IEEE f32 adds in
+    index order are deterministic everywhere.
+    """
+    acc = row[0]
+    for x in row[1:]:
+        acc = acc + x
+    return float(acc / row.dtype.type(len(row)))
 
 @dataclasses.dataclass(frozen=True)
 class DistTrainer:
@@ -54,10 +129,128 @@ class DistTrainer:
 
     def run(self, state: DiLoCoState, data_fn, num_steps: int,
             record_every: int = 1, eval_fn: Optional[Callable] = None,
-            eval_every: int = 0) -> Tuple[DiLoCoState, Dict]:
-        """data_fn(step) -> per-worker-stacked batch pytree."""
+            eval_every: int = 0, *, chunked: bool = True,
+            donate: bool = True, prefetch: int = 0,
+            max_chunk: int = 128) -> Tuple[DiLoCoState, Dict]:
+        """data_fn(step) -> per-worker-stacked batch pytree.
+
+        ``chunked`` selects the scan-fused hot path (see module docstring);
+        ``donate`` donates state buffers to the chunk/outer jits;
+        ``prefetch`` > 0 assembles batches that many steps ahead on a
+        background thread; ``max_chunk`` caps the scanned chunk length —
+        ending a chunk early is always safe (between events ``after_step``
+        is pure bookkeeping), and the cap bounds the on-device footprint
+        of the stacked chunk batches for event-free strategies like DDP
+        (0 = only events/evals/num_steps bound it; the default covers the
+        paper's H=100 rounds in one chunk).
+        """
+        if not chunked:
+            if prefetch > 0:
+                raise ValueError(
+                    "prefetch requires the chunked loop (chunked=True): "
+                    "the per-step reference loop assembles batches "
+                    "synchronously and would silently ignore it")
+            # donate/max_chunk don't apply either: the reference loop
+            # never donates and has no chunks
+            return self._run_per_step(state, data_fn, num_steps,
+                                      record_every, eval_fn, eval_every)
         eng = self.engine()
-        runner = self.strategy.bind(eng, state.global_params)
+        runner = _bind(self.strategy, eng, state.global_params, donate)
+        inner_chunk = jax.jit(eng.inner_chunk,
+                              donate_argnums=(0,) if donate else ())
+        if donate:
+            # the first chunk donates the caller's state buffers; copy once
+            # so the object the caller passed in survives the run
+            state = jax.tree.map(jnp.copy, state)
+
+        from repro.data.pipeline import Prefetcher, stack_batches
+        source = (Prefetcher(data_fn, num_steps, depth=prefetch)
+                  if prefetch > 0 else None)
+
+        history: Dict[str, list] = {"step": [], "loss": [], "sync_steps": [],
+                                    "frag_syncs": [], "evals": []}
+
+        def record(recs):
+            for key, val in recs:
+                history[key].append(val)
+
+        chunk_step_seconds = []
+        with warnings.catch_warnings():
+            warnings.filterwarnings("ignore", message=_DONATION_WARNING)
+            try:
+                step = 0
+                t_prev = time.time()
+                while step < num_steps:
+                    end = num_steps - 1
+                    event = runner.next_event(step)
+                    if event is not None:
+                        end = min(end, max(event, step))
+                    if eval_fn is not None and eval_every:
+                        # an eval landing mid-chunk splits the chunk (the
+                        # eval must see the state at exactly that step)
+                        end = min(end,
+                                  (step // eval_every + 1) * eval_every - 1)
+                    if max_chunk:
+                        end = min(end, step + max_chunk - 1)
+                    T = end - step + 1
+                    batches = (source.take(step, T) if source is not None
+                               else stack_batches([data_fn(s)
+                                                   for s in
+                                                   range(step, end + 1)]))
+                    state, losses = inner_chunk(state, batches)
+                    losses_host = _fetch(losses)    # ONE fetch per chunk
+                    for i in range(T):
+                        s = step + i
+                        loss_mean = _host_mean(losses_host[i])
+                        if s % record_every == 0:
+                            history["step"].append(s)
+                            history["loss"].append(loss_mean)
+                        new_state, recs = runner.after_step(state, s,
+                                                            loss_mean)
+                        if new_state is not state and i != T - 1:
+                            raise RuntimeError(
+                                f"sync runner replaced the state at step "
+                                f"{s}, mid-chunk (chunk ends at {end}): "
+                                f"next_event() must report every step "
+                                f"whose after_step touches device state — "
+                                f"e.g. an HSchedule that fires before "
+                                f"since_sync reaches current_h violates "
+                                f"the chunked contract; run with "
+                                f"chunked=False for such schedules")
+                        state = new_state
+                        record(recs)
+                    t_now = time.time()
+                    chunk_step_seconds.append((t_now - t_prev) / T)
+                    t_prev = t_now
+                    if (eval_fn is not None and eval_every
+                            and (end + 1) % eval_every == 0):
+                        state = runner.refresh(state)
+                        history["evals"].append(
+                            (end, eval_fn(state.global_params)))
+                        t_prev = time.time()    # eval time != step time
+                    step = end + 1
+            finally:
+                if source is not None:
+                    source.close()
+            state, recs = runner.finalize(state, num_steps)
+            record(recs)
+        # measured steady-state seconds/step: median over per-chunk means is
+        # robust to the jit-compile spikes on first-seen chunk lengths
+        history["step_seconds"] = sorted(chunk_step_seconds)[
+            len(chunk_step_seconds) // 2] if chunk_step_seconds else 0.0
+        return state, history
+
+    def _run_per_step(self, state: DiLoCoState, data_fn, num_steps: int,
+                      record_every: int = 1,
+                      eval_fn: Optional[Callable] = None,
+                      eval_every: int = 0) -> Tuple[DiLoCoState, Dict]:
+        """The original per-step loop: one dispatch + one host sync per
+        inner step.  Kept as the reference for the chunked path's
+        bit-exactness tests and as the benchmark baseline.  Binds with
+        donate=False — the pre-chunking loop never donated, and an
+        eval_fn here may retain references into the live state."""
+        eng = self.engine()
+        runner = _bind(self.strategy, eng, state.global_params, False)
         inner_jit = jax.jit(eng.inner_step)
         history: Dict[str, list] = {"step": [], "loss": [], "sync_steps": [],
                                     "frag_syncs": [], "evals": []}
@@ -70,7 +263,9 @@ class DistTrainer:
         t_prev = time.time()
         for step in range(num_steps):
             state, loss, _ = inner_jit(state, data_fn(step))
-            loss_mean = float(jnp.mean(loss))
+            # host-side fixed-order mean of the raw per-worker losses —
+            # bit-identical to the chunked loop's recording (_host_mean)
+            loss_mean = _host_mean(np.asarray(loss))
             if step % record_every == 0:
                 history["step"].append(step)
                 history["loss"].append(loss_mean)

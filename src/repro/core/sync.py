@@ -85,11 +85,30 @@ class SyncEvent:
 
 
 class SyncRunner:
-    """Per-run host-side state machine created by ``SyncStrategy.bind``."""
+    """Per-run host-side state machine created by ``SyncStrategy.bind``.
+
+    The chunked ``DistTrainer`` loop (``core.dist_trainer``) scans inner
+    steps on device until the runner's next *event* — a step whose
+    ``after_step`` touches device state (sync, snapshot, delayed apply).
+    Between events ``after_step`` must be pure host bookkeeping (counters,
+    loss windows) that ignores ``state``, because under chunking it is
+    called with the post-chunk state for every step of the chunk.  When
+    bound with ``donate=True`` the runner jits donate their
+    state/residual arguments (params and momenta update in place), so any
+    snapshot a runner keeps across steps must be a fresh buffer, never an
+    alias of ``state`` leaves.
+    """
 
     def after_step(self, state, step: int, loss: float):
         """Called after every inner step; returns (state, records)."""
         return state, []
+
+    def next_event(self, step: int) -> Optional[int]:
+        """First step >= ``step`` whose ``after_step`` may touch device
+        state; ``None`` = no event before the run ends.  The base class is
+        maximally conservative (every step is an event), which degrades
+        the chunked loop to per-step execution."""
+        return step
 
     def refresh(self, state):
         """Bring ``global_params`` up to date for an observer (eval hook);
@@ -104,7 +123,12 @@ class SyncRunner:
 class SyncStrategy:
     name = "base"
 
-    def bind(self, engine, params) -> SyncRunner:
+    def bind(self, engine, params, donate: bool = True) -> SyncRunner:
+        """Create the per-run state machine.  ``donate`` controls whether
+        the runner's outer-step jits donate their state/residual
+        arguments (``DistTrainer.run`` threads its own ``donate`` flag
+        here; the per-step reference loop passes False to keep the
+        pre-chunking no-donation behaviour)."""
         raise NotImplementedError
 
     def payload_schedule(self, n_params: int, num_steps: int,
@@ -122,6 +146,9 @@ class _DDPRunner(SyncRunner):
         # by construction — nothing to exchange, just record the cadence.
         return state, [("sync_steps", step)]
 
+    def next_event(self, step):
+        return None     # never touches device state between refreshes
+
     def refresh(self, state):
         gp = jax.tree.map(lambda w: w[0], state.worker_params)
         return state._replace(global_params=gp)
@@ -135,7 +162,7 @@ class DDPSync(SyncStrategy):
     """Fully synchronous baseline: fp32 gradient all-reduce every step."""
     name = "ddp"
 
-    def bind(self, engine, params) -> SyncRunner:
+    def bind(self, engine, params, donate: bool = True) -> SyncRunner:
         if engine.cfg.num_workers != 1:
             raise ValueError(
                 "DDPSync is the K=1 + global-batch baseline; "
@@ -154,11 +181,12 @@ class DDPSync(SyncStrategy):
 # ---------------------------------------------------------------------------
 
 class _DiLoCoRunner(SyncRunner):
-    def __init__(self, engine, params, hs: HSchedule):
+    def __init__(self, engine, params, hs: HSchedule, donate: bool = True):
         self.hs = hs
         self.since = 0
         self.residual = engine.init_residual(params)
-        self._outer = jax.jit(engine.outer_step_ef)
+        self._outer = jax.jit(engine.outer_step_ef,
+                              donate_argnums=(0, 1) if donate else ())
 
     def _sync(self, state):
         state, self.residual = self._outer(state, self.residual)
@@ -176,6 +204,17 @@ class _DiLoCoRunner(SyncRunner):
             return self._sync(state), [("sync_steps", num_steps - 1)]
         return state, []
 
+    def next_event(self, step):
+        # syncs fire when since_sync reaches the schedule's current H, and
+        # every supported HSchedule only changes H at a sync (AdaptiveH's
+        # loss window is fed per step by after_step, but its slope check
+        # runs at the boundary), so the next boundary is deterministic
+        try:
+            h = int(self.hs.current_h)
+        except Exception:       # exotic schedule: degrade to per-step
+            return step
+        return step + max(h - self.since, 1) - 1
+
 
 @dataclasses.dataclass(frozen=True)
 class DiLoCoSync(SyncStrategy):
@@ -188,9 +227,9 @@ class DiLoCoSync(SyncStrategy):
     h: Optional[int] = None
     h_schedule: Optional[HSchedule] = None
 
-    def bind(self, engine, params) -> SyncRunner:
+    def bind(self, engine, params, donate: bool = True) -> SyncRunner:
         hs = self.h_schedule or FixedH(self.h or engine.cfg.h_inner_steps)
-        return _DiLoCoRunner(engine, params, hs)
+        return _DiLoCoRunner(engine, params, hs, donate)
 
     def payload_schedule(self, n_params, num_steps, cfg):
         h = self.h or cfg.h_inner_steps
@@ -206,13 +245,15 @@ class DiLoCoSync(SyncStrategy):
 # ---------------------------------------------------------------------------
 
 class _StreamingRunner(SyncRunner):
-    def __init__(self, engine, params):
+    def __init__(self, engine, params, donate: bool = True):
         from repro.core.streaming import fragment_masks
         self.F = engine.num_fragments
         self.masks = fragment_masks(params, self.F)
         self.period = engine.fragment_schedule()
         self.residual = engine.init_residual(params)
-        self._frag = jax.jit(engine.outer_step_fragment_ef)
+        # donate state + residual (arg 1 is the reused fragment mask)
+        self._frag = jax.jit(engine.outer_step_fragment_ef,
+                             donate_argnums=(0, 2) if donate else ())
 
     def after_step(self, state, step, loss):
         if (step + 1) % self.period == 0:
@@ -222,6 +263,10 @@ class _StreamingRunner(SyncRunner):
             return state, [("frag_syncs", (step, f))]
         return state, []
 
+    def next_event(self, step):
+        # fragment boundaries: every step s with (s + 1) % period == 0
+        return (step // self.period + 1) * self.period - 1
+
 
 @dataclasses.dataclass(frozen=True)
 class StreamingSync(SyncStrategy):
@@ -230,8 +275,8 @@ class StreamingSync(SyncStrategy):
     name = "streaming"
     num_fragments: int = 4
 
-    def bind(self, engine, params) -> SyncRunner:
-        return _StreamingRunner(engine, params)
+    def bind(self, engine, params, donate: bool = True) -> SyncRunner:
+        return _StreamingRunner(engine, params, donate)
 
     def payload_schedule(self, n_params, num_steps, cfg):
         h = cfg.h_inner_steps
@@ -258,7 +303,7 @@ class _OverlappedRunner(SyncRunner):
     With delay=0 and jitter=0 this is exactly ``DiLoCoSync``."""
 
     def __init__(self, engine, params, h: int, delay: int, jitter: int,
-                 seed: int):
+                 seed: int, donate: bool = True):
         if not 0 <= delay < h:
             raise ValueError(f"need 0 <= delay < h, got delay={delay} h={h}")
         if jitter < 0 or jitter + delay >= h:
@@ -278,8 +323,13 @@ class _OverlappedRunner(SyncRunner):
         self._snap_row = jax.jit(
             lambda buf, wp, i: jax.tree.map(
                 lambda b, w: b.at[i].set(w[i]), buf, wp))
-        self._apply = jax.jit(self._apply_impl)
-        self._outer = jax.jit(engine.outer_step_ef)
+        # donate state + residual; the snapshot is NOT donated — there is
+        # no second (K, ...) output left to reuse its buffer for (the
+        # worker-param output aliases the donated state's)
+        self._apply = jax.jit(self._apply_impl,
+                              donate_argnums=(0, 2) if donate else ())
+        self._outer = jax.jit(engine.outer_step_ef,
+                              donate_argnums=(0, 1) if donate else ())
 
     def _draw_snap_steps(self) -> Dict[int, int]:
         """Worker i's delta leaves jitter_i steps before the boundary — a
@@ -311,14 +361,23 @@ class _OverlappedRunner(SyncRunner):
         records: Records = []
         due = [i for i, s in self.snap_steps.items() if s == step]
         if due:
-            if self.buf is None:
-                self.buf = state.worker_params
-            for i in due:
-                self.buf = self._snap_row(self.buf, state.worker_params,
-                                          jnp.int32(i))
+            if self.jitter == 0:
+                # every worker snaps at the boundary: one whole-tree copy
+                # (fresh buffers — the donated chunk/apply jits recycle
+                # the state's, so the snapshot must never alias them)
+                self.buf = jax.tree.map(jnp.copy, state.worker_params)
+            else:
+                if self.buf is None:
+                    self.buf = state.worker_params
+                for i in due:
+                    # .at[].set yields fresh buffers, so the finished buf
+                    # never aliases donated state leaves either
+                    self.buf = self._snap_row(self.buf, state.worker_params,
+                                              jnp.int32(i))
         if step == self.round_end:
-            self.pending = (self.buf if self.buf is not None
-                            else state.worker_params)
+            # every worker's snap step is <= round_end and was processed
+            # above, so buf is always populated here
+            self.pending = self.buf
             self.pending_apply = step + self.delay
             self.buf = None
             self.round_end += self.h
@@ -329,6 +388,13 @@ class _OverlappedRunner(SyncRunner):
             self.pending = None
             records.append(("sync_steps", step))
         return state, records
+
+    def next_event(self, step):
+        cands = [s for s in self.snap_steps.values() if s >= step]
+        cands.append(self.round_end)
+        if self.pending is not None:
+            cands.append(max(self.pending_apply, step))
+        return min(cands)
 
     def finalize(self, state, num_steps):
         records: Records = []
@@ -356,10 +422,10 @@ class OverlappedSync(SyncStrategy):
     jitter: int = 0
     seed: int = 0
 
-    def bind(self, engine, params) -> SyncRunner:
+    def bind(self, engine, params, donate: bool = True) -> SyncRunner:
         h = self.h or engine.cfg.h_inner_steps
         return _OverlappedRunner(engine, params, h, self.delay, self.jitter,
-                                 self.seed)
+                                 self.seed, donate)
 
     def payload_schedule(self, n_params, num_steps, cfg):
         h = self.h or cfg.h_inner_steps
@@ -383,7 +449,8 @@ class _PipelinedRunner(SyncRunner):
     slots keep diverging until their round comes up.  With F=1, delay=0
     this is exactly ``DiLoCoSync``."""
 
-    def __init__(self, engine, params, h: int, delay: int, num_fragments: int):
+    def __init__(self, engine, params, h: int, delay: int,
+                 num_fragments: int, donate: bool = True):
         if not 0 <= delay < h:
             raise ValueError(f"need 0 <= delay < h, got delay={delay} h={h}")
         from repro.core.streaming import fragment_masks
@@ -394,8 +461,10 @@ class _PipelinedRunner(SyncRunner):
         self.round = 0
         self.pending = None             # (snapshot, fragment) awaiting apply
         self.pending_apply = -1
-        self._apply = jax.jit(self._apply_impl, static_argnames=("frag",))
-        self._outer = jax.jit(engine.outer_step_ef)
+        self._apply = jax.jit(self._apply_impl, static_argnames=("frag",),
+                              donate_argnums=(0, 2) if donate else ())
+        self._outer = jax.jit(engine.outer_step_ef,
+                              donate_argnums=(0, 1) if donate else ())
 
     def _apply_impl(self, state, snap, residual, *, frag: int):
         cfg = self.engine.cfg
@@ -434,7 +503,10 @@ class _PipelinedRunner(SyncRunner):
     def after_step(self, state, step, loss):
         records: Records = []
         if (step + 1) % self.h == 0:
-            self.pending = (state.worker_params, self.round % self.F)
+            # copy, not alias: the chunked loop (and the donated apply)
+            # consume the state's buffers while this snapshot is in flight
+            self.pending = (jax.tree.map(jnp.copy, state.worker_params),
+                            self.round % self.F)
             self.pending_apply = step + self.delay
             self.round += 1
         if self.pending is not None and step >= self.pending_apply:
@@ -444,6 +516,12 @@ class _PipelinedRunner(SyncRunner):
             self.pending = None
             records.append(("frag_syncs", (step, frag)))
         return state, records
+
+    def next_event(self, step):
+        cands = [(step // self.h + 1) * self.h - 1]   # next round boundary
+        if self.pending is not None:
+            cands.append(max(self.pending_apply, step))
+        return min(cands)
 
     def finalize(self, state, num_steps):
         records: Records = []
@@ -470,10 +548,10 @@ class PipelinedSync(SyncStrategy):
     num_fragments: int = 4
     delay: int = 0
 
-    def bind(self, engine, params) -> SyncRunner:
+    def bind(self, engine, params, donate: bool = True) -> SyncRunner:
         h = self.h or engine.cfg.h_inner_steps
         return _PipelinedRunner(engine, params, h, self.delay,
-                                self.num_fragments)
+                                self.num_fragments, donate)
 
     def payload_schedule(self, n_params, num_steps, cfg):
         h = self.h or cfg.h_inner_steps

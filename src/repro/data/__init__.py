@@ -1,6 +1,7 @@
 from repro.data.tokenizer import BPETokenizer, SPECIAL_TOKENS
-from repro.data.pipeline import PackedDataset, build_tokenizer
+from repro.data.pipeline import (PackedDataset, Prefetcher, build_tokenizer,
+                                 stack_batches)
 from repro.data import synthetic
 
-__all__ = ["BPETokenizer", "SPECIAL_TOKENS", "PackedDataset",
-           "build_tokenizer", "synthetic"]
+__all__ = ["BPETokenizer", "SPECIAL_TOKENS", "PackedDataset", "Prefetcher",
+           "build_tokenizer", "stack_batches", "synthetic"]

@@ -1,0 +1,4 @@
+from repro.kernels.fused_adamw.ops import fused_adamw_update
+from repro.kernels.fused_adamw.ref import reference_fused_adamw
+
+__all__ = ["fused_adamw_update", "reference_fused_adamw"]

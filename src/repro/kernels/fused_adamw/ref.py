@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the fused AdamW update kernel.
+
+These are the semantics of record — exactly the per-leaf math of
+``repro.optim.adamw`` (same ops on the same f32 intermediates).  The
+Pallas kernel must match this oracle to within XLA's shape-dependent
+FMA-contraction noise (~1-2 ulp; the kernel computes on flattened
+(1, M) views and a ``pallas_call`` is a fusion barrier, so bit-identical
+rounding across both programs is not guaranteed on CPU).  Bias
+corrections ``bc1 = 1 - b1**t`` / ``bc2 = 1 - b2**t``
+are computed by the caller (they are per-step scalars shared by every
+leaf) and divided through inside, mirroring the unfused path.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def reference_fused_adamw(p, g, m, v, lr, bc1, bc2, *, b1: float, b2: float,
+                          eps: float, wd: float):
+    """One AdamW step on a single leaf.
+
+    ``p``/``g`` in any float dtype (cast to f32 like the unfused path),
+    ``m``/``v`` f32 moments, ``lr``/``bc1``/``bc2`` f32 scalars (may be
+    traced — schedules and bias corrections are step-dependent).  Returns
+    ``(update, new_m, new_v)`` — the update is applied by the caller via
+    ``apply_updates`` so the ``Optimizer`` contract is unchanged.
+    """
+    g = g.astype(jnp.float32)
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * jnp.square(g)
+    mhat = m / bc1
+    vhat = v / bc2
+    u = -lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p.astype(jnp.float32))
+    return u, m, v

@@ -8,6 +8,9 @@
 * ``make_diloco_steps`` — (inner, outer) for the multi-pod mesh: inner is
                           the vmapped per-pod step (no cross-pod traffic);
                           outer is the delta exchange + Nesterov update.
+* ``make_inner_chunk``  — the scan-fused H-step inner chunk (the hot path
+                          ``DistTrainer`` runs): one program per outer
+                          round, for dry-run lowering / HLO inspection.
 * ``make_prefill_step`` — full-sequence forward (inference prefill).
 * ``make_serve_step``   — one-token decode against a KV cache.
 """
@@ -50,6 +53,19 @@ def make_diloco_steps(model: ModelAPI, opt_cfg: OptimizerConfig,
         return new_state, loss
 
     return inner, trainer.outer_step
+
+
+def make_inner_chunk(model: ModelAPI, opt_cfg: OptimizerConfig,
+                     dcfg: DiLoCoConfig, replicate_fn=None) -> Callable:
+    """``chunk(state, batches) -> (state, (T, K) losses)`` with a leading
+    (T, ...) time dim on ``batches`` — the scan-fused inner program the
+    chunked ``DistTrainer`` loop dispatches once per sync interval.
+    Useful for dry-run lowering: the whole H-step round is ONE HLO module
+    whose only cross-pod collectives would be bugs (inner steps are
+    pod-local by construction)."""
+    trainer = DiLoCoTrainer(model.loss, opt_cfg, dcfg,
+                            replicate_fn=replicate_fn)
+    return trainer.inner_chunk
 
 
 def make_prefill_step(model: ModelAPI) -> Callable:

@@ -78,7 +78,7 @@ def make_model(arch: str, reduced: bool, vocab_size: int):
 def run_stage(method: str, model, params, stage_ds, *, steps: int,
               workers: int, per_worker_batch: int, h: int,
               opt_cfg, diloco_cfg, seed: int = 0,
-              h_schedule=None):
+              h_schedule=None, prefetch: int = 0):
     """Run one pipeline stage under any sync strategy; returns
     (final params, history).  All methods go through the unified
     ``DistTrainer`` runtime — ``method`` picks the ``SyncStrategy``."""
@@ -112,7 +112,7 @@ def run_stage(method: str, model, params, stage_ds, *, steps: int,
     trainer = DistTrainer(model.loss, opt_cfg, dcfg,
                           make_strategy(dcfg, h_schedule=h_schedule))
     state = trainer.init(params)
-    state, hist = trainer.run(state, data, steps)
+    state, hist = trainer.run(state, data, steps, prefetch=prefetch)
     return state.global_params, hist
 
 
@@ -155,6 +155,7 @@ def run_pipeline(method: str = "diloco", arch: str = "tiny",
                  sync_delay: int = 0, h_jitter: int = 0,
                  num_fragments: int = 4, error_feedback: bool = True,
                  worker_speeds: Sequence[float] = (),
+                 prefetch: int = 0, fused_adamw: bool = False,
                  seed: int = 0, out_dir: Optional[str] = None,
                  eval_after_each_stage: bool = True) -> Dict:
     """The full three-stage pipeline under one method.  Returns metrics."""
@@ -175,7 +176,7 @@ def run_pipeline(method: str = "diloco", arch: str = "tiny",
     total = sum(steps.values())
     opt_cfg = OptimizerConfig(total_steps=total, warmup_steps=20,
                               schedule="wsd", learning_rate=0.02,
-                              adam_lr=1e-3)
+                              adam_lr=1e-3, fused_adamw=fused_adamw)
     dcfg = DiLoCoConfig(num_workers=workers, delta_dtype=delta_dtype,
                         drift_aware=drift_aware, sync_delay=sync_delay,
                         h_jitter=h_jitter, num_fragments=num_fragments,
@@ -198,7 +199,8 @@ def run_pipeline(method: str = "diloco", arch: str = "tiny",
             stage_method, model, params, stages[stage],
             steps=steps[stage], workers=workers,
             per_worker_batch=per_worker_batch, h=h_by_stage[stage],
-            opt_cfg=opt_cfg, diloco_cfg=dcfg, seed=seed, h_schedule=hs)
+            opt_cfg=opt_cfg, diloco_cfg=dcfg, seed=seed, h_schedule=hs,
+            prefetch=prefetch)
         entry = {"loss_first": hist["loss"][0], "loss_last": hist["loss"][-1],
                  "losses": hist["loss"][:: max(1, len(hist["loss"]) // 50)],
                  "method": stage_method,
@@ -273,6 +275,12 @@ def main(argv=None):
                     help="comma list of per-worker relative step-time "
                          "multipliers (heterogeneous fleet); feeds the "
                          "post-run comm-simulator report")
+    ap.add_argument("--prefetch", type=int, default=0,
+                    help="assemble + device_put batches this many steps "
+                         "ahead on a background thread (0 = synchronous)")
+    ap.add_argument("--fused-adamw", action="store_true",
+                    help="use the fused Pallas AdamW update kernel (same "
+                         "update math as the unfused path)")
     ap.add_argument("--out-dir", type=str, default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -289,7 +297,8 @@ def main(argv=None):
                  sync_delay=args.sync_delay, h_jitter=args.h_jitter,
                  num_fragments=args.fragments,
                  error_feedback=not args.no_error_feedback,
-                 worker_speeds=speeds,
+                 worker_speeds=speeds, prefetch=args.prefetch,
+                 fused_adamw=args.fused_adamw,
                  seed=args.seed, out_dir=args.out_dir)
 
 

@@ -81,7 +81,7 @@ def nanochat_optimizer(cfg: OptimizerConfig) -> Optimizer:
     inner = partitioned(
         {"muon": muon(muon_lr, cfg.muon_momentum, cfg.muon_ns_steps),
          "adamw": adamw(adam_lr, cfg.adam_betas, cfg.adam_eps,
-                        cfg.weight_decay)},
+                        cfg.weight_decay, fused=cfg.fused_adamw)},
         partition_label)
 
     if cfg.grad_clip <= 0:

@@ -1,0 +1,275 @@
+"""The chunked (scan-fused + donated + prefetched) DistTrainer hot path.
+
+Contract under test (ISSUE 4 acceptance):
+* chunked loop is bit-exact with the per-step reference loop for EVERY
+  ``SyncStrategy`` — same final params, same history records;
+* exactly ONE device->host fetch per chunk (the per-chunk loss array);
+* ``eval_every`` landing mid-chunk splits the chunk instead of drifting;
+* buffer donation cannot invalidate the caller's state or the
+  eval/refresh path;
+* the async ``Prefetcher`` is a drop-in batch source.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from helpers import tiny_cfg
+from repro.configs.base import DiLoCoConfig, OptimizerConfig
+from repro.core import (AdaptiveH, DDPSync, DiLoCoSync, DistTrainer,
+                        OverlappedSync, PipelinedSync, StreamingSync)
+from repro.core import dist_trainer as dist_trainer_mod
+from repro.data.pipeline import Prefetcher, stack_batches
+from repro.models.transformer import build_model, init_params
+
+OPT = OptimizerConfig(total_steps=100, warmup_steps=0, schedule="constant",
+                      learning_rate=0.02, adam_lr=1e-3)
+
+CFG = tiny_cfg("dense")
+MODEL = build_model(CFG)
+PARAMS, _ = init_params(CFG, jax.random.key(0))
+
+
+def _data(k, step, B=4, S=16):
+    key = jax.random.key(1000 + step)
+    toks = jax.random.randint(key, (k, B, S), 0, CFG.vocab_size)
+    return {"tokens": toks, "labels": (toks + 1) % CFG.vocab_size}
+
+
+def _dcfg(k, h):
+    if k == 1:  # the DDP degenerate config (outer step = identity hand-off)
+        return DiLoCoConfig(num_workers=1, h_inner_steps=1, outer_lr=1.0,
+                            outer_momentum=0.0, nesterov=False)
+    return DiLoCoConfig(num_workers=k, h_inner_steps=h)
+
+
+def _run(strategy, k, h, steps, **kw):
+    dt = DistTrainer(MODEL.loss, OPT, _dcfg(k, h), strategy)
+    state = dt.init(PARAMS)
+    return dt.run(state, lambda s: _data(k, s), steps, **kw)
+
+
+def _assert_tree_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _assert_hist_equal(a, b):
+    for key in ("step", "loss", "sync_steps", "frag_syncs", "evals"):
+        assert a[key] == b[key], key
+
+
+# strategy factories (fresh per run: runners/H-schedules are stateful)
+STRATEGIES = {
+    "ddp": (1, lambda: DDPSync()),
+    "diloco": (2, lambda: DiLoCoSync()),
+    "streaming": (2, lambda: StreamingSync(num_fragments=2)),
+    "overlapped": (3, lambda: OverlappedSync(delay=2, jitter=1, seed=3)),
+    "pipelined": (2, lambda: PipelinedSync(num_fragments=2, delay=1)),
+}
+
+
+@pytest.mark.parametrize("name", sorted(STRATEGIES))
+def test_chunked_bit_exact_per_strategy(name):
+    """Chunked == per-step: final params AND history records, for every
+    strategy — 14 steps with h=4 covers trailing partial rounds and the
+    finalize flush paths."""
+    k, make = STRATEGIES[name]
+    ref_state, ref_hist = _run(make(), k, 4, 14, chunked=False)
+    chk_state, chk_hist = _run(make(), k, 4, 14, chunked=True)
+    _assert_tree_equal(ref_state.global_params, chk_state.global_params)
+    _assert_tree_equal(ref_state.worker_params, chk_state.worker_params)
+    _assert_tree_equal(ref_state.inner_opt, chk_state.inner_opt)
+    _assert_hist_equal(ref_hist, chk_hist)
+
+
+def test_chunked_eval_mid_chunk_splits():
+    """eval_every=3 with h=4: evals land mid-round, so chunks split at the
+    eval step — same (step, value) pairs as the per-step loop, and syncs
+    do not drift."""
+    evals = lambda p: float(np.asarray(
+        jnp.concatenate([x.ravel() for x in jax.tree.leaves(p)]).sum()))
+    ref_state, ref_hist = _run(DiLoCoSync(), 2, 4, 12, chunked=False,
+                               eval_fn=evals, eval_every=3)
+    chk_state, chk_hist = _run(DiLoCoSync(), 2, 4, 12, chunked=True,
+                               eval_fn=evals, eval_every=3)
+    assert [s for s, _ in chk_hist["evals"]] == [2, 5, 8, 11]
+    assert chk_hist["sync_steps"] == [3, 7, 11]
+    _assert_hist_equal(ref_hist, chk_hist)
+    _assert_tree_equal(ref_state.global_params, chk_state.global_params)
+
+
+def test_chunked_record_every():
+    ref_state, ref_hist = _run(DiLoCoSync(), 2, 4, 12, chunked=False,
+                               record_every=3)
+    chk_state, chk_hist = _run(DiLoCoSync(), 2, 4, 12, chunked=True,
+                               record_every=3)
+    assert chk_hist["step"] == [0, 3, 6, 9]
+    _assert_hist_equal(ref_hist, chk_hist)
+    _assert_tree_equal(ref_state.global_params, chk_state.global_params)
+
+
+def test_chunked_adaptive_h():
+    """AdaptiveH feeds on per-step losses: the chunked loop replays the
+    fetched chunk losses through should_sync in order, so the adaptive
+    boundary decisions are identical."""
+    mk = lambda: DiLoCoSync(h_schedule=AdaptiveH(h0=3, h_min=2, h_max=8,
+                                                 window=4))
+    ref_state, ref_hist = _run(mk(), 2, 3, 15, chunked=False)
+    chk_state, chk_hist = _run(mk(), 2, 3, 15, chunked=True)
+    _assert_hist_equal(ref_hist, chk_hist)
+    _assert_tree_equal(ref_state.global_params, chk_state.global_params)
+
+
+def test_one_fetch_per_chunk(monkeypatch):
+    """The mechanism claim: the chunked loop performs exactly one
+    device->host transfer per chunk (the (T,) loss array) — no per-step
+    host syncs."""
+    calls = []
+    real = dist_trainer_mod._fetch
+    monkeypatch.setattr(dist_trainer_mod, "_fetch",
+                        lambda x: calls.append(1) or real(x))
+    _, hist = _run(DiLoCoSync(), 2, 4, 12, chunked=True)
+    # 12 steps of h=4 -> exactly 3 chunks -> exactly 3 fetches
+    assert len(calls) == 3
+    assert hist["sync_steps"] == [3, 7, 11]
+    assert len(hist["loss"]) == 12
+
+
+def test_chunk_boundaries_are_sync_events(monkeypatch):
+    """Fragment schedules chunk at their own (denser) event cadence."""
+    calls = []
+    real = dist_trainer_mod._fetch
+    monkeypatch.setattr(dist_trainer_mod, "_fetch",
+                        lambda x: calls.append(1) or real(x))
+    _, hist = _run(StreamingSync(num_fragments=2), 2, 4, 8, chunked=True)
+    # period = h/F = 2 -> 4 fragment events -> 4 chunks
+    assert len(calls) == 4
+    assert [s for s, _ in hist["frag_syncs"]] == [1, 3, 5, 7]
+
+
+def test_ddp_runs_as_one_chunk(monkeypatch):
+    calls = []
+    real = dist_trainer_mod._fetch
+    monkeypatch.setattr(dist_trainer_mod, "_fetch",
+                        lambda x: calls.append(1) or real(x))
+    _, hist = _run(DDPSync(), 1, 1, 10, chunked=True)
+    assert len(calls) == 1          # no sync events: the run IS one chunk
+    assert hist["sync_steps"] == list(range(10))
+
+
+def test_donation_preserves_callers_state():
+    """run(donate=True) must not invalidate the state object the caller
+    passed in (the loop defensively copies before the first donated
+    chunk): running twice from the same init state gives identical
+    results."""
+    dt = DistTrainer(MODEL.loss, OPT, _dcfg(2, 4), DiLoCoSync())
+    state0 = dt.init(PARAMS)
+    s1, h1 = dt.run(state0, lambda s: _data(2, s), 8, chunked=True,
+                    donate=True)
+    s2, h2 = dt.run(state0, lambda s: _data(2, s), 8, chunked=True,
+                    donate=True)
+    _assert_tree_equal(s1.global_params, s2.global_params)
+    _assert_hist_equal(h1, h2)
+
+
+def test_donation_safe_on_eval_refresh_path():
+    """Donated chunks + the refresh/eval observer path + a snapshotting
+    strategy (the in-flight snapshot must be a copy, not an alias of
+    donated buffers) — donate on/off is bit-identical."""
+    mk = lambda: OverlappedSync(delay=2, jitter=0, seed=0)
+    evals = lambda p: float(np.asarray(jax.tree.leaves(p)[0]).sum())
+    a_state, a_hist = _run(mk(), 2, 4, 12, chunked=True, donate=True,
+                           eval_fn=evals, eval_every=3)
+    b_state, b_hist = _run(mk(), 2, 4, 12, chunked=True, donate=False,
+                           eval_fn=evals, eval_every=3)
+    _assert_tree_equal(a_state.global_params, b_state.global_params)
+    _assert_tree_equal(a_state.worker_params, b_state.worker_params)
+    _assert_hist_equal(a_hist, b_hist)
+
+
+def test_prefetch_is_drop_in():
+    ref_state, ref_hist = _run(DiLoCoSync(), 2, 4, 12, chunked=True,
+                               prefetch=0)
+    pf_state, pf_hist = _run(DiLoCoSync(), 2, 4, 12, chunked=True,
+                             prefetch=6)
+    _assert_tree_equal(ref_state.global_params, pf_state.global_params)
+    _assert_hist_equal(ref_hist, pf_hist)
+
+
+def test_max_chunk_caps_scan_length(monkeypatch):
+    calls = []
+    real = dist_trainer_mod._fetch
+    monkeypatch.setattr(dist_trainer_mod, "_fetch",
+                        lambda x: calls.append(1) or real(x))
+    ref_state, _ = _run(DiLoCoSync(), 2, 8, 8, chunked=True)
+    assert len(calls) == 1
+    calls.clear()
+    cap_state, _ = _run(DiLoCoSync(), 2, 8, 8, chunked=True, max_chunk=3)
+    assert len(calls) == 3          # 3 + 3 + 2
+    _assert_tree_equal(ref_state.global_params, cap_state.global_params)
+
+
+def test_early_firing_schedule_raises_under_chunking():
+    """An HSchedule that fires before since_sync reaches current_h
+    violates the next_event contract: the chunked loop must fail loudly
+    (the per-step loop still supports such schedules via chunked=False)."""
+    from repro.core.schedule import HSchedule
+
+    class SpikeH(HSchedule):
+        def should_sync(self, step, since_sync, loss):
+            return step == 1        # before the advertised boundary
+
+        @property
+        def current_h(self):
+            return 4
+
+    with pytest.raises(RuntimeError, match="mid-chunk"):
+        _run(DiLoCoSync(h_schedule=SpikeH()), 2, 4, 8, chunked=True)
+    # the reference loop still runs it
+    _, hist = _run(DiLoCoSync(h_schedule=SpikeH()), 2, 4, 8, chunked=False)
+    assert 1 in hist["sync_steps"]
+
+
+# ---------------------------------------------------------------------------
+# Prefetcher units
+# ---------------------------------------------------------------------------
+
+def test_prefetcher_orders_and_stacks():
+    pf = Prefetcher(lambda s: {"x": np.full((2, 3), s, np.int32)}, 7,
+                    depth=2)
+    try:
+        a = pf.take(0, 3)
+        assert a["x"].shape == (3, 2, 3)
+        assert [int(a["x"][i, 0, 0]) for i in range(3)] == [0, 1, 2]
+        b = pf.take(3, 4)
+        assert [int(b["x"][i, 0, 0]) for i in range(4)] == [3, 4, 5, 6]
+    finally:
+        pf.close()
+
+
+def test_prefetcher_surfaces_producer_error():
+    def bad(step):
+        if step == 2:
+            raise RuntimeError("boom")
+        return {"x": np.zeros(2)}
+
+    pf = Prefetcher(bad, 5, depth=2)
+    try:
+        with pytest.raises(RuntimeError):
+            pf.take(0, 5)
+    finally:
+        pf.close()
+
+
+def test_prefetcher_close_unblocks_full_queue():
+    pf = Prefetcher(lambda s: {"x": np.zeros(4)}, 1000, depth=2)
+    pf.take(0, 1)
+    pf.close()      # must not hang with the producer parked on a full queue
+    assert not pf._thread.is_alive()
+
+
+def test_stack_batches():
+    out = stack_batches([{"a": np.arange(3)}, {"a": np.arange(3) + 10}])
+    np.testing.assert_array_equal(np.asarray(out["a"]),
+                                  [[0, 1, 2], [10, 11, 12]])

@@ -1,0 +1,167 @@
+"""Fused AdamW Pallas kernel: kernel-vs-oracle sweeps (shapes, dtypes,
+decay/step edge cases) and fused-vs-unfused optimizer agreement —
+including under vmap over the worker dim, which is how the inner loop
+actually runs it.
+
+Exactness contract: the kernel runs the oracle's f32 ops in the oracle's
+order, but bit-identical outputs are NOT attainable on this backend —
+XLA:CPU's FMA contraction depends on the surrounding program (a
+``pallas_call`` is a fusion barrier pure-jnp code does not have, and the
+kernel computes on flattened (1, M) views while the unfused path sees
+each leaf's natural shape), so one multiply-add may round differently.
+``_ULP_RTOL/_ULP_ATOL`` bound that noise tightly (observed ~1e-7
+relative, i.e. 1-2 ulp); anything beyond it is a real kernel bug.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import OptimizerConfig
+from repro.kernels.fused_adamw import (fused_adamw_update,
+                                       reference_fused_adamw)
+from repro.optim import adamw, apply_updates, nanochat_optimizer
+
+B1, B2, EPS = 0.9, 0.95, 1e-10
+_ULP_RTOL, _ULP_ATOL = 1e-5, 1e-8       # FMA-contraction noise bound
+
+
+def _leaf(shape, dtype, key):
+    ks = jax.random.split(jax.random.key(key), 4)
+    p = jax.random.normal(ks[0], shape, dtype)
+    g = jax.random.normal(ks[1], shape, dtype)
+    m = jax.random.normal(ks[2], shape, jnp.float32)
+    v = jnp.abs(jax.random.normal(ks[3], shape, jnp.float32))
+    return p, g, m, v
+
+
+def _scalars(t):
+    tt = jnp.float32(t) + 1.0
+    return jnp.float32(3e-4), 1 - B1 ** tt, 1 - B2 ** tt
+
+
+def _assert_ulp_close(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32),
+                                   rtol=_ULP_RTOL, atol=_ULP_ATOL)
+
+
+@pytest.mark.parametrize("shape", [(8,), (3, 5), (2, 64, 3), (127,), (128,),
+                                   (1, 300)])
+@pytest.mark.parametrize("wd", [0.0, 0.1])
+def test_kernel_matches_oracle(shape, wd):
+    p, g, m, v = _leaf(shape, jnp.float32, 0)
+    lr, bc1, bc2 = _scalars(0)
+    kw = dict(b1=B1, b2=B2, eps=EPS, wd=wd)
+    got = fused_adamw_update(p, g, m, v, lr, bc1, bc2, **kw)
+    want = jax.jit(functools.partial(reference_fused_adamw, **kw))(
+        p, g, m, v, lr, bc1, bc2)
+    _assert_ulp_close(got, want)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("t", [0, 10, 1000])
+def test_kernel_dtype_and_step_sweep(dtype, t):
+    p, g, m, v = _leaf((33, 7), dtype, t)
+    lr, bc1, bc2 = _scalars(t)
+    kw = dict(b1=B1, b2=B2, eps=EPS, wd=0.01)
+    got = fused_adamw_update(p, g, m, v, lr, bc1, bc2, **kw)
+    want = jax.jit(functools.partial(reference_fused_adamw, **kw))(
+        p, g, m, v, lr, bc1, bc2)
+    assert got[0].dtype == jnp.float32
+    _assert_ulp_close(got, want)
+
+
+def test_kernel_zero_size_sentinel():
+    """The partitioned optimizer masks leaves it does not own to (0,);
+    the fused path must pass them through (a Pallas grid cannot be
+    empty)."""
+    p = jnp.zeros((0,), jnp.float32)
+    lr, bc1, bc2 = _scalars(0)
+    u, m, v = fused_adamw_update(p, p, p, p, lr, bc1, bc2,
+                                 b1=B1, b2=B2, eps=EPS, wd=0.1)
+    assert u.shape == m.shape == v.shape == (0,)
+
+
+def _tree(key=0):
+    ks = jax.random.split(jax.random.key(key), 3)
+    return {"w": jax.random.normal(ks[0], (17, 9)),
+            "b": jax.random.normal(ks[1], (9,)),
+            "e": jax.random.normal(ks[2], (5, 4, 3))}
+
+
+@pytest.mark.parametrize("wd", [0.0, 0.05])
+def test_fused_optimizer_agrees(wd):
+    """adamw(fused=True) vs adamw() under jit on a whole tree: same math,
+    agreement bounded by shape-dependent FMA contraction."""
+    params, grads = _tree(0), _tree(1)
+    ref_opt = adamw(1e-3, (B1, B2), EPS, wd)
+    fus_opt = adamw(1e-3, (B1, B2), EPS, wd, fused=True)
+    state = ref_opt.init(params)
+
+    @jax.jit
+    def step_ref(g, s, p):
+        return ref_opt.update(g, s, p, 3)
+
+    @jax.jit
+    def step_fus(g, s, p):
+        return fus_opt.update(g, s, p, 3)
+
+    _assert_ulp_close(step_ref(grads, state, params),
+                      step_fus(grads, state, params))
+
+
+def test_fused_optimizer_agrees_under_vmap():
+    """The inner loop runs the optimizer inside vmap over the K worker
+    dim — the Pallas batching rule must hold up there."""
+    K = 3
+    params = jax.tree.map(lambda x: jnp.broadcast_to(x, (K,) + x.shape) *
+                          (1 + jnp.arange(K, dtype=jnp.float32)
+                           .reshape((K,) + (1,) * x.ndim)), _tree(0))
+    grads = jax.tree.map(lambda x: jnp.broadcast_to(x, (K,) + x.shape),
+                         _tree(1))
+    ref_opt = adamw(1e-3, (B1, B2), EPS, 0.01)
+    fus_opt = adamw(1e-3, (B1, B2), EPS, 0.01, fused=True)
+    state = jax.vmap(ref_opt.init)(params)
+
+    def run(opt):
+        return jax.jit(jax.vmap(lambda g, s, p: opt.update(g, s, p, 0)))(
+            grads, state, params)
+
+    _assert_ulp_close(run(ref_opt), run(fus_opt))
+
+
+def test_nanochat_optimizer_fused_flag_agrees():
+    """OptimizerConfig.fused_adamw flips only the adamw partition's
+    implementation: one full nanochat (Muon+AdamW) step agrees to within
+    FMA-contraction noise, including the 0-sized sentinel leaves the
+    partition router creates."""
+    from helpers import tiny_batch, tiny_cfg
+    from repro.models import build_model
+    from repro.models.transformer import init_params
+
+    cfg = tiny_cfg("dense")
+    model = build_model(cfg)
+    params, _ = init_params(cfg, jax.random.key(0))
+    batch = tiny_batch(cfg)
+    base = OptimizerConfig(total_steps=10, warmup_steps=0,
+                           schedule="constant", weight_decay=0.01)
+
+    def one_step(ocfg):
+        opt = nanochat_optimizer(ocfg)
+
+        @jax.jit
+        def step(p, s):
+            (_, _), grads = jax.value_and_grad(
+                model.loss, has_aux=True)(p, batch)
+            u, s = opt.update(grads, s, p, 0)
+            return apply_updates(p, u), s
+
+        return step(params, opt.init(params))
+
+    import dataclasses
+    _assert_ulp_close(one_step(base),
+                      one_step(dataclasses.replace(base, fused_adamw=True)))
