@@ -7,7 +7,7 @@
 
 PY       := python
 PYTHONPATH := src
-TIMEOUT  := 420
+TIMEOUT  := 900
 
 .PHONY: test-fast test bench
 

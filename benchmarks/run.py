@@ -14,7 +14,9 @@
 | §4.3 drift hypothesis       | drift                                       |
 | TPU deployment (e,g)        | roofline (from the dry-run JSONs)           |
 | engine/step latencies       | micro                                       |
-| continuous vs static batch  | serving (paged-KV scheduler vs buckets)     |
+| static vs continuous vs     | serving (paged-KV scheduler vs buckets vs   |
+| continuous+spec batch       | prompt-lookup speculative decode,           |
+|                             | BENCH_serving.json)                         |
 | device-speed inner loop     | train (per-step vs scan-chunked vs          |
 |                             | chunked+donate+prefetch, BENCH_train.json)  |
 
@@ -87,7 +89,7 @@ def main() -> None:
         drift_analysis.main(steps=80)
     if want("serving"):
         from benchmarks import serving_bench
-        serving_bench.main()
+        serving_bench.main(small=args.small)
     if want("train"):
         from benchmarks import train_bench
         train_bench.main(small=args.small)

@@ -44,7 +44,11 @@ default ``chunked=True`` loop makes that true:
 * **async prefetch.**  ``prefetch=N`` sources batches from a background
   ``repro.data.pipeline.Prefetcher`` that assembles batches up to N steps
   ahead (one stacked ``device_put`` per chunk at take time), overlapping
-  host data work with device compute.
+  host data work with device compute.  At every chunk boundary the loop
+  additionally ``prime``s the next chunk, so its host stack +
+  ``device_put`` overlap the outer-sync jit dispatched at the boundary
+  instead of serializing behind it (``take`` falls back losslessly if a
+  runner shifts the predicted bounds).
 * ``step_seconds`` is each chunk's wall-clock divided by its length
   (median over chunks), preserving the comm-simulator calibration
   contract.
@@ -177,21 +181,24 @@ class DistTrainer:
         chunk_step_seconds = []
         with warnings.catch_warnings():
             warnings.filterwarnings("ignore", message=_DONATION_WARNING)
+            def chunk_end(step: int) -> int:
+                end = num_steps - 1
+                event = runner.next_event(step)
+                if event is not None:
+                    end = min(end, max(event, step))
+                if eval_fn is not None and eval_every:
+                    # an eval landing mid-chunk splits the chunk (the
+                    # eval must see the state at exactly that step)
+                    end = min(end, (step // eval_every + 1) * eval_every - 1)
+                if max_chunk:
+                    end = min(end, step + max_chunk - 1)
+                return end
+
             try:
                 step = 0
                 t_prev = time.time()
                 while step < num_steps:
-                    end = num_steps - 1
-                    event = runner.next_event(step)
-                    if event is not None:
-                        end = min(end, max(event, step))
-                    if eval_fn is not None and eval_every:
-                        # an eval landing mid-chunk splits the chunk (the
-                        # eval must see the state at exactly that step)
-                        end = min(end,
-                                  (step // eval_every + 1) * eval_every - 1)
-                    if max_chunk:
-                        end = min(end, step + max_chunk - 1)
+                    end = chunk_end(step)
                     T = end - step + 1
                     batches = (source.take(step, T) if source is not None
                                else stack_batches([data_fn(s)
@@ -219,6 +226,16 @@ class DistTrainer:
                                 f"chunked=False for such schedules")
                         state = new_state
                         record(recs)
+                    if source is not None and end + 1 < num_steps:
+                        # the replay above just dispatched any outer sync
+                        # asynchronously; start assembling the NEXT chunk's
+                        # batches now so the stack + device_put overlap the
+                        # sync instead of serializing behind it at the top
+                        # of the loop.  next_event is accurate here (the
+                        # runner replayed through ``end``), so the primed
+                        # bounds match the next take(); if a custom runner
+                        # shifts them anyway, take() falls back losslessly.
+                        source.prime(end + 1, chunk_end(end + 1) - end)
                     t_now = time.time()
                     chunk_step_seconds.append((t_now - t_prev) / T)
                     t_prev = t_now

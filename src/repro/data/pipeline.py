@@ -122,6 +122,8 @@ class Prefetcher:
         self._q: queue.Queue = queue.Queue(maxsize=max(int(depth), 1))
         self._stop = threading.Event()
         self._err: Optional[BaseException] = None
+        self._pending: List = []        # items popped by prime(), unconsumed
+        self._primed = None             # (start, n, box) of an async chunk
         self._thread = threading.Thread(target=self._produce, daemon=True)
         self._thread.start()
 
@@ -141,11 +143,65 @@ class Prefetcher:
             self._err = e
             self._q.put((None, self._DONE))
 
+    def _next_item(self):
+        """Next (step, batch) in order: primed leftovers first, then the
+        producer queue."""
+        if self._pending:
+            return self._pending.pop(0)
+        return self._q.get()
+
+    def prime(self, start: int, n: int) -> None:
+        """Start assembling the chunk for steps ``start .. start + n - 1``
+        on a background thread (pop + host-stack + ``device_put``), so
+        chunk assembly overlaps whatever the caller does next — in
+        ``DistTrainer`` that is the outer-sync jit at the chunk boundary,
+        whose latency the next ``take`` would otherwise serialize behind.
+
+        Purely an optimization: ``take`` consumes a primed chunk when the
+        bounds match exactly and falls back to the raw items otherwise
+        (e.g. a sync runner whose next event moved), so priming can never
+        change what ``take`` returns."""
+        n = min(n, self.num_steps - start)
+        if self._primed is not None or n <= 0:
+            return
+        box = {"done": threading.Event()}
+
+        def work():
+            try:
+                raw = []
+                for _ in range(n):
+                    item = self._next_item()
+                    raw.append(item)
+                    if item[1] is self._DONE:
+                        break            # producer died: nothing follows
+                box["raw"] = raw
+                if len(raw) == n and not any(b is self._DONE
+                                             for _, b in raw):
+                    box["chunk"] = stack_batches([b for _, b in raw])
+            except BaseException as e:   # surfaces at the matching take()
+                box["err"] = e
+            box["done"].set()
+
+        self._primed = (start, n, box)
+        threading.Thread(target=work, daemon=True).start()
+
     def take(self, start: int, n: int):
         """Stacked device chunk for steps ``start .. start + n - 1``."""
+        if self._primed is not None:
+            pstart, pn, box = self._primed
+            self._primed = None
+            box["done"].wait()
+            if "err" in box:
+                raise box["err"]
+            if pstart == start and pn == n and "chunk" in box:
+                self._check_order(box["raw"], start)
+                return box["chunk"]
+            # bounds moved (or producer died mid-chunk): keep the raw
+            # items and fall through to the synchronous path
+            self._pending = box["raw"] + self._pending
         out = []
         for i in range(n):
-            step, batch = self._q.get()
+            step, batch = self._next_item()
             if batch is self._DONE:
                 raise RuntimeError("prefetcher data_fn failed") from self._err
             if step != start + i:
@@ -155,6 +211,14 @@ class Prefetcher:
             out.append(batch)
         return stack_batches(out)
 
+    @staticmethod
+    def _check_order(raw, start: int) -> None:
+        for i, (step, batch) in enumerate(raw):
+            if batch is not Prefetcher._DONE and step != start + i:
+                raise RuntimeError(
+                    f"prefetcher consumed out of order: wanted {start + i}, "
+                    f"queue held {step} (take() must walk steps 0..N-1)")
+
     def close(self):
         self._stop.set()
         while True:     # unblock a producer parked on a full queue
@@ -162,4 +226,13 @@ class Prefetcher:
                 self._q.get_nowait()
             except queue.Empty:
                 break
+        if self._primed is not None:
+            # wake a prime worker parked on the now-drained queue (it exits
+            # at the first _DONE it pops) so it can't outlive the run
+            # holding a chunk of batches
+            _, _, box = self._primed
+            self._primed = None
+            self._q.put((None, self._DONE))
+            box["done"].wait(timeout=5)
+        self._pending.clear()
         self._thread.join(timeout=5)

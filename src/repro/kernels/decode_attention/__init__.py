@@ -1,10 +1,14 @@
 from repro.kernels.decode_attention.ops import (decode_attention,
                                                 default_interpret,
                                                 paged_decode_attention,
+                                                paged_verify_attention,
                                                 pallas_mode)
 from repro.kernels.decode_attention.ref import (
-    reference_decode_attention, reference_paged_decode_attention)
+    reference_decode_attention, reference_paged_decode_attention,
+    reference_paged_verify_attention)
 
 __all__ = ["decode_attention", "paged_decode_attention",
-           "reference_decode_attention", "reference_paged_decode_attention",
+           "paged_verify_attention", "reference_decode_attention",
+           "reference_paged_decode_attention",
+           "reference_paged_verify_attention",
            "default_interpret", "pallas_mode"]

@@ -110,6 +110,108 @@ def _paged_decode_kernel(tab_ref, qpos_ref, q_ref, k_ref, v_ref, o_ref,
                        / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
 
 
+def _paged_verify_kernel(tab_ref, start_ref, ntok_ref, q_ref, k_ref, v_ref,
+                         o_ref, m_scr, l_scr, acc_scr, *, scale: float,
+                         window: int, bs: int, n_b: int, T: int, G: int):
+    """Multi-query-per-slot variant: the q tile holds T query tokens per
+    slot (speculative verification / multi-token prefill), occupying
+    contiguous positions ``start .. start + n - 1``.  Rows are (T, G)
+    flattened to (T*G, D) so the MXU contraction stays a single dot; the
+    causal predicate is evaluated per row group against the row's own
+    position ``start + t``."""
+    s_idx = pl.program_id(0)
+    ib = pl.program_id(2)
+
+    @pl.when(ib == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0].astype(jnp.float32).reshape(T * G, -1)   # (T*G, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)            # (bs, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)            # (bs, D)
+    start = start_ref[s_idx]                          # scalar int32
+    n_tok = ntok_ref[s_idx]                           # scalar int32
+    mapped = tab_ref[s_idx, ib] >= 0                  # −1 = unmapped block
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    # row r of the flattened tile is query token t = r // G at absolute
+    # position start + t; tokens beyond n_tok are padding (fully masked)
+    row_t = jax.lax.broadcasted_iota(jnp.int32, (T * G, 1), 0) // G
+    q_pos = start + row_t                             # (T*G, 1)
+    valid = (start >= 0) & (row_t < n_tok)
+    k_pos = ib * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    ok = valid & mapped & (k_pos <= q_pos)
+    if window > 0:
+        ok &= (q_pos - k_pos) < window
+    s = jnp.where(ok, s, NEG_INF)                     # (T*G, bs)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ib == n_b - 1)
+    def _fin():
+        o_ref[0, :, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                          ).reshape(T, G, -1).astype(o_ref.dtype)
+
+
+def paged_verify_attention_fwd(q, k_pool, v_pool, block_tables, start_pos,
+                               n_tokens, *, window: int = 0,
+                               interpret: bool = True):
+    """Multi-query block-table-indexed decode attention (speculative
+    verification): each slot attends with T query tokens at contiguous
+    positions ``start_pos[s] + t`` (t < ``n_tokens[s]``; the rest are
+    padding whose rows come back garbage the caller must ignore).
+
+    q: (S, T, KV, G, D); k_pool/v_pool: (NB, bs, KV, D); block_tables:
+    (S, MB) int32 (−1 = unmapped); start_pos: (S,) int32 (−1 = inactive
+    slot); n_tokens: (S,) int32 live query tokens per slot.  The fresh K/V
+    for all T tokens must already be scattered into the pool — causality
+    among them is purely positional, exactly like the single-query kernel.
+    Returns (S, T, KV, G, D)."""
+    S, T, KV, G, D = q.shape
+    NB, bs = k_pool.shape[:2]
+    MB = block_tables.shape[1]
+    scale = 1.0 / math.sqrt(D)
+    kernel = functools.partial(_paged_verify_kernel, scale=scale,
+                               window=window, bs=bs, n_b=MB, T=T, G=G)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(S, KV, MB),
+        in_specs=[
+            pl.BlockSpec((1, T, 1, G, D),
+                         lambda s, h, ib, tab, st, nt: (s, 0, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda s, h, ib, tab, st, nt:
+                         (jnp.maximum(tab[s, ib], 0), 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda s, h, ib, tab, st, nt:
+                         (jnp.maximum(tab[s, ib], 0), 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, T, 1, G, D),
+                               lambda s, h, ib, tab, st, nt: (s, 0, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((T * G, 1), jnp.float32),
+            pltpu.VMEM((T * G, 1), jnp.float32),
+            pltpu.VMEM((T * G, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((S, T, KV, G, D), q.dtype),
+        interpret=interpret,
+    )(block_tables, start_pos, n_tokens, q, k_pool, v_pool)
+
+
 def paged_decode_attention_fwd(q, k_pool, v_pool, block_tables, q_pos, *,
                                window: int = 0, interpret: bool = True):
     """Block-table-indexed decode attention over a shared paged KV pool.

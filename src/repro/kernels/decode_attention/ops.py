@@ -14,8 +14,9 @@ from typing import Optional
 
 import jax
 
-from repro.kernels.decode_attention.kernel import (decode_attention_fwd,
-                                                   paged_decode_attention_fwd)
+from repro.kernels.decode_attention.kernel import (
+    decode_attention_fwd, paged_decode_attention_fwd,
+    paged_verify_attention_fwd)
 
 
 def default_interpret() -> bool:
@@ -60,3 +61,23 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, q_pos, *,
         interpret = default_interpret()
     return _paged_decode_attention(q, k_pool, v_pool, block_tables, q_pos,
                                    window=window, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def _paged_verify_attention(q, k_pool, v_pool, block_tables, start_pos,
+                            n_tokens, *, window, interpret):
+    return paged_verify_attention_fwd(q, k_pool, v_pool, block_tables,
+                                      start_pos, n_tokens, window=window,
+                                      interpret=interpret)
+
+
+def paged_verify_attention(q, k_pool, v_pool, block_tables, start_pos,
+                           n_tokens, *, window: int = 0,
+                           interpret: Optional[bool] = None):
+    """Multi-query-per-slot paged decode attention — the speculative-
+    verification variant (see kernel.py for shapes)."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _paged_verify_attention(q, k_pool, v_pool, block_tables,
+                                   start_pos, n_tokens, window=window,
+                                   interpret=interpret)

@@ -21,6 +21,37 @@ def reference_decode_attention(q, k, v, pos, q_pos, window: int = 0):
                       v.astype(jnp.float32)).astype(q.dtype)
 
 
+def reference_paged_verify_attention(q, k_pool, v_pool, block_tables,
+                                     start_pos, n_tokens, window: int = 0):
+    """Multi-query paged variant (speculative verification): slot s attends
+    with T query tokens at contiguous positions ``start_pos[s] + t``; tokens
+    with ``t >= n_tokens[s]`` (and whole slots with ``start_pos[s] < 0``)
+    are padding whose rows are garbage the caller must ignore.
+
+    q: (S,T,KV,G,D); k_pool/v_pool: (NB,bs,KV,D); block_tables: (S,MB);
+    start_pos/n_tokens: (S,) int32.  Returns (S,T,KV,G,D)."""
+    S, T, KV, G, D = q.shape
+    NB, bs = k_pool.shape[:2]
+    MB = block_tables.shape[1]
+    safe = jnp.maximum(block_tables, 0)
+    k = k_pool[safe].reshape(S, MB * bs, KV, D)
+    v = v_pool[safe].reshape(S, MB * bs, KV, D)
+    q_pos = start_pos[:, None] + jnp.arange(T)[None, :]        # (S, T)
+    valid = (start_pos[:, None] >= 0) & (jnp.arange(T)[None, :]
+                                         < n_tokens[:, None])
+    k_pos = jnp.arange(MB * bs)[None, None, :]                 # (1, 1, L)
+    ok = ((k_pos <= q_pos[:, :, None]) & valid[:, :, None]
+          & jnp.repeat(block_tables >= 0, bs, axis=1)[:, None, :])
+    if window > 0:
+        ok &= (q_pos[:, :, None] - k_pos) < window
+    s = jnp.einsum("bthgd,bshd->bhgts", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    s = jnp.where(ok[:, None, None, :, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgts,bshd->bthgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
 def reference_paged_decode_attention(q, k_pool, v_pool, block_tables, q_pos,
                                      window: int = 0):
     """Paged variant: the KV cache is a shared pool of fixed-size blocks and

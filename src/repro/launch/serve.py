@@ -71,6 +71,9 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=512)
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: draft up to K tokens per "
+                         "slot per round via prompt-lookup (0 = off)")
     ap.add_argument("--policy", choices=["fifo", "longest_prefill"],
                     default="fifo")
     ap.add_argument("--report", action="store_true",
@@ -100,7 +103,7 @@ def main(argv=None):
 
     engine = Engine(model, params, tok, max_len=args.max_len,
                     num_slots=args.slots, block_size=args.block_size,
-                    policy=args.policy)
+                    policy=args.policy, spec_k=args.spec_k)
     reqs = build_requests(args, tok)
     if not reqs:
         print("no requests", file=sys.stderr)
@@ -149,6 +152,17 @@ def main(argv=None):
               f"tokens_per_s={stats['generated'] / stats['wall']:.1f} "
               f"latency_p50={percentile(lats, 50):.3f}s "
               f"latency_p95={percentile(lats, 95):.3f}s")
+        if args.spec_k > 0:
+            # per-request accept rates: p50/p95 over requests that drafted
+            rates = [r.accept_rate for _, r in reqs if r.drafted]
+            print(f"# spec_k={args.spec_k} drafted={stats['drafted']} "
+                  f"accepted={stats['accepted']} "
+                  f"accept_rate={stats['accept_rate']:.3f} "
+                  f"accept_rate_p50={percentile(rates, 50):.3f} "
+                  f"accept_rate_p95={percentile(rates, 95):.3f} "
+                  f"rolled_back={stats['rolled_back']}")
+        if stats.get("recycled_blocks"):
+            print(f"# window_recycled_blocks={stats['recycled_blocks']}")
         print(f"# attn_impl={engine.attn_impl} pallas_mode={pallas_mode()} "
               f"policy={engine.policy}")
 

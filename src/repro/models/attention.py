@@ -307,59 +307,81 @@ def paged_decode_attention(p, x, cfg: ModelConfig, k_pool: jax.Array,
                            window: Optional[jax.Array] = None,
                            impl: Optional[str] = None
                            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """One-token decode against a *paged* KV pool shared by all slots.
+    """Decode / verify attention against a *paged* KV pool shared by all
+    slots.
 
-    x: (S, 1, d) — one fresh token per serving slot; k_pool/v_pool:
-    (NB, bs, KV, hd) fixed-size physical blocks; positions: (S,) int32
-    absolute position being written/queried (−1 = inactive slot, its write is
-    dropped and its output is garbage the caller must ignore); block_table:
-    (S, MB) int32 physical block ids (−1 = unmapped).
+    x: (S, T, d) — T fresh tokens per serving slot (T = 1 for plain decode;
+    T > 1 for speculative verification / multi-token prefill, where a slot's
+    tokens occupy *contiguous* positions); k_pool/v_pool: (NB, bs, KV, hd)
+    fixed-size physical blocks; positions: (S,) int32 when T == 1, else
+    (S, T) int32 — absolute position each token is written at / queries
+    from.  −1 marks an inactive slot (T == 1) or a padding token (T > 1):
+    its write is dropped and its output row is garbage the caller must
+    ignore.  When T > 1 the live positions of a slot must be a contiguous
+    prefix ``start .. start + n − 1`` of the row (the padded-script layout
+    the engine emits); block_table: (S, MB) int32 physical block ids
+    (−1 = unmapped).
 
     Blocks hold contiguous positions (slot s's logical position i lives at
     offset i % bs of physical block ``block_table[s, i // bs]``), so validity
-    is purely positional: lane i is attendable iff ``i <= positions[s]`` and
-    its table entry is mapped — the position-gated mask that lets slots at
-    different generation depths coexist in one batched step.
+    is purely positional: lane i is attendable iff ``i <= position of the
+    query token`` and its table entry is mapped — the position-gated mask
+    that lets slots at different generation depths coexist in one batched
+    step.  All T fresh K/V are scattered before the attention reads, so
+    causality *among* the T tokens is the same positional gate.
 
-    Returns (y (S, 1, d), new_k_pool, new_v_pool).
+    Returns (y (S, T, d), new_k_pool, new_v_pool).
     """
-    S = x.shape[0]
+    S, T = x.shape[:2]
     hd = cfg.resolved_head_dim()
     NB, bs = k_pool.shape[:2]
     MB = block_table.shape[1]
     q, k_new, v_new = _project_qkv(p, x, x, cfg)
-    pos = jnp.asarray(positions, jnp.int32)                    # (S,)
-    active = pos >= 0
+    pos = jnp.asarray(positions, jnp.int32)
+    if pos.ndim == 1:                                          # (S,) -> (S,T)
+        assert T == 1, "1-d positions require a single token per slot"
+        pos = pos[:, None]
+    active = pos >= 0                                          # (S, T)
     posc = jnp.maximum(pos, 0)
-    q = apply_rope(q.reshape(S, 1, cfg.num_heads, hd), posc[:, None],
+    q = apply_rope(q.reshape(S, T, cfg.num_heads, hd), posc,
                    cfg.rope_theta).reshape(q.shape)
-    k_new = apply_rope(k_new, posc[:, None], cfg.rope_theta)
+    k_new = apply_rope(k_new, posc, cfg.rope_theta)
 
     # -- scatter the fresh K/V into the pool (inactive writes fall out of
     # bounds and are dropped) ------------------------------------------------
-    col = posc // bs                                           # (S,)
-    blk = jnp.take_along_axis(block_table, col[:, None], axis=1)[:, 0]
+    col = posc // bs                                           # (S, T)
+    blk = jnp.take_along_axis(block_table, col, axis=1)        # (S, T)
     dest = blk * bs + posc % bs
     dest = jnp.where(active & (blk >= 0), dest, NB * bs)       # OOB sentinel
     k_flat = k_pool.reshape(NB * bs, cfg.num_kv_heads, hd)
     v_flat = v_pool.reshape(NB * bs, cfg.num_kv_heads, hd)
-    k_flat = k_flat.at[dest].set(k_new[:, 0].astype(k_flat.dtype),
-                                 mode="drop")
-    v_flat = v_flat.at[dest].set(v_new[:, 0].astype(v_flat.dtype),
-                                 mode="drop")
+    k_flat = k_flat.at[dest.reshape(-1)].set(
+        k_new.reshape(S * T, cfg.num_kv_heads, hd).astype(k_flat.dtype),
+        mode="drop")
+    v_flat = v_flat.at[dest.reshape(-1)].set(
+        v_new.reshape(S * T, cfg.num_kv_heads, hd).astype(v_flat.dtype),
+        mode="drop")
     new_k = k_flat.reshape(NB, bs, cfg.num_kv_heads, hd)
     new_v = v_flat.reshape(NB, bs, cfg.num_kv_heads, hd)
 
     static_window = isinstance(window, int) or window is None
     if isinstance(window, int) and window == 0:
         window = None
-    if impl == "pallas" and static_window:
+    if impl == "pallas" and static_window and T == 1:
         from repro.kernels.decode_attention import \
             paged_decode_attention as paged_kernel
         out = paged_kernel(q[:, 0], new_k.astype(q.dtype),
                            new_v.astype(q.dtype), block_table,
-                           jnp.where(active, pos, -1),
+                           jnp.where(active[:, 0], pos[:, 0], -1),
                            window=window or 0)[:, None]         # (S,1,KV,G,hd)
+    elif impl == "pallas" and static_window:
+        from repro.kernels.decode_attention import \
+            paged_verify_attention as verify_kernel
+        # live tokens are a contiguous prefix: recover (start, n) per slot
+        start = jnp.where(active[:, 0], pos[:, 0], -1)
+        n_tok = jnp.sum(active.astype(jnp.int32), axis=1)
+        out = verify_kernel(q, new_k.astype(q.dtype), new_v.astype(q.dtype),
+                            block_table, start, n_tok, window=window or 0)
     else:
         safe = jnp.maximum(block_table, 0)                     # (S, MB)
         k_all = new_k[safe].reshape(S, MB * bs, cfg.num_kv_heads, hd)
@@ -367,10 +389,10 @@ def paged_decode_attention(p, x, cfg: ModelConfig, k_pool: jax.Array,
         k_pos = jnp.broadcast_to(jnp.arange(MB * bs), (S, MB * bs))
         mapped = jnp.repeat(block_table >= 0, bs, axis=1)
         k_pos = jnp.where(mapped, k_pos, -1)
-        bias = _mask_bias(pos[:, None], k_pos, window, True)
+        bias = _mask_bias(pos, k_pos, window, True)            # (S, T, L)
         out = _direct(q, k_all.astype(q.dtype), v_all.astype(q.dtype),
                       bias[:, None, None])
-    out = out.reshape(S, 1, cfg.num_heads * hd)
+    out = out.reshape(S, T, cfg.num_heads * hd)
     out = logical_constraint(out, "batch", "seq", "heads")
     y = out @ p["wo"].astype(cfg.compute_dtype)
     return logical_constraint(y, "batch", "seq", None), new_k, new_v

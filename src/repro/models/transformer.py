@@ -476,6 +476,25 @@ def decode_step_paged(params, pool, batch, cfg: ModelConfig,
     return unembed(params["embed"], h, cfg), pool
 
 
+def verify_step_paged(params, pool, batch, cfg: ModelConfig,
+                      impl: Optional[str] = None
+                      ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Multi-token verification step (speculative decoding / batched
+    prefill): every slot feeds up to T scripted tokens at contiguous
+    positions and gets logits for ALL of them from ONE forward pass.
+
+    batch: {"tokens": (S, T) int32, "positions": (S, T) int32 — the
+    absolute position of each token, −1 for padding tokens and inactive
+    slots (live positions must be a contiguous prefix of the row),
+    "block_table": (S, MB) int32}.  Returns (logits (S, T, V), new pool).
+    """
+    h = embed(params["embed"], batch["tokens"], cfg)
+    h, pool = _paged_layers(params, h, pool, cfg, batch["positions"],
+                            batch["block_table"], impl=impl)
+    h = apply_norm(params["final_norm"], h, cfg)
+    return unembed(params["embed"], h, cfg), pool
+
+
 # ---------------------------------------------------------------------------
 # Model API
 # ---------------------------------------------------------------------------
@@ -489,6 +508,7 @@ class ModelAPI(NamedTuple):
     decode_step: Callable     # (params, cache, batch) -> (logits, cache)
     init_paged_cache: Callable  # (num_blocks, block_size) -> pool
     decode_step_paged: Callable  # (params, pool, batch) -> (logits, pool)
+    verify_step_paged: Callable  # (params, pool, batch) -> (logits, pool)
 
 
 def build_model(cfg: ModelConfig) -> ModelAPI:
@@ -505,6 +525,8 @@ def build_model(cfg: ModelConfig) -> ModelAPI:
             init_paged_cache(cfg, num_blocks, block_size, dtype=dtype),
         decode_step_paged=lambda params, pool, batch, impl=None:
             decode_step_paged(params, pool, batch, cfg, impl=impl),
+        verify_step_paged=lambda params, pool, batch, impl=None:
+            verify_step_paged(params, pool, batch, cfg, impl=impl),
     )
 
 

@@ -1,6 +1,7 @@
+from repro.serving.drafter import propose as draft_propose
 from repro.serving.engine import Engine
 from repro.serving.kv_cache import KVBlockPool, pad_block_table
 from repro.serving.scheduler import Request, Scheduler
 
 __all__ = ["Engine", "KVBlockPool", "Request", "Scheduler",
-           "pad_block_table"]
+           "pad_block_table", "draft_propose"]

@@ -6,16 +6,49 @@ Layered design:
 * ``repro.serving.kv_cache``  — paged KV-block pool (host allocator; the
   device pool lives in ``models.transformer.init_paged_cache``);
 * ``repro.serving.scheduler`` — admission / eviction over a fixed slot set
-  (FIFO or longest-prefill-first);
+  (FIFO or longest-prefill-first), block-budget reservation + lazy mapping;
+* ``repro.serving.drafter``   — zero-cost prompt-lookup n-gram drafter;
 * this module              — the persistent decode loop: ONE jitted step over
   the whole slot set, compiled once, with position-gated masking so slots at
-  different generation depths coexist.  Each call scans ``prefill_chunk``
-  token-steps: every slot either consumes its *scripted* pending tokens (the
-  prompt, fed in chunks of at most ``prefill_chunk`` per call — chunked
-  prefill, so a long prompt shares steps with running decodes instead of
-  stalling them) or chains on its own samples, so prefill and decode tokens
-  coexist in the same batched step and the pool round-trip + dispatch cost
-  is amortized over ``num_slots × prefill_chunk`` token-slots.
+  different generation depths coexist.
+
+Two persistent-step shapes, selected by ``spec_k``:
+
+**spec_k == 0 (sequential scan step).**  Each call scans ``prefill_chunk``
+token-steps: every slot either consumes its *scripted* pending tokens (the
+prompt, fed in chunks — chunked prefill) or chains on its own samples, so
+prefill and decode tokens coexist in the same batched step and the pool
+round-trip + dispatch cost is amortized over ``num_slots × prefill_chunk``
+token-slots.
+
+**spec_k > 0 (speculative verify step).**  The draft→verify→rollback
+contract:
+
+* **draft** — per round, each decoding slot's host-side n-gram drafter
+  (``drafter.propose``) proposes up to ``spec_k`` tokens continuing the
+  slot's own history; the script row is ``[carry, d_1 .. d_m]`` padded to
+  ``spec_k + 1`` and masked per slot (``n_feed``), so arbitrary mixes of
+  prefilling / drafting / draft-less slots hit the SAME jitted step —
+  prefill chunks are just scripts with no drafts;
+* **verify** — ONE multi-token forward (``verify_step_paged`` →
+  ``paged_verify_attention``) scores all ``spec_k + 1`` positions of every
+  slot simultaneously: the same position-gated masking chunked prefill
+  relies on makes causality among the fresh tokens purely positional,
+  so one model traversal replaces ``m + 1`` sequential ones;
+* **accept** — greedy slots accept the longest draft prefix matching the
+  argmax chain (bit-exact vs the non-speculative engine by construction:
+  every emitted token is the target model's own next token given the
+  accepted prefix).  Sampling slots run rejection sampling against the
+  deterministic drafter (q = point mass): accept ``d`` with probability
+  ``p(d)``, else emit a sample from the residual ``p`` with ``d`` zeroed
+  and renormalized — provably the target softmax distribution, with all
+  draws keyed by ``(seed, rid, position)`` so tokens stay
+  schedule-independent;
+* **rollback** — rejected suffixes need no device work (the position gate
+  masks cache entries beyond the committed position until overwritten);
+  the host rewinds ``slot.pos`` and ``KVBlockPool.truncate`` reclaims
+  whole blocks past the committed prefix, re-crediting the slot's
+  reservation so the positions re-map when real tokens arrive.
 
 The legacy static-bucket path (LEFT-padded batch, one ``lax.scan`` compile
 per ``(batch, lengths)`` bucket) is kept as ``generate_ids_static`` — it is
@@ -28,10 +61,20 @@ Note on SSM/hybrid archs: the paged cache is position-gated — stale block
 contents are *masked*, not cleared, which is only sound when every read is
 gated on the token's absolute position (attention).  An SSM recurrence
 updates its O(1) state unconditionally, so a freed-and-reused slot would
-leak state across requests; ssm/hybrid (and encoder-decoder) archs therefore
-fall back to the static-bucket path, where ragged batches should use
-same-length prompts (documented limitation; the paper's nanochat model is
-dense attention).
+leak state across requests — and for the same reason speculative decoding
+cannot roll an SSM back: rejecting a draft suffix would need the recurrent
+state *before* the rejected tokens, which the unconditional update has
+already destroyed.  ssm/hybrid (and encoder-decoder) archs therefore fall
+back to the static-bucket path, where ragged batches should use same-length
+prompts (documented limitation; the paper's nanochat model is dense
+attention).
+
+Uniform sliding-window archs additionally recycle KV blocks per slot: once
+every position in a block falls ``window`` behind the committed position it
+can never be attended again, so the block returns to the pool mid-request
+(the block-table entry goes to −1, which both kernels and the jnp path mask)
+and admission budgets cover only the live window — capacity scales with the
+window, not prompt+max_new.
 """
 from __future__ import annotations
 
@@ -45,6 +88,7 @@ import numpy as np
 
 from repro.data.tokenizer import BPETokenizer
 from repro.models.transformer import ModelAPI, paged_cache_supported
+from repro.serving import drafter as drafter_mod
 from repro.serving.kv_cache import KVBlockPool, pad_block_table
 from repro.serving.scheduler import Request, Scheduler
 
@@ -72,7 +116,11 @@ class Engine:
     num_slots: int = 8                 # concurrent sequences in the step
     block_size: int = 16               # KV tokens per pool block
     num_blocks: Optional[int] = None   # pool size; default fits all slots
-    prefill_chunk: int = 8             # token-steps per persistent-step call
+    prefill_chunk: int = 8             # token-steps per scan-step call
+    spec_k: int = 0                    # speculative draft length; 0 = the
+                                       # sequential scan step (no drafting)
+    draft_ngram: int = 3               # longest suffix n-gram the prompt-
+                                       # lookup drafter matches on
     policy: str = "fifo"               # admission: fifo | longest_prefill
     attn_impl: Optional[str] = None    # None=auto: pallas kernel off-CPU
 
@@ -89,12 +137,19 @@ class Engine:
         self._pool = None       # device pool allocated lazily on first run()
                                 # so score-/static-only engines don't hold
                                 # num_blocks x block_size KV slots per layer
+        cfg = self.model.cfg
+        # uniform sliding window -> per-slot block recycling is sound (every
+        # layer shares the same window; heterogeneous window_pattern pools
+        # must keep blocks alive for the largest window, incl. global=0)
+        self._recycle_w = int(cfg.window) \
+            if (cfg.window and not cfg.window_pattern) else 0
         if self.attn_impl is None:
             self.attn_impl = ("pallas" if jax.default_backend() == "tpu"
                               else "jnp")
         impl = self.attn_impl if self.attn_impl == "pallas" else None
         model = self.model
         T = self.prefill_chunk
+        W = self.spec_k + 1
 
         def step(params, pool, script, n_script, start_pos, table, temps,
                  greedy, base_key, rids):
@@ -131,45 +186,140 @@ class Engine:
                 jnp.arange(T))
             return pool, samples.T                           # (S, T)
 
-        self._step_fn = jax.jit(step)
+        # the pool is donated: each round consumes the previous round's
+        # buffers in place (the engine never reads a superseded pool), which
+        # drops a pool-sized copy per call
+        self._step_fn = jax.jit(step, donate_argnums=(1,))
+
+        def verify(params, pool, script, start_pos, n_feed, table, temps,
+                   greedy, base_key, rids):
+            """One speculative round: ALL W = spec_k+1 scripted positions of
+            every slot scored in ONE forward.  script: (S, W) = [carry,
+            draft_1..draft_m] for decoding slots / a prompt chunk for
+            prefilling ones; n_feed: (S,) live tokens (the rest is padding,
+            masked); start_pos: (S,) first write position (−1 = inactive).
+            Returns (pool, greedy_tok, sampled, accept, resid) all (S, W):
+            per fed position t — the argmax token, a plain categorical
+            sample, whether rejection sampling accepts the NEXT scripted
+            token (u < p(script[t+1])), and a sample from the residual
+            distribution (p with that draft zeroed, renormalized)."""
+            t_idx = jnp.arange(W)[None, :]
+            live = (start_pos[:, None] >= 0) & (t_idx < n_feed[:, None])
+            pos = jnp.where(live, start_pos[:, None] + t_idx, -1)
+            logits, pool = model.verify_step_paged(
+                params, pool, {"tokens": script, "positions": pos,
+                               "block_table": table}, impl=impl)
+            logits = logits.astype(jnp.float32)              # (S, W, V)
+            greedy_tok = jnp.argmax(logits, axis=-1)
+            keys = jax.vmap(jax.vmap(
+                lambda r, q: jax.random.fold_in(
+                    jax.random.fold_in(base_key, r), q),
+                in_axes=(None, 0)))(rids, pos)               # (S, W) keys
+            temp = jnp.maximum(jnp.where(greedy, 1.0, temps), 1e-6)
+            scaled = logits / temp[:, None, None]
+            sampled = jax.vmap(jax.vmap(jax.random.categorical))(keys, scaled)
+            probs = jax.nn.softmax(scaled, axis=-1)
+            # rejection sampling vs the DETERMINISTIC drafter (q = point
+            # mass on the draft token): accept with prob p(draft); the
+            # residual is exactly p minus that mass, renormalized — together
+            # they reproduce the target softmax distribution
+            nxt = jnp.roll(script, -1, axis=1)               # draft at t+1
+            p_draft = jnp.take_along_axis(probs, nxt[..., None],
+                                          axis=-1)[..., 0]
+            u = jax.vmap(jax.vmap(lambda k: jax.random.uniform(
+                jax.random.fold_in(k, 1))))(keys)
+            accept = u < p_draft
+            resid_logits = jnp.where(
+                jax.nn.one_hot(nxt, scaled.shape[-1], dtype=bool),
+                -jnp.inf, scaled)
+            rkeys = jax.vmap(jax.vmap(
+                lambda k: jax.random.fold_in(k, 2)))(keys)
+            resid = jax.vmap(jax.vmap(jax.random.categorical))(rkeys,
+                                                               resid_logits)
+            return (pool, greedy_tok.astype(jnp.int32),
+                    sampled.astype(jnp.int32), accept,
+                    resid.astype(jnp.int32))
+
+        self._verify_fn = jax.jit(verify, donate_argnums=(1,))
+
+        def verify_greedy(params, pool, script, start_pos, n_feed, table):
+            """Greedy-only verify round: argmax chain, no sampling machinery
+            (softmax / categorical / residual draws are dead weight when
+            every active slot is greedy — the common serving regime the
+            drafter targets).  Returns (pool, greedy_tok (S, W))."""
+            t_idx = jnp.arange(W)[None, :]
+            live = (start_pos[:, None] >= 0) & (t_idx < n_feed[:, None])
+            pos = jnp.where(live, start_pos[:, None] + t_idx, -1)
+            logits, pool = model.verify_step_paged(
+                params, pool, {"tokens": script, "positions": pos,
+                               "block_table": table}, impl=impl)
+            return pool, jnp.argmax(logits.astype(jnp.float32),
+                                    axis=-1).astype(jnp.int32)
+
+        self._verify_greedy_fn = jax.jit(verify_greedy, donate_argnums=(1,))
 
     # ======================================================================
     # Continuous decode loop (the scheduler path)
     # ======================================================================
 
+    def _make_sched(self, round_tokens: int) -> Scheduler:
+        sched = Scheduler(self.num_slots,
+                          KVBlockPool(self.num_blocks, self.block_size),
+                          self._mb, self.policy, window=self._recycle_w)
+        sched.chunk_tokens = round_tokens
+        return sched
+
+    def _prep_round(self, sched: Scheduler, act: List[int],
+                    tables: np.ndarray, round_tokens,
+                    stats: Dict[str, float]) -> None:
+        """Recycle dead window blocks, lazily map the blocks this round
+        writes (``round_tokens``: int, or a per-slot (S,) array), and
+        refresh the padded block tables."""
+        for si in act:
+            slot = sched.slots[si]
+            n = int(round_tokens[si]) if isinstance(round_tokens, np.ndarray)\
+                else int(round_tokens)
+            recycled = sched.recycle_window(si)
+            stats["recycled_blocks"] += recycled
+            if sched.ensure_mapped(si, slot.pos + n - 1) or recycled:
+                # stale table entries for truncated logical blocks beyond
+                # the round's live range are positionally masked, so the
+                # rebuild can wait until the mapping actually changes
+                tables[si] = pad_block_table(slot.blocks, self._mb)
+
     def run(self, requests: Sequence[Request], *, seed: int = 0,
             use_time: bool = False) -> Dict[str, float]:
         """Drive the continuous loop until every request finished.  Mutates
-        each ``Request`` in place (``tokens``, admit/finish times) and
-        returns aggregate stats.  ``use_time`` honors ``Request.arrival``
-        (seconds relative to the call) against the wall clock; otherwise all
-        requests are immediately admissible."""
+        each ``Request`` in place (``tokens``, admit/finish times, draft
+        counters) and returns aggregate stats.  ``use_time`` honors
+        ``Request.arrival`` (seconds relative to the call) against the wall
+        clock; otherwise all requests are immediately admissible."""
         assert self.continuous, "continuous path unsupported for this arch"
+        if self.spec_k > 0:
+            return self._run_spec(requests, seed=seed, use_time=use_time)
         S, MB, T = self.num_slots, self._mb, self.prefill_chunk
-        sched = Scheduler(S, KVBlockPool(self.num_blocks, self.block_size),
-                          MB, self.policy)
+        sched = self._make_sched(T)
         for r in requests:
             assert r.max_new >= 1, "max_new must be >= 1"
             sched.submit(r)
         base_key = jax.random.key(seed)
-        if self._pool is None:
-            self._pool = self.model.init_paged_cache(self.num_blocks,
-                                                     self.block_size)
-        pool = self._pool
+        pool = self._pool if self._pool is not None else \
+            self.model.init_paged_cache(self.num_blocks, self.block_size)
+        self._pool = None       # donated below: never reuse a stale handle
         tables = np.full((S, MB), -1, np.int32)
         stats = {"step_calls": 0, "prefill_tokens": 0, "generated": 0,
-                 "token_slots": 0}
+                 "token_slots": 0, "recycled_blocks": 0}
         t0 = time.perf_counter()
         now = (lambda: time.perf_counter() - t0) if use_time else \
             (lambda: float("inf"))
 
         while sched.has_work():
-            for si in sched.admit(now()):
-                tables[si] = pad_block_table(sched.slots[si].blocks, MB)
+            sched.admit(now())
             act = sched.active_slots()
             if not act:
                 time.sleep(5e-4)        # idle: waiting on future arrivals
                 continue
+            self._prep_round(sched, act, tables, T, stats)
 
             # -- build the scripted chunk for every active slot ------------
             script = np.zeros((S, T), np.int32)
@@ -210,22 +360,176 @@ class Engine:
                     continue            # still mid-prompt: nothing sampled
                 done = False
                 for tok in samples[si, n - 1:]:
-                    tok = int(tok)
-                    slot.generated += 1
-                    slot.req.tokens.append(tok)
-                    stats["generated"] += 1
-                    if (slot.generated >= slot.req.max_new
-                            or tok == slot.req.eos_id):
-                        done = True
+                    done = self._emit(sched, si, int(tok), stats, now,
+                                      use_time, tables)
+                    if done:
                         break
-                if done:
-                    sched.finish(si, now() if use_time else 0.0)
-                    tables[si] = -1
-                else:                   # carry the last sample into the
+                if not done:            # carry the last sample into the
                     slot.feed = [slot.req.tokens[-1]]   # next chunk
         self._pool = pool
         stats["wall"] = time.perf_counter() - t0
         return stats
+
+    # ------------------------------------------------------------------
+    # Speculative loop (spec_k > 0): draft -> verify -> accept -> rollback
+    # ------------------------------------------------------------------
+
+    def _run_spec(self, requests: Sequence[Request], *, seed: int = 0,
+                  use_time: bool = False) -> Dict[str, float]:
+        S, MB, W = self.num_slots, self._mb, self.spec_k + 1
+        sched = self._make_sched(W)
+        for r in requests:
+            assert r.max_new >= 1, "max_new must be >= 1"
+            sched.submit(r)
+        base_key = jax.random.key(seed)
+        pool = self._pool if self._pool is not None else \
+            self.model.init_paged_cache(self.num_blocks, self.block_size)
+        self._pool = None       # donated below: never reuse a stale handle
+        tables = np.full((S, MB), -1, np.int32)
+        stats = {"step_calls": 0, "prefill_tokens": 0, "generated": 0,
+                 "token_slots": 0, "recycled_blocks": 0, "drafted": 0,
+                 "accepted": 0, "rolled_back": 0}
+        t0 = time.perf_counter()
+        now = (lambda: time.perf_counter() - t0) if use_time else \
+            (lambda: float("inf"))
+
+        while sched.has_work():
+            sched.admit(now())
+            act = sched.active_slots()
+            if not act:
+                time.sleep(5e-4)
+                continue
+
+            # -- draft: build [carry, d_1..d_m] / prompt-chunk scripts -----
+            script = np.zeros((S, W), np.int32)
+            n_feed = np.zeros((S,), np.int32)
+            start = np.full((S,), -1, np.int32)
+            temps = np.ones((S,), np.float32)
+            greedy = np.ones((S,), bool)
+            rids = np.zeros((S,), np.int32)
+            n_draft = np.zeros((S,), np.int32)
+            for si in act:
+                slot = sched.slots[si]
+                if len(slot.feed) > 1:          # prefill chunk: no drafts
+                    n = min(W, len(slot.feed))
+                    script[si, :n] = slot.feed[:n]
+                else:                           # decode: carry + drafts
+                    room = min(self.spec_k,
+                               slot.req.max_new - slot.generated - 1)
+                    drafts = drafter_mod.propose(slot.history, room,
+                                                 max_n=self.draft_ngram) \
+                        if room > 0 else []
+                    n_draft[si] = len(drafts)
+                    n = 1 + len(drafts)
+                    script[si, :n] = slot.feed + drafts
+                n_feed[si] = n
+                start[si] = slot.pos
+                temps[si] = slot.req.temperature
+                greedy[si] = slot.req.greedy
+                rids[si] = slot.req.rid
+            self._prep_round(sched, act, tables, n_feed, stats)
+
+            # -- verify: one forward over every scripted position ----------
+            all_greedy = all(greedy[si] for si in act)
+            if all_greedy:
+                pool, g_tok = self._verify_greedy_fn(
+                    self.params, pool, jnp.asarray(script),
+                    jnp.asarray(start), jnp.asarray(n_feed),
+                    jnp.asarray(tables))
+                g_tok = np.asarray(g_tok)
+                s_tok = acc = resid = g_tok      # unread on greedy slots
+            else:
+                pool, g_tok, s_tok, acc, resid = self._verify_fn(
+                    self.params, pool, jnp.asarray(script),
+                    jnp.asarray(start), jnp.asarray(n_feed),
+                    jnp.asarray(tables), jnp.asarray(temps),
+                    jnp.asarray(greedy), base_key, jnp.asarray(rids))
+                g_tok, s_tok = np.asarray(g_tok), np.asarray(s_tok)
+                acc, resid = np.asarray(acc), np.asarray(resid)
+            stats["step_calls"] += 1
+            stats["token_slots"] += len(act) * W
+
+            # -- accept / rollback -----------------------------------------
+            for si in act:
+                slot = sched.slots[si]
+                n = int(n_feed[si])
+                if n_draft[si] == 0 and len(slot.feed) > 1:
+                    # prefill round: n prompt tokens written
+                    slot.pos += n
+                    exhausted = n == len(slot.feed)
+                    del slot.feed[:n]
+                    stats["prefill_tokens"] += n if not slot.generated else 0
+                    if not exhausted:
+                        continue
+                    # first sample comes from the last prompt position
+                    tok = int(g_tok[si, n - 1] if slot.req.greedy
+                              else s_tok[si, n - 1])
+                    if self._emit(sched, si, tok, stats, now, use_time,
+                                  tables):
+                        continue
+                    slot.feed = [slot.req.tokens[-1]]
+                    continue
+
+                # decode round: carry at start, m drafts behind it
+                m = int(n_draft[si])
+                is_greedy = slot.req.greedy
+                a = 0                   # accepted drafts (committed writes)
+                done = False
+                for i in range(m):
+                    d = int(script[si, i + 1])
+                    ok = (d == int(g_tok[si, i])) if is_greedy \
+                        else bool(acc[si, i])
+                    if ok:
+                        a += 1
+                        done = self._emit(sched, si, d, stats, now,
+                                          use_time, tables)
+                        if done:
+                            break
+                    else:               # emit the target's own token
+                        done = self._emit(
+                            sched, si,
+                            int(g_tok[si, i]) if is_greedy
+                            else int(resid[si, i]),
+                            stats, now, use_time, tables)
+                        break
+                else:
+                    if not done:        # every draft accepted: bonus token
+                        done = self._emit(
+                            sched, si,
+                            int(g_tok[si, m]) if is_greedy
+                            else int(s_tok[si, m]),
+                            stats, now, use_time, tables)
+                stats["drafted"] += m
+                stats["accepted"] += a
+                slot.req.drafted += m
+                slot.req.accepted += a
+                if done:
+                    continue            # finish() already ran inside _emit
+                # commit carry + a accepted drafts; roll back the rest
+                slot.pos = int(start[si]) + 1 + a
+                if a < m:
+                    stats["rolled_back"] += m - a
+                    sched.pool.truncate(slot, slot.pos)
+                slot.feed = [slot.req.tokens[-1]]
+        self._pool = pool
+        stats["wall"] = time.perf_counter() - t0
+        stats["accept_rate"] = (stats["accepted"] / stats["drafted"]
+                                if stats["drafted"] else float("nan"))
+        return stats
+
+    def _emit(self, sched: Scheduler, si: int, tok: int, stats, now,
+              use_time: bool, tables: np.ndarray) -> bool:
+        """Append one generated token; finish the slot on EOS/max_new.
+        Returns True when the slot finished."""
+        slot = sched.slots[si]
+        slot.generated += 1
+        slot.req.tokens.append(tok)
+        stats["generated"] += 1
+        if slot.generated >= slot.req.max_new or tok == slot.req.eos_id:
+            sched.finish(si, now() if use_time else 0.0)
+            tables[si] = -1
+            return True
+        return False
 
     # ======================================================================
     # Legacy static-bucket path (reference + ssm/hybrid fallback)

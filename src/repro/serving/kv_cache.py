@@ -10,6 +10,20 @@ contiguous positions (logical position i of a request lives at offset
 validity is purely positional and the allocator never has to touch device
 memory to recycle a block — stale contents are masked by the position gate
 until overwritten.
+
+Two-level accounting: admission **reserves** a block *budget* up front (so
+a running request can never hit a mid-flight pool OOM) while physical
+blocks are **mapped** lazily as positions are written.  This split is what
+makes rollback and recycling cheap:
+
+* ``truncate(slot, pos)`` — speculative-decode rollback: physical blocks
+  wholly beyond ``pos`` return to the free list but their budget stays
+  with the slot (the positions will be re-fed with accepted tokens);
+* sliding-window recycling (``Scheduler.recycle_window``) frees blocks
+  that fell out of the attention window the same way — and because a
+  windowed slot's *budget* only covers the live window (not the full
+  prompt+gen span), admission capacity for windowed archs scales with the
+  window, not the sequence length.
 """
 from __future__ import annotations
 
@@ -19,9 +33,9 @@ import numpy as np
 
 
 class KVBlockPool:
-    """Fixed-size block allocator (free-list).  Raises on double-alloc /
-    double-free so scheduler bugs surface as exceptions, not silent KV
-    corruption."""
+    """Fixed-size block allocator (free-list) with a reservation ledger.
+    Raises on double-alloc / double-free / over-reserve so scheduler bugs
+    surface as exceptions, not silent KV corruption."""
 
     def __init__(self, num_blocks: int, block_size: int):
         assert num_blocks > 0 and block_size > 0
@@ -29,6 +43,7 @@ class KVBlockPool:
         self.block_size = block_size
         self._free: List[int] = list(range(num_blocks - 1, -1, -1))
         self._allocated: set = set()
+        self._reserved = 0          # budgeted-but-unmapped blocks
 
     # -- queries ------------------------------------------------------------
     @property
@@ -39,31 +54,85 @@ class KVBlockPool:
     def num_allocated(self) -> int:
         return len(self._allocated)
 
+    @property
+    def num_reserved(self) -> int:
+        return self._reserved
+
     def blocks_for(self, num_tokens: int) -> int:
         """Blocks needed to hold ``num_tokens`` cache entries."""
         return -(-max(num_tokens, 0) // self.block_size)
 
     def can_allocate(self, n: int) -> bool:
-        return n <= len(self._free)
+        """Whether n blocks can be allocated OUTSIDE any reservation."""
+        return n <= len(self._free) - self._reserved
+
+    can_reserve = can_allocate      # same ledger: unreserved free blocks
+
+    # -- reservation (admission-time budget) --------------------------------
+    def reserve(self, n: int) -> None:
+        if not self.can_reserve(n):
+            raise RuntimeError(
+                f"KV pool over-reserve: want {n} blocks, "
+                f"{len(self._free) - self._reserved} unreserved free")
+        self._reserved += n
+
+    def release(self, n: int) -> None:
+        if n > self._reserved:
+            raise RuntimeError(f"release {n} > reserved {self._reserved}")
+        self._reserved -= n
 
     # -- alloc / free -------------------------------------------------------
-    def alloc(self, n: int) -> List[int]:
-        if n > len(self._free):
+    def alloc(self, n: int, *, reserved: bool = False) -> List[int]:
+        """Pop n physical blocks.  ``reserved=True`` draws them down from
+        an existing reservation (always succeeds while the reservation
+        invariant ``reserved <= free`` holds); ``reserved=False`` may only
+        take unreserved blocks."""
+        avail = len(self._free) if reserved else \
+            len(self._free) - self._reserved
+        if n > avail:
             raise RuntimeError(
-                f"KV pool exhausted: want {n} blocks, {len(self._free)} free")
+                f"KV pool exhausted: want {n} blocks, {avail} "
+                f"{'reserved-' if reserved else 'unreserved '}free")
+        if reserved:
+            self._reserved -= n
         out = [self._free.pop() for _ in range(n)]
         self._allocated.update(out)
         return out
 
-    def free(self, blocks: Sequence[int]) -> None:
+    def free(self, blocks: Sequence[int], *, rereserve: bool = False) -> None:
+        """Return physical blocks to the free list.  ``rereserve=True``
+        re-credits their budget (rollback/recycling: the slot keeps the
+        right to map replacements)."""
         for b in blocks:
             if b not in self._allocated:
                 raise RuntimeError(f"double-free / foreign block {b}")
             self._allocated.remove(b)
             self._free.append(b)
+        if rereserve:
+            self._reserved += len(blocks)
+
+    # -- speculative-decode rollback ----------------------------------------
+    def truncate(self, slot, pos: int) -> int:
+        """Roll a slot's mapping back to ``pos`` committed tokens: physical
+        blocks wholly beyond the committed prefix (logical index >=
+        ``blocks_for(pos)``) return to the free list, their budget going
+        back to the slot (``slot.reserved``) so the positions can be
+        re-mapped when real tokens arrive.  ``slot`` is duck-typed: it
+        needs ``blocks`` (logical->physical list, −1 = unmapped) and a
+        ``reserved`` counter.  Stale device contents need no touch — the
+        position gate masks them until overwritten.  Returns the number of
+        blocks reclaimed."""
+        keep = self.blocks_for(pos)
+        dead = [b for b in slot.blocks[keep:] if b >= 0]
+        if dead:
+            self.free(dead, rereserve=True)     # pool-wide ledger
+            slot.reserved += len(dead)          # the slot's share of it
+        del slot.blocks[keep:]
+        return len(dead)
 
     def check_invariants(self) -> None:
-        """free ∪ allocated must partition [0, num_blocks) exactly."""
+        """free ∪ allocated must partition [0, num_blocks) exactly, and the
+        reservation ledger must be covered by free blocks."""
         free = set(self._free)
         if len(free) != len(self._free):
             raise AssertionError("duplicate block on the free list")
@@ -72,6 +141,10 @@ class KVBlockPool:
                 f"blocks both free and allocated: {free & self._allocated}")
         if free | self._allocated != set(range(self.num_blocks)):
             raise AssertionError("leaked or out-of-range blocks")
+        if not 0 <= self._reserved <= len(self._free):
+            raise AssertionError(
+                f"reservation ledger broken: {self._reserved} reserved, "
+                f"{len(self._free)} free")
 
 
 def pad_block_table(blocks: Sequence[int], max_blocks: int) -> np.ndarray:

@@ -3,12 +3,20 @@
 Owns the waiting queue, the fixed slot set, and the block-pool bookkeeping:
 
 * **admission** — a waiting request enters a free slot once its arrival time
-  has passed and the pool can hold its full footprint
-  (``ceil((len(prompt) + max_new) / block_size)`` blocks, reserved up front so
-  a running request can never hit a mid-flight pool OOM);
+  has passed and the pool can *reserve* its full block budget
+  (``ceil((len(prompt) + max_new) / block_size)`` blocks for dense archs —
+  reserved up front so a running request can never hit a mid-flight pool
+  OOM; for uniform sliding-window archs the budget only covers the live
+  window, since out-of-window blocks are recycled, so admission capacity
+  scales with the window, not the sequence length);
+* **lazy mapping** — physical blocks are drawn down from the reservation as
+  positions are actually written (``ensure_mapped``), which is what lets
+  speculative rollback (``KVBlockPool.truncate``) and window recycling
+  return blocks without breaking the no-OOM guarantee;
 * **eviction** — finished slots (EOS or ``max_new`` reached) free their
-  blocks immediately, so the next waiting request backfills the slot while
-  the remaining slots keep decoding;
+  mapped blocks and release the rest of their budget immediately, so the
+  next waiting request backfills the slot while the remaining slots keep
+  decoding;
 * **policies** — ``fifo`` admits in arrival order; ``longest_prefill`` admits
   the longest waiting prompt first (front-loads heavy prefills so they
   overlap with many short decodes instead of serializing at the tail).
@@ -37,22 +45,33 @@ class Request:
     tokens: List[int] = dataclasses.field(default_factory=list)
     admit_time: Optional[float] = None
     finish_time: Optional[float] = None
+    drafted: int = 0        # speculative: draft tokens proposed for this req
+    accepted: int = 0       # speculative: draft tokens verified-accepted
 
     @property
     def total_tokens(self) -> int:
         return len(self.prompt) + self.max_new
 
+    @property
+    def accept_rate(self) -> float:
+        return self.accepted / self.drafted if self.drafted else float("nan")
+
 
 @dataclasses.dataclass
 class Slot:
     """Per-slot decode state.  ``pos`` is the next cache position to write
-    (== tokens already written).  ``feed`` holds the tokens still to be fed
-    through the persistent step: the prompt at admission (consumed in
-    chunks — chunked prefill), then the single carry token once the slot is
-    sampling; the first sampled token therefore comes out of the same jitted
-    step as every other one."""
+    (== committed tokens; speculative rollback rewinds it).  ``feed`` holds
+    the tokens still to be fed through the persistent step: the prompt at
+    admission (consumed in chunks — chunked prefill), then the single carry
+    token once the slot is sampling; the first sampled token therefore
+    comes out of the same jitted step as every other one.  ``blocks`` maps
+    logical block index -> physical block id (−1 = unmapped: not yet
+    written, rolled back, or recycled out of the window); ``reserved`` is
+    the slot's remaining block budget (unmapped blocks it may still draw
+    from the pool)."""
     req: Request
-    blocks: List[int]
+    blocks: List[int] = dataclasses.field(default_factory=list)
+    reserved: int = 0
     feed: List[int] = dataclasses.field(default_factory=list)
     pos: int = 0
     generated: int = 0
@@ -61,15 +80,28 @@ class Slot:
     def in_prefill(self) -> bool:
         return self.generated == 0 and len(self.feed) > 1
 
+    @property
+    def history(self) -> List[int]:
+        """Token history the drafter may match against: the prompt plus
+        everything generated so far."""
+        return self.req.prompt + self.req.tokens
+
 
 class Scheduler:
     def __init__(self, num_slots: int, pool: KVBlockPool,
-                 max_blocks_per_slot: int, policy: str = "fifo"):
+                 max_blocks_per_slot: int, policy: str = "fifo",
+                 window: Optional[int] = None):
+        """``window``: uniform sliding-window size in tokens (None/0 = full
+        attention).  When set, per-request budgets cover only the live
+        window span (+ one in-flight chunk, supplied per-request via
+        ``chunk_tokens`` below) and ``recycle_window`` frees dead blocks."""
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; one of {POLICIES}")
         self.pool = pool
         self.policy = policy
         self.max_blocks_per_slot = max_blocks_per_slot
+        self.window = int(window) if window else 0
+        self.chunk_tokens = 1       # engine sets: max tokens fed per round
         self.waiting: List[Request] = []
         self.slots: List[Optional[Slot]] = [None] * num_slots
 
@@ -84,6 +116,17 @@ class Scheduler:
     def active_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s is not None]
 
+    def budget_for(self, req: Request) -> int:
+        """Block budget reserved at admission.  Dense: the full
+        prompt+max_new footprint.  Windowed: the largest number of blocks
+        simultaneously mapped — the window span plus the chunk being
+        written, which can straddle two extra partial blocks."""
+        need = self.pool.blocks_for(req.total_tokens)
+        if self.window:
+            live = self.pool.blocks_for(self.window + self.chunk_tokens) + 2
+            need = min(need, live)
+        return need
+
     # -- submission / admission --------------------------------------------
     def submit(self, req: Request) -> None:
         cap = self.max_blocks_per_slot * self.pool.block_size
@@ -91,7 +134,7 @@ class Scheduler:
             raise ValueError(
                 f"request {req.rid}: {req.total_tokens} tokens exceeds the "
                 f"per-slot capacity {cap}")
-        need = self.pool.blocks_for(req.total_tokens)
+        need = self.budget_for(req)
         if need > self.pool.num_blocks:
             # would never admit -> the engine loop would spin forever
             raise ValueError(
@@ -111,8 +154,9 @@ class Scheduler:
         return ready[0]
 
     def admit(self, now: float = float("inf")) -> List[int]:
-        """Admit as many ready requests as slots + blocks allow; returns the
-        newly filled slot indices."""
+        """Admit as many ready requests as slots + block budget allow;
+        returns the newly filled slot indices.  Admission only reserves —
+        physical blocks are mapped lazily by ``ensure_mapped``."""
         newly: List[int] = []
         free_slots = [i for i, s in enumerate(self.slots) if s is None]
         while free_slots and self.waiting:
@@ -120,23 +164,70 @@ class Scheduler:
             if pick is None:
                 break
             req = self.waiting[pick]
-            need = self.pool.blocks_for(req.total_tokens)
-            if not self.pool.can_allocate(need):
+            need = self.budget_for(req)
+            if not self.pool.can_reserve(need):
                 break                       # head-of-line blocks until frees
             self.waiting.pop(pick)
             si = free_slots.pop(0)
-            slot = Slot(req=req, blocks=self.pool.alloc(need),
-                        feed=list(req.prompt))
+            self.pool.reserve(need)
+            slot = Slot(req=req, reserved=need, feed=list(req.prompt))
             slot.req.admit_time = now if now != float("inf") else 0.0
             self.slots[si] = slot
             newly.append(si)
         return newly
 
+    # -- lazy mapping / recycling -------------------------------------------
+    def ensure_mapped(self, si: int, upto_pos: int) -> bool:
+        """Map physical blocks for every logical block covering positions
+        ``[0, upto_pos]`` that is still unmapped, drawing from the slot's
+        reservation (capped by it: positions beyond the budgeted footprint
+        stay unmapped and device writes there are dropped — never
+        corrupted).  Returns True if the mapping changed."""
+        slot = self.slots[si]
+        need = min(self.pool.blocks_for(upto_pos + 1),
+                   self.max_blocks_per_slot)
+        changed = False
+        if need > len(slot.blocks):
+            slot.blocks.extend([-1] * (need - len(slot.blocks)))
+        lo = 0
+        if self.window:     # blocks below the window floor stay dead
+            lo = max(0, (slot.pos - self.window + 1) // self.pool.block_size)
+        for j in range(lo, need):
+            if slot.blocks[j] < 0 and slot.reserved > 0:
+                slot.blocks[j] = self.pool.alloc(1, reserved=True)[0]
+                slot.reserved -= 1
+                changed = True
+        return changed
+
+    def recycle_window(self, si: int) -> int:
+        """Free mapped blocks that fell wholly out of the attention window
+        (every key position <= pos − window can never be attended by a
+        future query, since committed ``pos`` is monotone).  Budget returns
+        to the slot, keeping its live-window mapping rights.  Returns the
+        number of blocks recycled."""
+        if not self.window:
+            return 0
+        slot = self.slots[si]
+        bs = self.pool.block_size
+        dead_upto = min(len(slot.blocks),
+                        max(0, (slot.pos - self.window + 1) // bs))
+        n = 0
+        for j in range(dead_upto):
+            if slot.blocks[j] >= 0:
+                self.pool.free([slot.blocks[j]], rereserve=True)
+                slot.blocks[j] = -1
+                slot.reserved += 1
+                n += 1
+        return n
+
     # -- eviction -----------------------------------------------------------
     def finish(self, si: int, now: float = 0.0) -> Request:
         slot = self.slots[si]
         assert slot is not None, f"finish on empty slot {si}"
-        self.pool.free(slot.blocks)
+        mapped = [b for b in slot.blocks if b >= 0]
+        if mapped:
+            self.pool.free(mapped)
+        self.pool.release(slot.reserved)
         self.slots[si] = None
         slot.req.finish_time = now
         return slot.req

@@ -269,6 +269,56 @@ def test_prefetcher_close_unblocks_full_queue():
     assert not pf._thread.is_alive()
 
 
+def test_prefetcher_prime_matches_take():
+    """A primed chunk with matching bounds is returned verbatim; priming
+    never changes what take() produces."""
+    pf = Prefetcher(lambda s: {"x": np.full((2,), s, np.int32)}, 9, depth=3)
+    try:
+        a = pf.take(0, 2)
+        pf.prime(2, 3)
+        b = pf.take(2, 3)
+        assert [int(b["x"][i, 0]) for i in range(3)] == [2, 3, 4]
+        pf.prime(5, 4)
+        c = pf.take(5, 4)
+        assert [int(c["x"][i, 0]) for i in range(4)] == [5, 6, 7, 8]
+    finally:
+        pf.close()
+
+
+def test_prefetcher_prime_mismatch_falls_back_losslessly():
+    """If the consumer's chunk bounds moved after priming (a sync runner
+    shifted its next event), take() recovers the raw items and serves the
+    requested bounds exactly."""
+    pf = Prefetcher(lambda s: {"x": np.full((2,), s, np.int32)}, 10,
+                    depth=4)
+    try:
+        pf.prime(0, 4)                        # guess: steps 0..3
+        a = pf.take(0, 2)                     # actual chunk is shorter
+        assert [int(a["x"][i, 0]) for i in range(2)] == [0, 1]
+        b = pf.take(2, 5)                     # next chunk spans leftovers
+        assert [int(b["x"][i, 0]) for i in range(5)] == [2, 3, 4, 5, 6]
+        pf.prime(7, 2)
+        c = pf.take(7, 3)                     # longer than primed
+        assert [int(c["x"][i, 0]) for i in range(3)] == [7, 8, 9]
+    finally:
+        pf.close()
+
+
+def test_prefetcher_prime_surfaces_producer_error():
+    def bad(step):
+        if step == 1:
+            raise RuntimeError("boom")
+        return {"x": np.zeros(2)}
+
+    pf = Prefetcher(bad, 5, depth=2)
+    try:
+        pf.prime(0, 3)
+        with pytest.raises(RuntimeError):
+            pf.take(0, 3)
+    finally:
+        pf.close()
+
+
 def test_stack_batches():
     out = stack_batches([{"a": np.arange(3)}, {"a": np.arange(3) + 10}])
     np.testing.assert_array_equal(np.asarray(out["a"]),

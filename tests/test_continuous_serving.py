@@ -121,17 +121,24 @@ def test_scheduler_churn_preserves_pool_invariants():
 
 
 def test_scheduler_respects_pool_capacity_and_frees_on_finish():
+    """Admission reserves the full footprint up front (so running requests
+    can never OOM mid-flight) while physical blocks map lazily as positions
+    are written."""
     pool = KVBlockPool(num_blocks=4, block_size=8)
     sched = Scheduler(2, pool, max_blocks_per_slot=2, policy="fifo")
     for i in range(3):
         sched.submit(Request(rid=i, prompt=[1] * 10, max_new=6))  # 2 blocks
     admitted = sched.admit()
-    assert admitted == [0, 1] and pool.num_free == 0
-    assert sched.admit() == []                # pool exhausted -> queued
+    assert admitted == [0, 1] and pool.num_reserved == 4
+    assert not pool.can_reserve(1)            # budget exhausted -> queued
+    assert sched.admit() == []
     pool.check_invariants()
-    sched.finish(0)
+    sched.ensure_mapped(0, 9)                 # positions 0..9 -> 2 blocks
+    assert pool.num_allocated == 2 and pool.num_reserved == 2
     pool.check_invariants()
-    assert pool.num_free == 2
+    sched.finish(0)                           # frees mapped AND releases
+    pool.check_invariants()                   # the unmapped remainder
+    assert pool.num_free == 4 and pool.num_reserved == 2
     assert sched.admit() == [0]               # backfills the freed slot
     assert sched.waiting == []
 

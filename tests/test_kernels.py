@@ -217,6 +217,87 @@ def test_paged_decode_attention_kernel(S, KV, G, NB, bs, MB, D, window):
     assert float(jnp.max(jnp.abs(ref - ref2))) < 2e-5
 
 
+@pytest.mark.parametrize("S,T,KV,G,NB,bs,MB,D,window", [
+    (3, 4, 2, 2, 8, 16, 3, 32, 0),
+    (2, 6, 1, 4, 6, 8, 4, 64, 0),
+    (4, 3, 2, 1, 8, 16, 2, 32, 12),   # sliding window
+])
+def test_paged_verify_attention_kernel(S, T, KV, G, NB, bs, MB, D, window):
+    """Multi-query-per-slot (speculative verification) kernel vs the jnp
+    oracle, with ragged per-slot query counts, padding rows and an
+    inactive slot."""
+    from repro.kernels.decode_attention import (
+        paged_verify_attention, reference_paged_verify_attention)
+    ks = jax.random.split(jax.random.key(S * NB + T), 4)
+    q = jax.random.normal(ks[0], (S, T, KV, G, D), jnp.float32)
+    kp = jax.random.normal(ks[1], (NB, bs, KV, D), jnp.float32)
+    vp = jax.random.normal(ks[2], (NB, bs, KV, D), jnp.float32)
+    rng = np.random.default_rng(S + NB + T)
+    tables = np.full((S, MB), -1, np.int32)
+    perm = rng.permutation(NB)
+    start = np.zeros((S,), np.int32)
+    n_tok = np.zeros((S,), np.int32)
+    off = 0
+    for s in range(S):
+        n = int(rng.integers(1, MB + 1))
+        tables[s, :n] = perm[off:off + n]
+        off += n
+        n_tok[s] = int(rng.integers(1, T + 1))   # ragged live counts
+        start[s] = int(rng.integers(0, n * bs - int(n_tok[s]) + 1))
+    start[-1], n_tok[-1] = -1, 0                 # one inactive slot
+    tables = jnp.asarray(tables)
+    start, n_tok = jnp.asarray(start), jnp.asarray(n_tok)
+    out = paged_verify_attention(q, kp, vp, tables, start, n_tok,
+                                 window=window)
+    ref = reference_paged_verify_attention(q, kp, vp, tables, start, n_tok,
+                                           window=window)
+    # compare live rows only (padding rows are documented garbage)
+    for s in range(S):
+        n = int(n_tok[s]) if int(start[s]) >= 0 else 0
+        if n:
+            d = jnp.max(jnp.abs(out[s, :n] - ref[s, :n]))
+            assert float(d) < 2e-5, (s, float(d))
+
+
+def test_paged_verify_attention_t1_matches_single_query_kernel():
+    """T=1 degenerates to the single-query paged kernel exactly."""
+    from repro.kernels.decode_attention import (paged_decode_attention,
+                                                paged_verify_attention)
+    ks = jax.random.split(jax.random.key(3), 3)
+    S, KV, G, NB, bs, MB, D = 3, 2, 2, 6, 8, 3, 32
+    q = jax.random.normal(ks[0], (S, 1, KV, G, D), jnp.float32)
+    kp = jax.random.normal(ks[1], (NB, bs, KV, D), jnp.float32)
+    vp = jax.random.normal(ks[2], (NB, bs, KV, D), jnp.float32)
+    tables = jnp.asarray([[0, 1, -1], [2, -1, -1], [3, 4, 5]], jnp.int32)
+    q_pos = jnp.asarray([9, 4, 20], jnp.int32)
+    a = paged_verify_attention(q, kp, vp, tables, q_pos,
+                               jnp.ones((S,), jnp.int32))
+    b = paged_decode_attention(q[:, 0], kp, vp, tables, q_pos)
+    assert float(jnp.max(jnp.abs(a[:, 0] - b))) < 2e-5
+
+
+def test_paged_verify_attention_causal_among_fresh_tokens():
+    """Query token t must see tokens 0..t of the same round (positional
+    causality) and never later ones: poisoning the pool at positions
+    beyond each query's own position leaves its row unchanged."""
+    from repro.kernels.decode_attention import paged_verify_attention
+    ks = jax.random.split(jax.random.key(5), 3)
+    S, T, KV, G, NB, bs, MB, D = 1, 4, 1, 2, 4, 8, 2, 32
+    q = jax.random.normal(ks[0], (S, T, KV, G, D))
+    kp = jax.random.normal(ks[1], (NB, bs, KV, D))
+    vp = jax.random.normal(ks[2], (NB, bs, KV, D))
+    tables = jnp.asarray([[1, 3]], jnp.int32)
+    start = jnp.asarray([5], jnp.int32)          # queries at 5,6,7,8
+    n_tok = jnp.asarray([T], jnp.int32)
+    out1 = paged_verify_attention(q, kp, vp, tables, start, n_tok)
+    # poison position 8 (block 3, offset 0) — only query t=3 may see it
+    kp2 = kp.at[3, 0].set(1e4)
+    vp2 = vp.at[3, 0].set(-1e4)
+    out2 = paged_verify_attention(q, kp2, vp2, tables, start, n_tok)
+    assert float(jnp.max(jnp.abs(out1[0, :3] - out2[0, :3]))) == 0.0
+    assert float(jnp.max(jnp.abs(out1[0, 3] - out2[0, 3]))) > 1.0
+
+
 def test_paged_decode_attention_ignores_unmapped_and_stale():
     """Poisoning unmapped blocks and positions beyond q_pos must not change
     the output."""
