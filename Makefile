@@ -1,15 +1,30 @@
 # Developer / CI entry points.
 #
-#   make test-fast   fast tier-1 gate: skips @slow end-to-end tests, hard
-#                    timeout so a hung jit can never wedge a pre-merge check
-#   make test        the full suite (slow end-to-end tests included)
-#   make bench       all fast benchmarks (CSV to stdout)
+#   make lint           replint (the repo's JAX/Pallas linter) over the whole
+#                       tree, plus the ruff F-rule baseline when ruff exists
+#   make lint-self-test replint's own fixture suite (each pass proven against
+#                       known-bad/known-good corpora)
+#   make test-fast      fast tier-1 gate: skips @slow end-to-end tests, hard
+#                       timeout so a hung jit can never wedge a pre-merge check
+#   make test           the full suite (slow end-to-end tests included)
+#   make bench          all fast benchmarks (CSV to stdout)
 
 PY       := python
 PYTHONPATH := src
 TIMEOUT  := 900
 
-.PHONY: test-fast test bench
+.PHONY: lint lint-self-test test-fast test bench
+
+lint:
+	PYTHONPATH=$(PYTHONPATH) $(PY) -m repro.tools.lint src tests benchmarks examples
+	@if command -v ruff >/dev/null 2>&1; then \
+		ruff check .; \
+	else \
+		echo "ruff not installed; skipping the F-rule baseline (CI runs it)"; \
+	fi
+
+lint-self-test:
+	PYTHONPATH=$(PYTHONPATH) $(PY) -m pytest -q tests/test_lint.py
 
 test-fast:
 	PYTHONPATH=$(PYTHONPATH) timeout $(TIMEOUT) $(PY) -m pytest -q -m "not slow"

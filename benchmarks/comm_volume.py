@@ -11,8 +11,6 @@ import os
 from typing import List
 
 from repro.configs import get_config
-from repro.configs.base import DiLoCoConfig
-from repro.core import DiLoCoTrainer
 
 
 def rows_for(arch_id: str) -> List[dict]:

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import DiLoCoConfig, ModelConfig, OptimizerConfig
-from repro.core import DDPTrainer, DiLoCoTrainer, drift, run_ddp, run_diloco
+from repro.core import DDPTrainer, DiLoCoTrainer, drift, run_ddp
 from repro.data import PackedDataset, build_tokenizer, synthetic
 from repro.models.layers import apply_norm, embed
 from repro.models.transformer import _run_layers, build_model, init_params

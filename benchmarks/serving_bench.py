@@ -154,7 +154,7 @@ def bench_serving(n: int = 24, slots: int = 8, spec_k: int = 9,
                   train_steps: int = 80) -> dict:
     import jax
     from repro.configs.base import ModelConfig
-    from repro.kernels.decode_attention import pallas_mode
+    from repro.kernels.common import pallas_mode
     from repro.models.transformer import build_model, init_params
     from repro.serving import Engine
 

@@ -130,7 +130,6 @@ LOSS_COMBOS = (
 
 def loss_impact_rows(steps: int = 24, workers: int = 2, h: int = 4):
     import jax
-    import jax.numpy as jnp
     from repro.configs.base import ModelConfig, OptimizerConfig
     from repro.core import DistTrainer
     from repro.models.transformer import build_model, init_params

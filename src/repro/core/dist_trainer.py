@@ -61,7 +61,7 @@ from __future__ import annotations
 import dataclasses
 import time
 import warnings
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -282,7 +282,7 @@ class DistTrainer:
             state, loss, _ = inner_jit(state, data_fn(step))
             # host-side fixed-order mean of the raw per-worker losses —
             # bit-identical to the chunked loop's recording (_host_mean)
-            loss_mean = _host_mean(np.asarray(loss))
+            loss_mean = _host_mean(_fetch(loss))
             if step % record_every == 0:
                 history["step"].append(step)
                 history["loss"].append(loss_mean)

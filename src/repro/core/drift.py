@@ -16,7 +16,7 @@ locally inconsistent".  These diagnostics make that measurable:
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict
+from typing import Callable, Dict
 
 import jax
 import jax.numpy as jnp

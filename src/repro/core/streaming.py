@@ -15,12 +15,11 @@ last, mirroring the reference's schedule).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import DiLoCoConfig, OptimizerConfig
 from repro.core.diloco import DiLoCoState, DiLoCoTrainer
 from repro.core import outer_opt
 

@@ -13,7 +13,6 @@ from typing import Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.data.pipeline import PackedDataset
 from repro.models.transformer import ModelAPI

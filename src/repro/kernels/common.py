@@ -1,0 +1,41 @@
+"""Shared interpret-mode resolution for every Pallas kernel package.
+
+One override point for the whole kernel suite: ``interpret`` defaults to
+*backend-selected* — the Pallas interpreter is only used on CPU hosts
+(where Mosaic cannot compile); on TPU the kernels compile.
+``REPRO_PALLAS_INTERPRET=0|1`` force-overrides the selection, and
+``pallas_mode()`` reports the resolved mode so benchmarks can record
+which path actually ran.
+
+Every ``kernels/<name>/ops.py`` must resolve ``interpret`` through this
+module (enforced by the ``kernel-contract`` lint pass in
+``repro.tools.lint``) instead of keeping a private copy or hardcoding a
+default — a hardcoded ``interpret=True`` silently runs the Python-speed
+interpreter on TPU.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+__all__ = ["default_interpret", "pallas_mode", "resolve_interpret"]
+
+
+def default_interpret() -> bool:
+    """Interpret only where Mosaic can't compile (CPU), unless overridden."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() == "cpu"
+
+
+def pallas_mode() -> str:
+    """'interpret' or 'compiled' — what the kernels will actually run as."""
+    return "interpret" if default_interpret() else "compiled"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """``None`` -> the backend-selected default; explicit bools pass through."""
+    return default_interpret() if interpret is None else bool(interpret)

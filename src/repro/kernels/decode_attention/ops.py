@@ -1,35 +1,29 @@
 """Jitted wrappers for the decode attention Pallas kernels.
 
-``interpret`` defaults to *backend-selected*: the Pallas interpreter is only
-used on CPU hosts (where Mosaic cannot compile); on TPU the kernels compile.
+``interpret`` defaults to *backend-selected* via
+``repro.kernels.common``: the Pallas interpreter is only used on CPU
+hosts (where Mosaic cannot compile); on TPU the kernels compile.
 ``REPRO_PALLAS_INTERPRET=0|1`` force-overrides the selection, and
-``pallas_mode()`` reports the resolved mode so benchmarks can record which
-path actually ran.
+``pallas_mode()`` reports the resolved mode so benchmarks can record
+which path actually ran.  (``default_interpret``/``pallas_mode`` are
+re-exported here for backward compatibility — ``repro.kernels.common``
+is the canonical home.)
 """
 from __future__ import annotations
 
 import functools
-import os
 from typing import Optional
 
 import jax
 
+from repro.kernels.common import (default_interpret, pallas_mode,
+                                  resolve_interpret)
 from repro.kernels.decode_attention.kernel import (
     decode_attention_fwd, paged_decode_attention_fwd,
     paged_verify_attention_fwd)
 
-
-def default_interpret() -> bool:
-    """Interpret only where Mosaic can't compile (CPU), unless overridden."""
-    env = os.environ.get("REPRO_PALLAS_INTERPRET")
-    if env is not None:
-        return env not in ("0", "false", "False")
-    return jax.default_backend() == "cpu"
-
-
-def pallas_mode() -> str:
-    """'interpret' or 'compiled' — what the kernels will actually run as."""
-    return "interpret" if default_interpret() else "compiled"
+__all__ = ["decode_attention", "paged_decode_attention",
+           "paged_verify_attention", "default_interpret", "pallas_mode"]
 
 
 @functools.partial(jax.jit, static_argnames=("window", "bk", "interpret"))
@@ -40,8 +34,7 @@ def _decode_attention(q, k, v, pos, q_pos, *, window, bk, interpret):
 
 def decode_attention(q, k, v, pos, q_pos, *, window: int = 0, bk: int = 256,
                      interpret: Optional[bool] = None):
-    if interpret is None:
-        interpret = default_interpret()
+    interpret = resolve_interpret(interpret)
     return _decode_attention(q, k, v, pos, q_pos, window=window, bk=bk,
                              interpret=interpret)
 
@@ -57,8 +50,7 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, q_pos, *,
                            window: int = 0,
                            interpret: Optional[bool] = None):
     """Block-table-indexed decode attention (see kernel.py for shapes)."""
-    if interpret is None:
-        interpret = default_interpret()
+    interpret = resolve_interpret(interpret)
     return _paged_decode_attention(q, k_pool, v_pool, block_tables, q_pos,
                                    window=window, interpret=interpret)
 
@@ -76,8 +68,7 @@ def paged_verify_attention(q, k_pool, v_pool, block_tables, start_pos,
                            interpret: Optional[bool] = None):
     """Multi-query-per-slot paged decode attention — the speculative-
     verification variant (see kernel.py for shapes)."""
-    if interpret is None:
-        interpret = default_interpret()
+    interpret = resolve_interpret(interpret)
     return _paged_verify_attention(q, k_pool, v_pool, block_tables,
                                    start_pos, n_tokens, window=window,
                                    interpret=interpret)

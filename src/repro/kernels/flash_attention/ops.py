@@ -1,8 +1,9 @@
 """Jitted public wrapper around the flash attention Pallas kernel.
 
-On TPU hardware set ``interpret=False``; on this CPU container the kernel
-body executes in interpret mode (same arithmetic, Python-speed) which is what
-the correctness sweeps use.
+``interpret`` defaults to *backend-selected* via ``repro.kernels.common``:
+the kernel body runs under the Pallas interpreter on CPU hosts (same
+arithmetic, Python-speed — what the correctness sweeps use) and compiles
+through Mosaic on TPU.  ``REPRO_PALLAS_INTERPRET=0|1`` force-overrides.
 """
 from __future__ import annotations
 
@@ -11,14 +12,21 @@ from typing import Optional
 
 import jax
 
+from repro.kernels.common import resolve_interpret
 from repro.kernels.flash_attention.kernel import flash_attention_fwd
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
                                              "interpret"))
-def flash_attention(q, k, v, *, causal: bool = True,
-                    window: Optional[int] = None, bq: int = 128,
-                    bk: int = 128, interpret: bool = True):
-    """q: (B, H, Sq, D); k/v: (B, KV, Sk, D) grouped-query.  See kernel.py."""
+def _flash_attention(q, k, v, *, causal, window, bq, bk, interpret):
     return flash_attention_fwd(q, k, v, causal=causal, window=window,
                                bq=bq, bk=bk, interpret=interpret)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, bq: int = 128,
+                    bk: int = 128, interpret: Optional[bool] = None):
+    """q: (B, H, Sq, D); k/v: (B, KV, Sk, D) grouped-query.  See kernel.py."""
+    interpret = resolve_interpret(interpret)
+    return _flash_attention(q, k, v, causal=causal, window=window,
+                            bq=bq, bk=bk, interpret=interpret)

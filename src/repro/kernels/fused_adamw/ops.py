@@ -1,8 +1,8 @@
 """Jitted wrapper for the fused AdamW kernel: arbitrary leaf shapes in,
 flattened LANE-padded (1, M) kernel views inside.
 
-``interpret`` defaults to *backend-selected* exactly like
-``decode_attention/ops.py``: interpret on CPU hosts (Mosaic cannot
+``interpret`` defaults to *backend-selected* via
+``repro.kernels.common``: interpret on CPU hosts (Mosaic cannot
 compile), compiled on TPU, force-overridable via
 ``REPRO_PALLAS_INTERPRET=0|1``.
 
@@ -20,7 +20,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.decode_attention.ops import default_interpret, pallas_mode
+from repro.kernels.common import (default_interpret, pallas_mode,
+                                  resolve_interpret)
 from repro.kernels.fused_adamw.kernel import LANE, fused_adamw_fwd
 from repro.kernels.fused_adamw.ref import reference_fused_adamw
 
@@ -67,7 +68,6 @@ def fused_adamw_update(p, g, m, v, lr, bc1, bc2, *, b1: float, b2: float,
     unfused ``repro.optim.adamw`` math, agreeing to within ~1-2 ulp of
     FMA-contraction noise (see ``ref.py``).
     """
-    if interpret is None:
-        interpret = default_interpret()
+    interpret = resolve_interpret(interpret)
     return _fused_update(p, g, m, v, lr, bc1, bc2, b1=b1, b2=b2, eps=eps,
                          wd=wd, interpret=interpret)

@@ -1,8 +1,8 @@
 """Jitted wrappers for the quantize kernels: arbitrary leaf shapes in,
 flattened LANE-padded (K, M) kernel views inside.
 
-``interpret`` defaults to *backend-selected* exactly like
-``decode_attention/ops.py``: interpret on CPU hosts (Mosaic cannot
+``interpret`` defaults to *backend-selected* via
+``repro.kernels.common``: interpret on CPU hosts (Mosaic cannot
 compile), compiled on TPU, force-overridable via
 ``REPRO_PALLAS_INTERPRET=0|1``.
 """
@@ -14,7 +14,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.decode_attention.ops import default_interpret, pallas_mode
+from repro.kernels.common import (default_interpret, pallas_mode,
+                                  resolve_interpret)
 from repro.kernels.quantize.kernel import (LANE, dequantize_fwd,
                                            quantize_ef_fwd)
 
@@ -55,8 +56,7 @@ def quantize_ef(x, residual=None, *, interpret: Optional[bool] = None):
     None for plain quantization).  Returns ``(q, new_residual, scale)``
     shaped like the jnp oracle (``ref.reference_quantize_ef``).
     """
-    if interpret is None:
-        interpret = default_interpret()
+    interpret = resolve_interpret(interpret)
     return _quantize_ef(x, residual, interpret=interpret)
 
 
@@ -70,6 +70,5 @@ def _dequantize(q, scale, *, interpret: bool):
 
 def dequantize(q, scale, *, interpret: Optional[bool] = None):
     """int8 (K, ...) payload x per-row scale -> f32 delta."""
-    if interpret is None:
-        interpret = default_interpret()
+    interpret = resolve_interpret(interpret)
     return _dequantize(q, scale, interpret=interpret)

@@ -13,7 +13,6 @@ full remat; we report both.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict
 
 from repro.configs.base import ModelConfig, ShapeConfig

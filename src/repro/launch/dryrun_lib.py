@@ -10,7 +10,7 @@ from __future__ import annotations
 import dataclasses
 import re
 import time
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,10 +24,10 @@ from repro.configs.registry import (decode_cache_capacity, get_config,
 from repro.launch import steps as steps_mod
 from repro.launch.analytic import bytes_per_device, flops_per_device
 from repro.launch.hlo_analysis import weighted_collective_stats
-from repro.launch.mesh import (DCN_BW, HBM_BW, HBM_PER_CHIP, ICI_BW,
+from repro.launch.mesh import (DCN_BW, HBM_BW, ICI_BW,
                                PEAK_FLOPS_BF16, make_production_mesh)
 from repro.launch.state import (abstract_diloco_state, abstract_train_state,
-                                add_leading, decode_cache_names,
+                                decode_cache_names,
                                 shardings_from_names, tp_kv_repeat)
 from repro.models.sharding import sharding_ctx, spec_for
 from repro.models.transformer import build_model

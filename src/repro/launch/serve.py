@@ -69,6 +69,9 @@ def main(argv=None):
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; >0 samples at this temperature")
     ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="PRNG seed for fresh-init params "
+                         "(ignored once --ckpt loads weights)")
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=512)
     ap.add_argument("--spec-k", type=int, default=0,
@@ -96,7 +99,7 @@ def main(argv=None):
     if cfg.vocab_size != tok.vocab_size:
         print(f"# warning: checkpoint vocab {cfg.vocab_size} != pipeline "
               f"tokenizer vocab {tok.vocab_size}", file=sys.stderr)
-    params, _ = init_params(cfg, jax.random.key(0))
+    params, _ = init_params(cfg, jax.random.key(args.seed))
     if args.ckpt:
         from repro.checkpoint import load_pytree
         params = load_pytree(params, args.ckpt)
@@ -142,7 +145,7 @@ def main(argv=None):
                   "latency are not modeled", file=sys.stderr)
 
     if args.report and stats is not None:
-        from repro.kernels.decode_attention import pallas_mode
+        from repro.kernels.common import pallas_mode
         lats = [r.finish_time - r.arrival for _, r in reqs
                 if r.finish_time is not None]
         print(f"# requests={len(reqs)} generated={stats['generated']} "

@@ -6,11 +6,11 @@ the dry-run never allocates 100B-parameter models on the CPU host.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
 from repro.configs.base import ModelConfig, OptimizerConfig, DiLoCoConfig
 from repro.models.sharding import spec_for
@@ -114,8 +114,6 @@ def abstract_diloco_state(cfg: ModelConfig, opt_cfg: OptimizerConfig,
                           dcfg: DiLoCoConfig) -> Tuple[Any, Any]:
     """(DiLoCoState SDS, logical names) — worker dim stacked over ``pod``."""
     from repro.core.diloco import DiLoCoState, DiLoCoTrainer
-    from repro.models.transformer import init_lm
-    from repro.models.layers import split_logical
 
     params_sds, param_names = abstract_params(cfg)
     trainer = DiLoCoTrainer(loss_fn=lambda p, b: (jnp.zeros(()), {}),

@@ -19,12 +19,11 @@ from __future__ import annotations
 from typing import Callable, Tuple
 
 import jax
-import jax.numpy as jnp
 
-from repro.configs.base import DiLoCoConfig, ModelConfig, OptimizerConfig
+from repro.configs.base import DiLoCoConfig, OptimizerConfig
 from repro.core.ddp import DDPState
 from repro.core.diloco import DiLoCoTrainer
-from repro.models.transformer import ModelAPI, build_model
+from repro.models.transformer import ModelAPI
 from repro.optim import apply_updates, nanochat_optimizer
 
 

@@ -34,7 +34,6 @@ import os
 from typing import Dict, Optional, Sequence
 
 import jax
-import numpy as np
 
 
 def build_pipeline(vocab_budget: int = 512, seq_len: int = 128,

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.layers import Px, apply_rope, param
+from repro.models.layers import apply_rope, param
 from repro.models.sharding import logical_constraint
 
 NEG_INF = -1e30

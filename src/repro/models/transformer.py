@@ -232,7 +232,6 @@ def _block_fwd_selfattn_only(p, h, cfg, positions, window, impl):
 def encode(params, frames, cfg: ModelConfig):
     """Bidirectional encoder over (stubbed) frame embeddings (B,S,d)."""
     h = frames.astype(cfg.compute_dtype)
-    positions = jnp.arange(h.shape[1])
 
     def body(hh, lp):
         x = apply_norm(lp["ln1"], hh, cfg)

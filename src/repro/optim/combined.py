@@ -5,7 +5,7 @@ DiLoCo worker ("Inner optimizers: AdamW and Muon (default in nanochat)").
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Union
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

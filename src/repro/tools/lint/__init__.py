@@ -1,0 +1,9 @@
+"""replint — AST-based static analysis for this repo's JAX/Pallas
+correctness idioms.  Run as ``python -m repro.tools.lint [paths]``."""
+from repro.tools.lint.core import (FileContext, LintError, LintPass,
+                                   Violation, check_file, default_passes,
+                                   lint_file, run_lint, select_passes)
+
+__all__ = ["FileContext", "LintError", "LintPass", "Violation",
+           "check_file", "default_passes", "lint_file", "run_lint",
+           "select_passes"]

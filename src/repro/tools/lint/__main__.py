@@ -1,0 +1,50 @@
+"""CLI: ``python -m repro.tools.lint [paths] [--json] [--select a,b]``.
+
+Exit codes: 0 clean, 1 violations found, 2 usage/parse trouble.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from repro.tools.lint.core import LintError, default_passes, run_lint
+from repro.tools.lint.reporter import render_human, render_json
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.tools.lint",
+        description="replint: JAX/Pallas correctness linter for this repo")
+    ap.add_argument("paths", nargs="*", default=["src", "tests"],
+                    help="files or directories to lint (default: src tests)")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit a JSON report instead of human-readable text")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated pass names to run (default: all)")
+    ap.add_argument("--list-passes", action="store_true",
+                    help="list available passes and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_passes:
+        for p in default_passes():
+            print(f"{p.name:24s} {p.description}")
+        return 0
+
+    select = ([s.strip() for s in args.select.split(",") if s.strip()]
+              if args.select else None)
+    try:
+        violations, files, errors = run_lint(args.paths, select=select)
+    except LintError as e:
+        print(f"replint: {e}", file=sys.stderr)
+        return 2
+    report = (render_json if args.as_json else render_human)(
+        violations, files, errors)
+    print(report)
+    if errors:
+        return 2
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

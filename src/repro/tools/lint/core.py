@@ -1,0 +1,214 @@
+"""replint core: pass registry, file walking, suppression, orchestration.
+
+An AST-based static-analysis framework for the repo's JAX/Pallas
+correctness idioms.  The contracts the test suite guards *dynamically*
+(chunked-vs-per-step bit-exactness, kernel-vs-oracle, codec round-trips)
+all have a static shadow — an edit pattern that breaks them — and each
+lint pass rejects one such pattern at review time:
+
+* ``donate-safety``        — a value passed to a donating jit and read again
+* ``retrace-hazard``       — per-call retraces / non-hashable static args
+* ``prng-discipline``      — PRNG key reuse and literal keys in library code
+* ``host-sync-in-hot-path``— device->host syncs inside the training chunk
+                             loop or the serving step loop
+* ``kernel-contract``      — kernels/<name>/ packaging: ops/kernel/ref files,
+                             shared interpret resolution, oracle-backed tests
+
+Suppression syntax (both spellings, comma-separated pass names, ``all``):
+
+* ``# replint: disable=<pass>[,<pass>]``       — this line only
+* ``# replint: disable-file=<pass>[,<pass>]``  — the whole file
+
+Fixture corpora live in directories named ``lint_fixtures`` — they exist to
+*contain* violations, so the default walker skips them; the self-tests lint
+them explicitly via ``lint_file``/``check_file``.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set
+
+# Directory names the default walker never descends into.
+SKIP_DIRS = {"__pycache__", ".git", ".github", "lint_fixtures",
+             ".pytest_cache", ".hypothesis", "build", "dist"}
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*replint:\s*(disable|disable-file)=([A-Za-z0-9_,-]+)")
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Violation:
+    """One finding.  ``line`` is 1-indexed in ``path``."""
+    path: str
+    line: int
+    col: int
+    pass_name: str
+    message: str
+
+    def format(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: "
+                f"[{self.pass_name}] {self.message}")
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+class LintError(Exception):
+    """A file could not be linted (syntax error, unreadable)."""
+
+
+@dataclasses.dataclass
+class FileContext:
+    """Parsed view of one source file, shared by every per-file pass."""
+    path: str
+    src: str
+    tree: ast.Module
+    # line -> set of pass names suppressed on that line ('all' wildcard kept)
+    line_suppressions: Dict[int, Set[str]]
+    file_suppressions: Set[str]
+
+    @classmethod
+    def parse(cls, path: str, src: Optional[str] = None) -> "FileContext":
+        if src is None:
+            src = Path(path).read_text()
+        try:
+            tree = ast.parse(src, filename=path)
+        except SyntaxError as e:
+            raise LintError(f"{path}: syntax error at line {e.lineno}: "
+                            f"{e.msg}") from e
+        line_sup: Dict[int, Set[str]] = {}
+        file_sup: Set[str] = set()
+        for i, line in enumerate(src.splitlines(), start=1):
+            for kind, names in _SUPPRESS_RE.findall(line):
+                parsed = {n.strip() for n in names.split(",") if n.strip()}
+                if kind == "disable-file":
+                    file_sup |= parsed
+                else:
+                    line_sup.setdefault(i, set()).update(parsed)
+        return cls(path=path, src=src, tree=tree,
+                   line_suppressions=line_sup, file_suppressions=file_sup)
+
+    def suppressed(self, v: Violation) -> bool:
+        if {"all", v.pass_name} & self.file_suppressions:
+            return True
+        on_line = self.line_suppressions.get(v.line, set())
+        return bool({"all", v.pass_name} & on_line)
+
+
+class LintPass:
+    """Base class.  Per-file passes implement ``check_file``; repo-level
+    passes (kernel-contract) implement ``check_project`` over the whole
+    file set.  A pass may implement both."""
+
+    name = "base"
+    description = ""
+
+    def check_file(self, ctx: FileContext) -> List[Violation]:
+        return []
+
+    def check_project(self, contexts: Sequence[FileContext],
+                      root: Optional[Path]) -> List[Violation]:
+        return []
+
+
+def find_repo_root(start: Path) -> Optional[Path]:
+    """Nearest ancestor carrying a pyproject.toml (or .git)."""
+    p = start.resolve()
+    if p.is_file():
+        p = p.parent
+    for cand in (p, *p.parents):
+        if (cand / "pyproject.toml").exists() or (cand / ".git").exists():
+            return cand
+    return None
+
+
+def iter_python_files(paths: Iterable[str]) -> List[Path]:
+    """Expand files/directories into a sorted, deduplicated .py file list,
+    skipping ``SKIP_DIRS`` (fixture corpora included — they exist to hold
+    violations)."""
+    out: Set[Path] = set()
+    for p in paths:
+        path = Path(p)
+        if path.is_file():
+            if path.suffix == ".py":
+                out.add(path)
+        elif path.is_dir():
+            for f in path.rglob("*.py"):
+                if not any(part in SKIP_DIRS for part in f.parts):
+                    out.add(f)
+        else:
+            raise LintError(f"no such file or directory: {p}")
+    return sorted(out)
+
+
+def default_passes() -> List[LintPass]:
+    from repro.tools.lint.passes import build_passes
+    return build_passes()
+
+
+def select_passes(names: Optional[Sequence[str]]) -> List[LintPass]:
+    passes = default_passes()
+    if not names:
+        return passes
+    by_name = {p.name: p for p in passes}
+    unknown = [n for n in names if n not in by_name]
+    if unknown:
+        raise LintError(f"unknown pass(es): {', '.join(unknown)}; "
+                        f"available: {', '.join(sorted(by_name))}")
+    return [by_name[n] for n in names]
+
+
+def check_file(ctx: FileContext,
+               passes: Optional[Sequence[LintPass]] = None
+               ) -> List[Violation]:
+    """Run per-file passes over one parsed file (no project-level passes,
+    no suppression filtering — callers filter via ``ctx.suppressed``)."""
+    out: List[Violation] = []
+    for p in passes if passes is not None else default_passes():
+        out.extend(p.check_file(ctx))
+    return out
+
+
+def lint_file(path: str, passes: Optional[Sequence[LintPass]] = None,
+              src: Optional[str] = None) -> List[Violation]:
+    """Lint one file (per-file passes only), honoring suppressions."""
+    ctx = FileContext.parse(path, src)
+    return sorted((v for v in check_file(ctx, passes)
+                   if not ctx.suppressed(v)),
+                  key=lambda v: (v.path, v.line, v.col, v.pass_name))
+
+
+def run_lint(paths: Sequence[str],
+             select: Optional[Sequence[str]] = None,
+             root: Optional[Path] = None):
+    """Lint ``paths`` with the selected passes (default: all).
+
+    Returns ``(violations, files, errors)`` where ``errors`` is a list of
+    human-readable parse-failure strings (a parse failure never aborts the
+    whole run)."""
+    passes = select_passes(select)
+    files = iter_python_files(paths)
+    contexts: List[FileContext] = []
+    errors: List[str] = []
+    for f in files:
+        try:
+            contexts.append(FileContext.parse(str(f)))
+        except LintError as e:
+            errors.append(str(e))
+    violations: List[Violation] = []
+    for ctx in contexts:
+        violations.extend(v for v in check_file(ctx, passes)
+                          if not ctx.suppressed(v))
+    if root is None and files:
+        root = find_repo_root(files[0])
+    by_path = {ctx.path: ctx for ctx in contexts}
+    for p in passes:
+        for v in p.check_project(contexts, root):
+            ctx = by_path.get(v.path)
+            if ctx is None or not ctx.suppressed(v):
+                violations.append(v)
+    violations.sort(key=lambda v: (v.path, v.line, v.col, v.pass_name))
+    return violations, [str(f) for f in files], errors

@@ -1,0 +1,17 @@
+"""The five repo-specific passes.  ``build_passes`` is the registry the
+core consults; order here is the report order for same-line findings."""
+from __future__ import annotations
+
+from typing import List
+
+from repro.tools.lint.core import LintPass
+
+
+def build_passes() -> List[LintPass]:
+    from repro.tools.lint.passes.donate_safety import DonateSafetyPass
+    from repro.tools.lint.passes.host_sync import HostSyncPass
+    from repro.tools.lint.passes.kernel_contract import KernelContractPass
+    from repro.tools.lint.passes.prng_discipline import PrngDisciplinePass
+    from repro.tools.lint.passes.retrace_hazard import RetraceHazardPass
+    return [DonateSafetyPass(), RetraceHazardPass(), PrngDisciplinePass(),
+            HostSyncPass(), KernelContractPass()]

@@ -1,0 +1,223 @@
+"""Shared AST plumbing for the passes: dotted-name resolution, import
+tables, and the jit-callable registry (who is a ``jax.jit`` product, what
+does it donate, which args are static)."""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """'jax.random.normal' for nested Attributes over a Name; 'self.x' for
+    self-attributes; None for anything unresolvable (calls, subscripts)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def import_table(tree: ast.Module) -> Dict[str, str]:
+    """local alias -> full dotted module/object path, from top-level and
+    nested import statements."""
+    table: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                table[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                if a.name != "*":
+                    table[a.asname or a.name] = f"{node.module}.{a.name}"
+    return table
+
+
+def resolve_dotted(name: str, imports: Dict[str, str]) -> str:
+    """Expand the leading alias of a dotted name through the import table:
+    ``jr.normal`` -> ``jax.random.normal`` under ``import jax.random as jr``."""
+    head, _, rest = name.partition(".")
+    base = imports.get(head, head)
+    return f"{base}.{rest}" if rest else base
+
+
+def const_int_elts(node: ast.AST) -> Optional[Set[int]]:
+    """The int elements of a literal tuple/list, or None if not literal.
+    An ``X if c else ()`` conditional (the repo's donate-toggle idiom)
+    resolves to whichever branch is a non-empty literal."""
+    if isinstance(node, ast.IfExp):
+        for branch in (node.body, node.orelse):
+            got = const_int_elts(branch)
+            if got:
+                return got
+        return set()
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out: Set[int] = set()
+        for e in node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, int):
+                out.add(e.value)
+            else:
+                return None
+        return out
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return {node.value}
+    return None
+
+
+def const_str_elts(node: ast.AST) -> Optional[Set[str]]:
+    """Same, for string tuples (static_argnames/donate_argnames)."""
+    if isinstance(node, ast.IfExp):
+        for branch in (node.body, node.orelse):
+            got = const_str_elts(branch)
+            if got:
+                return got
+        return set()
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out: Set[str] = set()
+        for e in node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                out.add(e.value)
+            else:
+                return None
+        return out
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return {node.value}
+    return None
+
+
+@dataclasses.dataclass
+class JitInfo:
+    """One ``<target> = jax.jit(...)`` product."""
+    target: str                 # 'name' or 'self.attr'
+    donate_argnums: Set[int]
+    donate_argnames: Set[str]
+    static_argnums: Set[int]
+    static_argnames: Set[str]
+    line: int
+
+
+def _is_jax_jit(call: ast.Call, imports: Dict[str, str]) -> bool:
+    name = dotted_name(call.func)
+    if name is None:
+        return False
+    return resolve_dotted(name, imports) in ("jax.jit", "jax.api.jit")
+
+
+def jit_info_from_call(call: ast.Call, target: str,
+                       imports: Dict[str, str]) -> Optional[JitInfo]:
+    if not _is_jax_jit(call, imports):
+        return None
+    info = JitInfo(target=target, donate_argnums=set(), donate_argnames=set(),
+                   static_argnums=set(), static_argnames=set(),
+                   line=call.lineno)
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            info.donate_argnums = const_int_elts(kw.value) or set()
+        elif kw.arg == "donate_argnames":
+            info.donate_argnames = const_str_elts(kw.value) or set()
+        elif kw.arg == "static_argnums":
+            info.static_argnums = const_int_elts(kw.value) or set()
+        elif kw.arg == "static_argnames":
+            info.static_argnames = const_str_elts(kw.value) or set()
+    return info
+
+
+@dataclasses.dataclass
+class JitRegistry:
+    """Module-wide map of jitted callables.
+
+    * ``by_name``: bare names bound to a jit product anywhere in the module
+      (module level or function-local — call sites are matched by name, so
+      a local registry entry is visible to the whole module; in this
+      codebase jit locals never shadow an unrelated same-name callable).
+    * ``by_attr``: ``(class_name, attr)`` for ``self.<attr> = jax.jit(...)``
+      made in any method of the class.
+    """
+    by_name: Dict[str, JitInfo]
+    by_attr: Dict[Tuple[str, str], JitInfo]
+
+    @classmethod
+    def scan(cls, tree: ast.Module, imports: Dict[str, str]) -> "JitRegistry":
+        by_name: Dict[str, JitInfo] = {}
+        by_attr: Dict[Tuple[str, str], JitInfo] = {}
+
+        def visit(node: ast.AST, cls_name: Optional[str]) -> None:
+            for child in ast.iter_child_nodes(node):
+                inner_cls = cls_name
+                if isinstance(child, ast.ClassDef):
+                    inner_cls = child.name
+                if isinstance(child, ast.Assign) and \
+                        isinstance(child.value, ast.Call):
+                    for tgt in child.targets:
+                        tname = dotted_name(tgt)
+                        if tname is None:
+                            continue
+                        info = jit_info_from_call(child.value, tname, imports)
+                        if info is None:
+                            continue
+                        if tname.startswith("self.") and cls_name:
+                            by_attr[(cls_name, tname[5:])] = info
+                        elif "." not in tname:
+                            by_name[tname] = info
+                visit(child, inner_cls)
+
+        visit(tree, None)
+        return cls(by_name=by_name, by_attr=by_attr)
+
+    def lookup(self, call: ast.Call,
+               cls_name: Optional[str]) -> Optional[JitInfo]:
+        name = dotted_name(call.func)
+        if name is None:
+            return None
+        if name.startswith("self.") and cls_name:
+            return self.by_attr.get((cls_name, name[5:]))
+        if "." not in name:
+            return self.by_name.get(name)
+        return None
+
+
+def walk_with_parents(tree: ast.AST
+                      ) -> Iterator[Tuple[ast.AST, List[ast.AST]]]:
+    """Yield ``(node, ancestors)`` (outermost first) for every node."""
+    stack: List[Tuple[ast.AST, List[ast.AST]]] = [(tree, [])]
+    while stack:
+        node, parents = stack.pop()
+        yield node, parents
+        child_parents = parents + [node]
+        for child in ast.iter_child_nodes(node):
+            stack.append((child, child_parents))
+
+
+def functions_with_class(tree: ast.Module
+                         ) -> Iterator[Tuple[ast.FunctionDef, Optional[str]]]:
+    """Every (async) function def with its enclosing class name (innermost),
+    including nested functions."""
+    for node, parents in walk_with_parents(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            cls_name = None
+            for p in reversed(parents):
+                if isinstance(p, ast.ClassDef):
+                    cls_name = p.name
+                    break
+                if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    continue
+            yield node, cls_name
+
+
+def flatten_targets(target: ast.AST) -> List[str]:
+    """Assignment-target names: ``a, (b, self.c) = ...`` -> [a, b, self.c]."""
+    out: List[str] = []
+    if isinstance(target, (ast.Tuple, ast.List)):
+        for e in target.elts:
+            out.extend(flatten_targets(e))
+    elif isinstance(target, ast.Starred):
+        out.extend(flatten_targets(target.value))
+    else:
+        name = dotted_name(target)
+        if name is not None:
+            out.append(name)
+    return out

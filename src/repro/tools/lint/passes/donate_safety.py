@@ -1,0 +1,123 @@
+"""donate-safety: a value passed to a donate-marked jit callable must not
+be read again in the same scope.
+
+Donation invalidates the caller's buffer, so the only safe idioms after
+``f = jax.jit(g, donate_argnums=(0,))`` are
+
+* rebind in the same statement: ``state, aux = f(state, x)``
+* never touch the donated name again (tail call / return).
+
+The pass registers every ``<name> = jax.jit(..., donate_argnums=...)`` and
+``self.<attr> = jax.jit(...)`` product (the ``(0,) if donate else ()``
+toggle resolves to the donating branch), then checks each call site: a
+donated argument that is a plain name or ``self.<attr>`` must either be
+rebound by the enclosing statement or have no textually-later read before
+its next rebind.
+
+Known limitation (documented, not detected): a read at the *top* of a loop
+body whose donating call sits *below* it is a runtime use-after-donate but
+textually precedes the call.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Tuple
+
+from repro.tools.lint.core import FileContext, LintPass, Violation
+from repro.tools.lint.passes import _astutil as A
+
+
+def _stmt_of(call: ast.Call, parents: List[ast.AST]) -> Optional[ast.stmt]:
+    for p in reversed(parents):
+        if isinstance(p, ast.stmt):
+            return p
+    return None
+
+
+def _occurrences(fn: ast.AST) -> List[Tuple[int, int, str, bool]]:
+    """(line, col, dotted_key, is_store) for every maximal Name/Attribute
+    expression in ``fn`` (nested defs included — a closure read of a donated
+    buffer is still a read)."""
+    out: List[Tuple[int, int, str, bool]] = []
+    for node, parents in A.walk_with_parents(fn):
+        if isinstance(node, (ast.Name, ast.Attribute)):
+            if parents and isinstance(parents[-1], ast.Attribute):
+                continue  # not maximal: covered by the outer attribute
+            key = A.dotted_name(node)
+            if key is None:
+                continue
+            is_store = isinstance(getattr(node, "ctx", None),
+                                  (ast.Store, ast.Del))
+            out.append((node.lineno, node.col_offset, key, is_store))
+    out.sort()
+    return out
+
+
+class DonateSafetyPass(LintPass):
+    name = "donate-safety"
+    description = ("value passed to a donate-marked jit callable and read "
+                   "again in the same scope")
+
+    def check_file(self, ctx: FileContext) -> List[Violation]:
+        imports = A.import_table(ctx.tree)
+        registry = A.JitRegistry.scan(ctx.tree, imports)
+        if not any(i.donate_argnums or i.donate_argnames
+                   for i in (*registry.by_name.values(),
+                             *registry.by_attr.values())):
+            return []
+        out: List[Violation] = []
+        for fn, cls_name in A.functions_with_class(ctx.tree):
+            occ = None  # computed lazily, once per function
+            for node, parents in A.walk_with_parents(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                info = registry.lookup(node, cls_name)
+                if info is None or not (info.donate_argnums
+                                        or info.donate_argnames):
+                    continue
+                donated: List[Tuple[ast.expr, str]] = []
+                for i, arg in enumerate(node.args):
+                    if i in info.donate_argnums:
+                        key = A.dotted_name(arg)
+                        if key is not None:
+                            donated.append((arg, key))
+                for kw in node.keywords:
+                    if kw.arg in info.donate_argnames:
+                        key = A.dotted_name(kw.value)
+                        if key is not None:
+                            donated.append((kw.value, key))
+                if not donated:
+                    continue
+                stmt = _stmt_of(node, parents)
+                rebound: List[str] = []
+                if isinstance(stmt, ast.Assign):
+                    for t in stmt.targets:
+                        rebound.extend(A.flatten_targets(t))
+                elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)) \
+                        and stmt.target is not None:
+                    rebound.extend(A.flatten_targets(stmt.target))
+                end = (getattr(stmt, "end_lineno", node.lineno) or node.lineno,
+                       getattr(stmt, "end_col_offset", 0) or 0)
+                for arg, key in donated:
+                    if key in rebound:
+                        continue
+                    if occ is None:
+                        occ = _occurrences(fn)
+                    for line, col, k, is_store in occ:
+                        if (line, col) <= end:
+                            continue
+                        if k != key and not k.startswith(key + "."):
+                            continue
+                        if is_store:
+                            break  # rebound before any read: safe
+                        out.append(Violation(
+                            path=ctx.path, line=line, col=col,
+                            pass_name=self.name,
+                            message=(f"'{key}' was donated to "
+                                     f"'{info.target}' at line "
+                                     f"{node.lineno} and is read again "
+                                     f"here; its buffer is invalidated — "
+                                     f"rebind the result or copy before "
+                                     f"donating")))
+                        break
+        return out

@@ -1,0 +1,234 @@
+"""host-sync-in-hot-path: device->host synchronization inside the training
+chunk loop or the serving step loop.
+
+The repo's throughput story is "one fetch per chunk" (``dist_trainer``'s
+module-level ``_fetch``) and "batched fetches per engine step".  Any stray
+``.item()``, ``float()``, ``np.asarray``, ``jax.device_get`` or
+``block_until_ready`` on a device value inside those loops serializes the
+dispatch pipeline.
+
+This is a *project* pass: it builds a heuristic call graph over the linted
+file set, BFS-es from the hot roots —
+
+    DistTrainer.run / DistTrainer._run_per_step
+    Engine.run / Engine._run_spec
+
+— and flags, inside any reachable function:
+
+* ``.item()`` / ``.tolist()`` / ``.block_until_ready()`` calls;
+* ``np.asarray`` / ``np.array`` / ``jax.device_get`` /
+  ``jax.block_until_ready`` / ``float`` / ``int`` applied to a value
+  produced by a registered jit callable (directly or via one assignment
+  hop).
+
+Allowlist: any callee literally named ``_fetch`` — that is the documented
+once-per-chunk fetch point; values routed through it count as host-side.
+Nested function bodies are skipped (they are usually jit-traced closures,
+where these ops are traced, not synced).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.tools.lint.core import FileContext, LintPass, Violation
+from repro.tools.lint.passes import _astutil as A
+
+HOT_ROOTS = {("DistTrainer", "run"), ("DistTrainer", "_run_per_step"),
+             ("Engine", "run"), ("Engine", "_run_spec")}
+
+_SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+_SYNC_FUNCS = {"numpy.asarray", "numpy.array", "jax.device_get",
+               "jax.block_until_ready"}
+_SYNC_BUILTINS = {"float", "int"}
+
+
+@dataclasses.dataclass
+class _Func:
+    module: str
+    cls: Optional[str]
+    name: str
+    node: ast.AST
+    path: str
+    imports: Dict[str, str]
+    registry: A.JitRegistry
+
+
+def _module_name(path: str, root: Optional[Path]) -> str:
+    p = Path(path)
+    if root is not None:
+        try:
+            rel = p.resolve().relative_to(root.resolve())
+        except ValueError:
+            rel = p
+        parts = list(rel.with_suffix("").parts)
+        if parts and parts[0] == "src":
+            parts = parts[1:]
+        return ".".join(parts)
+    return p.stem
+
+
+def _own_body(fn: ast.AST):
+    """Statements/expressions of ``fn`` excluding nested def/lambda bodies."""
+    todo = list(ast.iter_child_nodes(fn))
+    while todo:
+        node = todo.pop(0)
+        yield node
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda, ast.ClassDef)):
+            todo.extend(ast.iter_child_nodes(node))
+
+
+class HostSyncPass(LintPass):
+    name = "host-sync-in-hot-path"
+    description = ("device->host sync reachable from the chunk/step hot "
+                   "loops; route through the module's _fetch")
+
+    def check_project(self, contexts: Sequence[FileContext],
+                      root: Optional[Path]) -> List[Violation]:
+        funcs: List[_Func] = []
+        by_bare: Dict[Tuple[str, str], _Func] = {}
+        by_method: Dict[str, List[_Func]] = {}
+        module_set: Set[str] = set()
+        for ctx in contexts:
+            mod = _module_name(ctx.path, root)
+            module_set.add(mod)
+            imports = A.import_table(ctx.tree)
+            registry = A.JitRegistry.scan(ctx.tree, imports)
+            for fn, cls in A.functions_with_class(ctx.tree):
+                f = _Func(module=mod, cls=cls, name=fn.name, node=fn,
+                          path=ctx.path, imports=imports, registry=registry)
+                funcs.append(f)
+                if cls is None:
+                    by_bare.setdefault((mod, fn.name), f)
+                else:
+                    by_method.setdefault(fn.name, []).append(f)
+
+        def edges(f: _Func) -> List[_Func]:
+            out: List[_Func] = []
+            for node in _own_body(f.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = A.dotted_name(node.func)
+                if name is None:
+                    continue
+                if "." not in name:
+                    tgt = by_bare.get((f.module, name))
+                    if tgt is None:
+                        full = f.imports.get(name)
+                        if full and "." in full:
+                            m, _, n = full.rpartition(".")
+                            tgt = by_bare.get((m, n))
+                    if tgt is not None:
+                        out.append(tgt)
+                elif name.startswith("self."):
+                    attr = name[5:]
+                    if "." in attr:
+                        continue
+                    same_cls = [m for m in by_method.get(attr, [])
+                                if m.cls == f.cls and m.module == f.module]
+                    out.extend(same_cls or by_method.get(attr, []))
+                else:
+                    head, _, rest = name.partition(".")
+                    full_mod = f.imports.get(head)
+                    if full_mod in module_set and "." not in rest:
+                        tgt = by_bare.get((full_mod, rest))
+                        if tgt is not None:
+                            out.append(tgt)
+                    elif "." not in rest:
+                        # unknown receiver: fan out to every same-named method
+                        out.extend(by_method.get(rest, []))
+            return out
+
+        roots = [f for f in funcs if (f.cls, f.name) in HOT_ROOTS]
+        hot: List[_Func] = []
+        seen: Set[int] = set()
+        origin: Dict[int, str] = {}
+        queue = list(roots)
+        for r in roots:
+            origin[id(r)] = f"{r.cls}.{r.name}"
+        while queue:
+            f = queue.pop(0)
+            if id(f) in seen:
+                continue
+            seen.add(id(f))
+            hot.append(f)
+            for tgt in edges(f):
+                if id(tgt) not in seen:
+                    origin.setdefault(id(tgt), origin[id(f)])
+                    queue.append(tgt)
+
+        out: List[Violation] = []
+        for f in hot:
+            out.extend(self._check_hot(f, origin[id(f)]))
+        return out
+
+    def _check_hot(self, f: _Func, root_name: str) -> List[Violation]:
+        out: List[Violation] = []
+        device_vars: Set[str] = set()
+        for node in _own_body(f.node):
+            if isinstance(node, ast.Assign) and \
+                    isinstance(node.value, (ast.Call, ast.Name,
+                                            ast.Subscript, ast.Attribute)):
+                names: List[str] = []
+                for t in node.targets:
+                    names.extend(A.flatten_targets(t))
+                src = node.value
+                tainted = False
+                if isinstance(src, ast.Call):
+                    callee = A.dotted_name(src.func) or ""
+                    if callee.rsplit(".", 1)[-1] == "_fetch":
+                        for n in names:
+                            device_vars.discard(n)
+                        continue
+                    info = f.registry.lookup(
+                        src, f.cls) if isinstance(src, ast.Call) else None
+                    tainted = info is not None
+                elif isinstance(src, ast.Name):
+                    tainted = src.id in device_vars
+                elif isinstance(src, (ast.Subscript, ast.Attribute)):
+                    base = A.dotted_name(
+                        src.value if isinstance(src, ast.Subscript)
+                        else src.value)
+                    tainted = base in device_vars
+                if tainted:
+                    device_vars.update(names)
+
+            if not isinstance(node, ast.Call):
+                continue
+            fname = A.dotted_name(node.func)
+            if fname is None:
+                continue
+            if fname.rsplit(".", 1)[-1] == "_fetch":
+                continue
+            if isinstance(node.func, ast.Attribute) and \
+                    node.func.attr in _SYNC_METHODS and not node.args:
+                out.append(Violation(
+                    path=f.path, line=node.lineno, col=node.col_offset,
+                    pass_name=self.name,
+                    message=(f".{node.func.attr}() in "
+                             f"'{f.name}', reachable from the "
+                             f"{root_name} hot loop; it blocks on the "
+                             f"device — route through _fetch and batch "
+                             f"once per chunk/step")))
+                continue
+            resolved = A.resolve_dotted(fname, f.imports)
+            is_sync = resolved in _SYNC_FUNCS or (
+                fname in _SYNC_BUILTINS and fname not in f.imports)
+            if not is_sync or not node.args:
+                continue
+            arg = node.args[0]
+            arg_hot = (isinstance(arg, ast.Name) and arg.id in device_vars)
+            if isinstance(arg, ast.Call):
+                arg_hot = f.registry.lookup(arg, f.cls) is not None
+            if arg_hot:
+                out.append(Violation(
+                    path=f.path, line=node.lineno, col=node.col_offset,
+                    pass_name=self.name,
+                    message=(f"{fname}(...) fetches a jit-produced value "
+                             f"in '{f.name}', reachable from the "
+                             f"{root_name} hot loop; route through "
+                             f"_fetch and batch once per chunk/step")))
+        return out

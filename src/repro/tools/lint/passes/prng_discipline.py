@@ -1,0 +1,210 @@
+"""prng-discipline: key reuse and literal keys in library code.
+
+* **key-reuse** — within one function scope, the same key name is consumed
+  by two ``jax.random.*`` sampling calls (or by ``split`` without rebinding
+  the key) with no intervening reassignment.  Reusing a key yields
+  correlated samples; ``fold_in``/``clone`` are non-consuming and fine.
+
+* **literal-key** — ``jax.random.key(<const>)`` / ``PRNGKey(<const>)`` in
+  library code (paths under ``src/``).  The repo's streams are
+  ``(seed, rid, position)``-derived; a hard-coded literal bypasses seed
+  threading and silently decorrelates nothing across workers.  Exemption:
+  keys inside ``jax.eval_shape(...)`` arguments (abstract evaluation only —
+  no randomness is ever generated).  Tests/benchmarks/examples may use
+  literal seeds freely.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+from repro.tools.lint.core import FileContext, LintPass, Violation
+from repro.tools.lint.passes import _astutil as A
+
+# Non-consuming producers/utilities: using a key here is not a "draw".
+_PRODUCERS = {"key", "PRNGKey", "fold_in", "clone", "wrap_key_data",
+              "key_data", "key_impl", "default_prng_impl"}
+
+_KEYISH_PARAMS = {"key", "rng", "rngs", "prng", "prng_key", "root_key"}
+
+
+def _key_expr(node: ast.expr) -> Optional[str]:
+    """'key' for a Name, 'keys[0]' for a const-subscript of a Name."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Subscript) and isinstance(node.value, ast.Name) \
+            and isinstance(node.slice, ast.Constant):
+        return f"{node.value.id}[{node.slice.value!r}]"
+    return None
+
+
+def _scope_body(fn: ast.AST):
+    """(node, branch_path) for one scope, excluding nested
+    function/class/lambda bodies.  ``branch_path`` is a tuple of
+    ``(branch_point_id, arm_index)`` for each enclosing If/Try arm — two
+    nodes on different arms of the same branch point never execute
+    together, so consuming the same key in each is fine."""
+    todo = [(c, ()) for c in ast.iter_child_nodes(fn)]
+    while todo:
+        node, path = todo.pop(0)
+        yield node, path
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda, ast.ClassDef)):
+            continue
+        if isinstance(node, ast.If):
+            todo.extend((c, path) for c in (node.test,))
+            todo.extend((c, path + ((id(node), 0),)) for c in node.body)
+            todo.extend((c, path + ((id(node), 1),)) for c in node.orelse)
+        elif isinstance(node, ast.Try):
+            todo.extend((c, path + ((id(node), 0),))
+                        for c in (*node.body, *node.orelse))
+            for i, h in enumerate(node.handlers, start=1):
+                todo.extend((c, path + ((id(node), i),))
+                            for c in ast.iter_child_nodes(h))
+            todo.extend((c, path) for c in node.finalbody)
+        else:
+            todo.extend((c, path) for c in ast.iter_child_nodes(node))
+
+
+def _compatible(p1, p2) -> bool:
+    """True if the two branch paths can lie on one execution path."""
+    arms = dict(p1)
+    return all(arms.get(bp, arm) == arm for bp, arm in p2)
+
+
+class PrngDisciplinePass(LintPass):
+    name = "prng-discipline"
+    description = ("PRNG key consumed twice without split/fold_in, or a "
+                   "literal key in library code")
+
+    def _resolve_random(self, node: ast.Call,
+                        imports: Dict[str, str]) -> Optional[str]:
+        fname = A.dotted_name(node.func)
+        if fname is None:
+            return None
+        full = A.resolve_dotted(fname, imports)
+        if full.startswith("jax.random."):
+            return full[len("jax.random."):]
+        return None
+
+    def _check_reuse(self, ctx: FileContext, scope: ast.AST,
+                     imports: Dict[str, str],
+                     params: Tuple[str, ...]) -> List[Violation]:
+        # events: (line, col, kind, key, branch_path)
+        events: List[Tuple[int, int, str, str, tuple]] = []
+        key_like = {p for p in params
+                    if p in _KEYISH_PARAMS or p.endswith(("_key", "_rng"))}
+
+        for node, path in _scope_body(scope):
+            if isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign,
+                                 ast.NamedExpr)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                names: List[str] = []
+                for t in targets:
+                    names.extend(A.flatten_targets(t))
+                    ke = _key_expr(t)
+                    if ke is not None and ke not in names:
+                        names.append(ke)
+                value = getattr(node, "value", None)
+                from_producer = False
+                if isinstance(value, ast.Call):
+                    rnd = self._resolve_random(value, imports)
+                    from_producer = rnd in ("key", "PRNGKey", "fold_in",
+                                            "split", "clone")
+                elif isinstance(value, ast.Subscript) and \
+                        isinstance(value.value, ast.Call):
+                    rnd = self._resolve_random(value.value, imports)
+                    from_producer = rnd == "split"
+                for n in names:
+                    events.append((node.lineno, node.col_offset,
+                                   "store", n, path))
+                    if from_producer:
+                        key_like.add(n)
+            if isinstance(node, ast.Call):
+                rnd = self._resolve_random(node, imports)
+                if rnd is None or not node.args:
+                    continue
+                ke = _key_expr(node.args[0])
+                if ke is None:
+                    continue
+                if rnd == "split":
+                    # split(key) without rebinding key consumes it
+                    rebinds = any(e[2] == "store" and e[3] == ke
+                                  and e[0] == node.lineno for e in events)
+                    if not rebinds:
+                        events.append((node.lineno, node.col_offset,
+                                       "consume", ke, path))
+                    continue
+                if rnd in _PRODUCERS:
+                    continue
+                events.append((node.lineno, node.col_offset,
+                               "consume", ke, path))
+
+        events.sort(key=lambda e: (e[0], e[1]))
+        out: List[Violation] = []
+        # key -> list of (line, col, branch_path) of still-live consumes
+        live: Dict[str, List[Tuple[int, int, tuple]]] = {}
+        for line, col, kind, key, path in events:
+            if kind == "store":
+                # a rebind of 'keys' also kills live draws from 'keys[i]'
+                for k in list(live):
+                    if k == key or k.startswith(key + "["):
+                        live[k] = [c for c in live[k]
+                                   if not _compatible(c[2], path)]
+            elif key in key_like or key.split("[")[0] in key_like:
+                clash = next((c for c in live.get(key, [])
+                              if _compatible(c[2], path)), None)
+                if clash is not None:
+                    out.append(Violation(
+                        path=ctx.path, line=line, col=col,
+                        pass_name=self.name,
+                        message=(f"key '{key}' already consumed at line "
+                                 f"{clash[0]} and is drawn from again "
+                                 f"without an intervening split/fold_in "
+                                 f"— samples will be correlated")))
+                live.setdefault(key, []).append((line, col, path))
+        return out
+
+    def _in_eval_shape(self, parents: List[ast.AST],
+                       imports: Dict[str, str]) -> bool:
+        for p in parents:
+            if isinstance(p, ast.Call):
+                fname = A.dotted_name(p.func)
+                if fname and A.resolve_dotted(fname, imports) == \
+                        "jax.eval_shape":
+                    return True
+        return False
+
+    def check_file(self, ctx: FileContext) -> List[Violation]:
+        imports = A.import_table(ctx.tree)
+        out: List[Violation] = []
+
+        out.extend(self._check_reuse(ctx, ctx.tree, imports, ()))
+        for fn, _cls in A.functions_with_class(ctx.tree):
+            params = tuple(a.arg for a in (*fn.args.posonlyargs,
+                                           *fn.args.args,
+                                           *fn.args.kwonlyargs))
+            out.extend(self._check_reuse(ctx, fn, imports, params))
+
+        parts = Path(ctx.path).parts
+        if "src" in parts:
+            for node, parents in A.walk_with_parents(ctx.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                rnd = self._resolve_random(node, imports)
+                if rnd not in ("key", "PRNGKey"):
+                    continue
+                if not (node.args and isinstance(node.args[0], ast.Constant)):
+                    continue
+                if self._in_eval_shape(parents, imports):
+                    continue
+                out.append(Violation(
+                    path=ctx.path, line=node.lineno, col=node.col_offset,
+                    pass_name=self.name,
+                    message=(f"literal PRNG key jax.random.{rnd}"
+                             f"({node.args[0].value!r}) in library code; "
+                             f"thread a seed from config/CLI so streams "
+                             f"stay (seed, rid, position)-derived")))
+        return out

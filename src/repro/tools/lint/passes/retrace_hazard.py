@@ -1,0 +1,104 @@
+"""retrace-hazard: patterns that defeat the repo's one-compile contract.
+
+Two checks:
+
+* **construct-in-loop** — ``jax.jit(...)`` or ``pallas_call(...)`` invoked
+  lexically inside a ``for``/``while`` body (with no intervening function
+  boundary).  Every iteration builds a fresh callable with an empty cache,
+  so every iteration retraces and recompiles.  Hoist the construction out
+  of the loop.
+
+* **non-hashable-static** — a list/dict/set/comprehension literal passed in
+  a ``static_argnums``/``static_argnames`` position of a locally-registered
+  jit product.  Static args are cache keys; non-hashables raise at call
+  time, and per-call-varying values retrace silently.  Pass a tuple (or
+  hash the config up front).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from repro.tools.lint.core import FileContext, LintPass, Violation
+from repro.tools.lint.passes import _astutil as A
+
+_CONSTRUCTORS = {
+    "jax.jit": "jax.jit",
+    "jax.experimental.pallas.pallas_call": "pallas_call",
+}
+
+_NON_HASHABLE = (ast.List, ast.Dict, ast.Set,
+                 ast.ListComp, ast.SetComp, ast.DictComp, ast.GeneratorExp)
+
+
+def _loop_enclosing(parents: List[ast.AST]) -> Optional[ast.AST]:
+    """Innermost loop ancestor (for/while/comprehension) with no function
+    boundary in between."""
+    for p in reversed(parents):
+        if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            return None
+        if isinstance(p, (ast.For, ast.AsyncFor, ast.While, ast.ListComp,
+                          ast.SetComp, ast.DictComp, ast.GeneratorExp)):
+            return p
+    return None
+
+
+class RetraceHazardPass(LintPass):
+    name = "retrace-hazard"
+    description = ("jit/pallas_call built inside a loop, or non-hashable "
+                   "literals in static arg positions")
+
+    def check_file(self, ctx: FileContext) -> List[Violation]:
+        imports = A.import_table(ctx.tree)
+        registry = A.JitRegistry.scan(ctx.tree, imports)
+        out: List[Violation] = []
+        cls_stack_cache = {}
+
+        for node, parents in A.walk_with_parents(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fname = A.dotted_name(node.func)
+            resolved = A.resolve_dotted(fname, imports) if fname else None
+
+            if resolved in _CONSTRUCTORS:
+                loop = _loop_enclosing(parents)
+                if loop is not None:
+                    out.append(Violation(
+                        path=ctx.path, line=node.lineno,
+                        col=node.col_offset, pass_name=self.name,
+                        message=(f"{_CONSTRUCTORS[resolved]} constructed "
+                                 f"inside the loop at line {loop.lineno}; "
+                                 f"each iteration gets a fresh callable "
+                                 f"and retraces — hoist it out of the "
+                                 f"loop")))
+
+            # static-arg check at call sites of known jit products
+            cls_name = None
+            for p in reversed(parents):
+                if isinstance(p, ast.ClassDef):
+                    cls_name = cls_stack_cache.setdefault(id(p), p.name)
+                    break
+            info = registry.lookup(node, cls_name)
+            if info is None:
+                continue
+            for i, arg in enumerate(node.args):
+                if i in info.static_argnums and \
+                        isinstance(arg, _NON_HASHABLE):
+                    out.append(Violation(
+                        path=ctx.path, line=arg.lineno, col=arg.col_offset,
+                        pass_name=self.name,
+                        message=(f"non-hashable literal in static position "
+                                 f"{i} of '{info.target}'; static args are "
+                                 f"cache keys — pass a tuple or hashable "
+                                 f"config")))
+            for kw in node.keywords:
+                if kw.arg in info.static_argnames and \
+                        isinstance(kw.value, _NON_HASHABLE):
+                    out.append(Violation(
+                        path=ctx.path, line=kw.value.lineno,
+                        col=kw.value.col_offset, pass_name=self.name,
+                        message=(f"non-hashable literal for static arg "
+                                 f"'{kw.arg}' of '{info.target}'; static "
+                                 f"args are cache keys — pass a tuple or "
+                                 f"hashable config")))
+        return out

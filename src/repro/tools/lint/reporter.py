@@ -1,0 +1,28 @@
+"""Human and JSON reporters for replint results."""
+from __future__ import annotations
+
+import json
+from typing import List, Sequence
+
+from repro.tools.lint.core import Violation
+
+
+def render_human(violations: Sequence[Violation], files: Sequence[str],
+                 errors: Sequence[str]) -> str:
+    lines: List[str] = [v.format() for v in violations]
+    lines.extend(f"ERROR: {e}" for e in errors)
+    n = len(violations)
+    noun = "violation" if n == 1 else "violations"
+    lines.append(f"replint: {n} {noun} in {len(files)} files"
+                 + (f" ({len(errors)} files failed to parse)"
+                    if errors else ""))
+    return "\n".join(lines)
+
+
+def render_json(violations: Sequence[Violation], files: Sequence[str],
+                errors: Sequence[str]) -> str:
+    return json.dumps({
+        "violations": [v.to_json() for v in violations],
+        "files_checked": len(files),
+        "errors": list(errors),
+    }, indent=2, sort_keys=True)

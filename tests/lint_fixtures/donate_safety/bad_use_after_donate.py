@@ -1,0 +1,30 @@
+"""Known-bad: reads a buffer after donating it to a jitted callable."""
+import jax
+
+
+def train(state, batch):
+    step = jax.jit(lambda s, b: s, donate_argnums=(0,))
+    new_state = step(state, batch)
+    return state, new_state  # LINT-EXPECT donate-safety
+
+
+def train_attr(state, batch):
+    step = jax.jit(lambda s, b: s, donate_argnums=(0,))
+    new_state = step(state, batch)
+    return state.params, new_state  # LINT-EXPECT donate-safety
+
+
+class Trainer:
+    def __init__(self, fn):
+        self._step = jax.jit(fn, donate_argnums=(1,))
+
+    def run(self, params, state):
+        out = self._step(params, state)
+        print(state)  # LINT-EXPECT donate-safety
+        return out
+
+
+def toggle(state, batch, donate=True):
+    step = jax.jit(lambda s, b: s, donate_argnums=(0,) if donate else ())
+    new_state = step(state, batch)
+    return state, new_state  # LINT-EXPECT donate-safety

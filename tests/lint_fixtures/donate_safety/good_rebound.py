@@ -1,0 +1,37 @@
+"""Known-good: every donated buffer is rebound or never read again."""
+import jax
+import jax.numpy as jnp
+
+
+def train(state, batches):
+    step = jax.jit(lambda s, b: s, donate_argnums=(0,))
+    for b in batches:
+        state = step(state, b)          # rebound in the same statement
+    return state
+
+
+def train_tail(state, batch):
+    step = jax.jit(lambda s, b: s, donate_argnums=(0,))
+    return step(state, batch)           # tail call: no later read
+
+
+def train_snapshot(state, batch):
+    step = jax.jit(lambda s, b: s, donate_argnums=(0,))
+    snap = jax.tree.map(jnp.copy, state)
+    state = step(state, batch)
+    return state, snap                  # the copy is read, not the donated
+
+
+class Runner:
+    def __init__(self, fn):
+        self._outer = jax.jit(fn, donate_argnums=(0, 1))
+
+    def sync(self, state):
+        state, self.residual = self._outer(state, self.residual)
+        return state                    # both donated args rebound
+
+
+def undonated(state, batch):
+    step = jax.jit(lambda s, b: s)      # no donation at all
+    new_state = step(state, batch)
+    return state, new_state

@@ -1,0 +1,33 @@
+"""Known-bad: device->host syncs inside the serving/training hot loops."""
+import jax
+import numpy as np
+
+
+class Engine:
+    def __init__(self, step):
+        self._step_fn = jax.jit(step, donate_argnums=(1,))
+
+    def run(self, params, state, steps):
+        for _ in range(steps):
+            tok, state = self._step_fn(params, state)
+            tok = np.asarray(tok)  # LINT-EXPECT host-sync-in-hot-path
+            self._emit(tok, state)
+        return state
+
+    def _emit(self, tok, state):
+        print(state.loss.item())  # LINT-EXPECT host-sync-in-hot-path
+
+
+class DistTrainer:
+    def __init__(self, chunk):
+        self.inner_chunk = jax.jit(chunk, donate_argnums=(0,))
+
+    def run(self, state, batches):
+        for b in batches:
+            state, losses = self.inner_chunk(state, b)
+            mean = float(losses)  # LINT-EXPECT host-sync-in-hot-path
+            self.record(mean)
+        return state
+
+    def record(self, mean):
+        pass

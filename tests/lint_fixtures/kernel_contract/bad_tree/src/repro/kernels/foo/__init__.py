@@ -1,0 +1,1 @@
+from repro.kernels.foo.ops import foo  # noqa: F401

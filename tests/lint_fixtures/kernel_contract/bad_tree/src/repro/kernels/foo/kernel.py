@@ -1,0 +1,2 @@
+def foo_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]

@@ -1,0 +1,18 @@
+"""Known-bad ops.py: private interpret copy, no shared helper, no ref.py
+next door, and no oracle-backed test anywhere under tests/."""
+import os
+
+import jax
+
+
+def default_interpret():
+    env = os.environ.get("FOO_INTERPRET")
+    if env is not None:
+        return env == "1"
+    return jax.default_backend() == "cpu"
+
+
+def foo(x, interpret=None):
+    if interpret is None:
+        interpret = default_interpret()
+    return x

@@ -1,0 +1,2 @@
+from repro.kernels.bar.ops import bar  # noqa: F401
+from repro.kernels.bar.ref import reference_bar  # noqa: F401

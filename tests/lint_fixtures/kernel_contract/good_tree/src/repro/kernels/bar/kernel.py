@@ -1,0 +1,2 @@
+def bar_fwd(x, *, interpret):
+    return x

@@ -1,0 +1,8 @@
+from repro.kernels.common import resolve_interpret
+
+from repro.kernels.bar.kernel import bar_fwd
+
+
+def bar(x, interpret=None):
+    interpret = resolve_interpret(interpret)
+    return bar_fwd(x, interpret=interpret)

@@ -1,0 +1,2 @@
+def reference_bar(x):
+    return x

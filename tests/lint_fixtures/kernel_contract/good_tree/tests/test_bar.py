@@ -1,0 +1,5 @@
+from repro.kernels.bar import bar, reference_bar
+
+
+def test_bar_matches_oracle():
+    assert bar(3) == reference_bar(3)

@@ -1,0 +1,28 @@
+"""Known-bad: the same key drawn from twice, and split without rebind."""
+import jax
+
+
+def double_draw(key, shape):
+    a = jax.random.normal(key, shape)
+    b = jax.random.uniform(key, shape)  # LINT-EXPECT prng-discipline
+    return a, b
+
+
+def split_then_reuse(key):
+    subs = jax.random.split(key, 2)
+    noise = jax.random.normal(key, ())  # LINT-EXPECT prng-discipline
+    return subs, noise
+
+
+def reuse_after_rebind_of_other(rng, shape):
+    a = jax.random.bernoulli(rng, 0.5, shape)
+    other = jax.random.key(7)
+    b = jax.random.categorical(rng, a)  # LINT-EXPECT prng-discipline
+    return other, b
+
+
+def subscript_reuse(key):
+    keys = jax.random.split(key, 3)
+    a = jax.random.normal(keys[0], ())
+    b = jax.random.uniform(keys[0], ())  # LINT-EXPECT prng-discipline
+    return a, b

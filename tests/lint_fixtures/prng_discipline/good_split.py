@@ -1,0 +1,42 @@
+"""Known-good: split/fold_in between draws, branch-exclusive draws."""
+import jax
+
+
+def split_between(key, shape):
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1, shape)
+    b = jax.random.uniform(k2, shape)
+    return a, b
+
+
+def rebind_chain(key, shape):
+    key, sub = jax.random.split(key)
+    a = jax.random.normal(sub, shape)
+    key, sub = jax.random.split(key)    # key rebound: reusable
+    b = jax.random.uniform(sub, shape)
+    return a, b
+
+
+def fold_per_step(key, xs):
+    out = []
+    for i, x in enumerate(xs):
+        out.append(jax.random.normal(jax.random.fold_in(key, i), x.shape))
+    return out
+
+
+def branch_exclusive(key, shape, init):
+    # the layers.py param-init pattern: one draw per mutually-exclusive arm
+    if init == "normal":
+        v = jax.random.truncated_normal(key, -3.0, 3.0, shape)
+    elif init == "embed":
+        v = jax.random.normal(key, shape)
+    else:
+        v = jax.random.uniform(key, shape)
+    return v
+
+
+def distinct_subscripts(key):
+    keys = jax.random.split(key, 3)
+    a = jax.random.normal(keys[0], ())
+    b = jax.random.uniform(keys[1], ())
+    return a, b

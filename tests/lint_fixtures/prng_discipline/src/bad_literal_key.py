@@ -1,0 +1,11 @@
+"""Known-bad (library-code path: note the src/ segment): literal keys."""
+import jax
+
+
+def fresh_params(init_fn, cfg):
+    params = init_fn(cfg, jax.random.key(0))  # LINT-EXPECT prng-discipline
+    return params
+
+
+def legacy(init_fn, cfg):
+    return init_fn(cfg, jax.random.PRNGKey(42))  # LINT-EXPECT prng-discipline

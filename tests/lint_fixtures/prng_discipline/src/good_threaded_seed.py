@@ -1,0 +1,11 @@
+"""Known-good library code: seeds threaded, eval_shape literals exempt."""
+import jax
+
+
+def fresh_params(init_fn, cfg, seed):
+    return init_fn(cfg, jax.random.key(seed))   # seed comes from config/CLI
+
+
+def capture_shapes(capture):
+    # abstract evaluation only — no randomness is ever generated
+    return jax.eval_shape(capture, jax.random.key(0))

@@ -1,0 +1,35 @@
+"""Known-bad: fresh jit/pallas_call per iteration, non-hashable statics."""
+import jax
+from jax.experimental import pallas as pl
+
+
+def per_step_jit(f, xs):
+    out = []
+    for x in xs:
+        g = jax.jit(f)  # LINT-EXPECT retrace-hazard
+        out.append(g(x))
+    return out
+
+
+def per_step_pallas(kernel, xs, shape):
+    out = []
+    while xs:
+        call = pl.pallas_call(kernel, out_shape=shape)  # LINT-EXPECT retrace-hazard
+        out.append(call(xs.pop()))
+    return out
+
+
+def immediate_invoke_in_loop(f, xs):
+    return [jax.jit(f)(x) for x in xs]  # LINT-EXPECT retrace-hazard
+
+
+step = jax.jit(lambda x, dims: x, static_argnames=("dims",))
+chunk = jax.jit(lambda x, n: x, static_argnums=(1,))
+
+
+def bad_static_kw(x):
+    return step(x, dims=[1, 2])  # LINT-EXPECT retrace-hazard
+
+
+def bad_static_pos(x):
+    return chunk(x, [4, 8])  # LINT-EXPECT retrace-hazard

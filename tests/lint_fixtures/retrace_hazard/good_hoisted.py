@@ -1,0 +1,39 @@
+"""Known-good: construction hoisted, hashable statics."""
+import jax
+from jax.experimental import pallas as pl
+
+
+def hoisted(f, xs):
+    g = jax.jit(f)                      # built once, outside the loop
+    out = []
+    for x in xs:
+        out.append(g(x))
+    return out
+
+
+def wrapper(kernel, shape, x):
+    # pallas_call inside a def: the function boundary makes per-call
+    # construction the *caller's* cache problem, and wrappers like this
+    # are themselves jitted in this codebase.
+    call = pl.pallas_call(kernel, out_shape=shape)
+    return call(x)
+
+
+def loop_over_wrapper(kernel, shape, xs):
+    return [wrapper(kernel, shape, x) for x in xs]
+
+
+step = jax.jit(lambda x, dims: x, static_argnames=("dims",))
+chunk = jax.jit(lambda x, n: x, static_argnums=(1,))
+
+
+def good_static(x):
+    a = step(x, dims=(1, 2))            # tuple: hashable cache key
+    b = chunk(x, 8)                     # int: hashable cache key
+    return a, b
+
+
+def straight_line_immediate(f, x):
+    # immediate invoke at straight-line level: compiles once per trace,
+    # the idiom the test-suite uses freely.
+    return jax.jit(f)(x)

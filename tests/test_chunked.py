@@ -274,7 +274,7 @@ def test_prefetcher_prime_matches_take():
     never changes what take() produces."""
     pf = Prefetcher(lambda s: {"x": np.full((2,), s, np.int32)}, 9, depth=3)
     try:
-        a = pf.take(0, 2)
+        pf.take(0, 2)
         pf.prime(2, 3)
         b = pf.take(2, 3)
         assert [int(b["x"][i, 0]) for i in range(3)] == [2, 3, 4]

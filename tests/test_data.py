@@ -1,7 +1,7 @@
 """Data pipeline: BPE roundtrip, special tokens, packing, worker sharding."""
 import numpy as np
 
-from repro.data import BPETokenizer, PackedDataset, build_tokenizer, synthetic
+from repro.data import PackedDataset, build_tokenizer, synthetic
 
 
 def _tok():

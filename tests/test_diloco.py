@@ -1,14 +1,13 @@
 """DiLoCo algorithm invariants — the paper's core mechanism."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from helpers import tiny_batch, tiny_cfg
+from helpers import tiny_cfg
 from repro.configs.base import DiLoCoConfig, OptimizerConfig
-from repro.core import (AdaptiveH, DDPTrainer, DiLoCoTrainer, FixedH, drift,
+from repro.core import (AdaptiveH, DDPTrainer, DiLoCoTrainer, drift,
                         run_ddp, run_diloco)
 from repro.core.outer_opt import (average_deltas, dequantize_delta,
                                   outer_update, init_outer_state,

@@ -2,7 +2,6 @@
 must increase the probability of rewarded completions."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from helpers import tiny_cfg
@@ -51,7 +50,6 @@ def test_grpo_increases_reward_probability():
         return float(jax.nn.softmax(logits[0, -1])[target])
 
     before = p_target(state["params"])
-    rng = 0
     for it in range(8):
         state, loss, mean_r = tr.rollout_and_step(
             state, prompts, reward, pad_id=0, seed=it)

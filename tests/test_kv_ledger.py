@@ -1,0 +1,151 @@
+"""Property test for KVBlockPool's two-level ledger (reservation budget +
+lazy mapping) under random reserve/map/truncate/recycle/free churn.
+
+The churn interpreter mirrors the Scheduler's use of the pool exactly:
+admit reserves a budget, ``ensure_mapped`` draws it down one block at a
+time (``alloc(reserved=True)``), window recycling and speculative rollback
+return blocks with ``rereserve=True``, finish frees the mapping and
+releases the leftover budget.  After EVERY op it asserts:
+
+* ``check_invariants()`` — free ∪ allocated partitions the pool, no
+  duplicate free-list entries, reserved ≤ free;
+* the pool-wide reservation equals the sum of per-slot budgets;
+* per slot, mapped + remaining budget == admitted budget (rollback and
+  recycling never leak or mint budget);
+* allocated == all mapped blocks + scratch, i.e. no physical block leaks.
+
+Runs twice: a seeded-churn version that always runs, and a hypothesis
+version (skipped if hypothesis isn't installed) that shrinks failures.
+"""
+import random
+
+import pytest
+
+from repro.serving.kv_cache import KVBlockPool
+
+
+class FakeSlot:
+    """Duck-typed slot: what truncate() needs, plus the admitted budget."""
+
+    def __init__(self, budget):
+        self.blocks = []        # logical -> physical, -1 = unmapped
+        self.reserved = budget  # remaining budget
+        self.budget = budget    # admitted budget (for the invariant)
+
+
+def _mapped(slot):
+    return sum(1 for b in slot.blocks if b >= 0)
+
+
+def _assert_invariants(pool, slots, scratch):
+    pool.check_invariants()
+    assert pool.num_reserved == sum(s.reserved for s in slots), \
+        "pool reservation != sum of slot budgets"
+    for s in slots:
+        assert s.reserved + _mapped(s) == s.budget, \
+            "slot leaked or minted budget"
+        assert s.reserved >= 0
+    assert pool.num_allocated == sum(_mapped(s) for s in slots) + \
+        len(scratch), "physical block leaked or double-mapped"
+    assert pool.num_free + pool.num_allocated == pool.num_blocks
+
+
+def churn(ops, num_blocks=12, block_size=4):
+    """Interpret (opcode, a, b) triples against a pool + slot set,
+    asserting every invariant after every step."""
+    pool = KVBlockPool(num_blocks, block_size)
+    slots, scratch = [], []
+    for opcode, a, b in ops:
+        op = opcode % 7
+        if op == 0:                                   # admit: reserve budget
+            budget = a % 5
+            if pool.can_reserve(budget):
+                pool.reserve(budget)
+                slots.append(FakeSlot(budget))
+        elif op == 1 and slots:                       # ensure_mapped: 1 block
+            s = slots[a % len(slots)]
+            if s.reserved > 0:
+                s.blocks.append(pool.alloc(1, reserved=True)[0])
+                s.reserved -= 1
+        elif op == 2 and slots:                       # unmapped hole
+            s = slots[a % len(slots)]
+            if s.reserved > 0 and len(s.blocks) < num_blocks:
+                s.blocks.append(-1)
+        elif op == 3 and slots:                       # spec rollback
+            s = slots[a % len(slots)]
+            pos = b % (len(s.blocks) * block_size + 1)
+            before = s.reserved + _mapped(s)
+            pool.truncate(s, pos)
+            assert s.reserved + _mapped(s) == before
+        elif op == 4 and slots:                       # window recycling
+            s = slots[a % len(slots)]
+            mapped_idx = [i for i, blk in enumerate(s.blocks) if blk >= 0]
+            if mapped_idx:
+                j = mapped_idx[b % len(mapped_idx)]
+                pool.free([s.blocks[j]], rereserve=True)
+                s.blocks[j] = -1
+                s.reserved += 1
+        elif op == 5 and slots:                       # finish: free + release
+            s = slots.pop(a % len(slots))
+            dead = [blk for blk in s.blocks if blk >= 0]
+            if dead:
+                pool.free(dead)
+            pool.release(s.reserved)
+        elif op == 6:                                 # scratch alloc/free
+            if scratch and b % 2:
+                pool.free([scratch.pop()])
+            elif pool.can_allocate(1):
+                scratch.extend(pool.alloc(1))
+        _assert_invariants(pool, slots, scratch)
+    return pool, slots, scratch
+
+
+def test_seeded_churn():
+    rng = random.Random(1234)
+    for _ in range(30):
+        n = rng.randrange(1, 300)
+        ops = [(rng.randrange(64), rng.randrange(64), rng.randrange(64))
+               for _ in range(n)]
+        pool, slots, scratch = churn(ops,
+                                     num_blocks=rng.randrange(1, 24),
+                                     block_size=rng.choice([1, 2, 4, 8]))
+        # drain: finishing everything must return the pool to pristine
+        for s in list(slots):
+            dead = [blk for blk in s.blocks if blk >= 0]
+            if dead:
+                pool.free(dead)
+            pool.release(s.reserved)
+        if scratch:
+            pool.free(scratch)
+        pool.check_invariants()
+        assert pool.num_free == pool.num_blocks
+        assert pool.num_allocated == 0 and pool.num_reserved == 0
+
+
+def test_ledger_raises_on_misuse():
+    pool = KVBlockPool(4, 2)
+    blocks = pool.alloc(2)
+    pool.free(blocks)
+    with pytest.raises(RuntimeError, match="double-free"):
+        pool.free(blocks[:1])
+    with pytest.raises(RuntimeError, match="over-reserve"):
+        pool.reserve(5)
+    pool.reserve(3)
+    with pytest.raises(RuntimeError, match="release"):
+        pool.release(4)
+    with pytest.raises(RuntimeError, match="exhausted"):
+        pool.alloc(2)                   # only 1 unreserved block left
+
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=200, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 63), st.integers(0, 63),
+                              st.integers(0, 63)), max_size=120),
+           st.integers(1, 24), st.sampled_from([1, 2, 4, 8]))
+    def test_hypothesis_churn(ops, num_blocks, block_size):
+        churn(ops, num_blocks=num_blocks, block_size=block_size)
+except ImportError:  # pragma: no cover - hypothesis is in CI's pip set
+    pass

@@ -1,15 +1,12 @@
 """Unit tests for the launch layer: logical sharding resolution, profiles,
 registry variants, analytic estimators."""
-import jax
-import jax.numpy as jnp
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import (SHAPES, decode_cache_capacity, get_config,
                            input_specs, long_context_variant)
 from repro.launch.analytic import bytes_per_device, flops_per_device
 from repro.launch.dryrun_lib import PROFILES, auto_profile
-from repro.models.sharding import DEFAULT_RULES, spec_for, sharding_ctx
+from repro.models.sharding import spec_for, sharding_ctx
 
 
 class FakeMesh:

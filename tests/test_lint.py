@@ -1,0 +1,205 @@
+"""Self-tests for replint (``repro.tools.lint``).
+
+Fixture contract: files under ``tests/lint_fixtures/<pass>/`` marked
+``bad_*`` carry ``# LINT-EXPECT <pass>`` trailing comments on exactly the
+lines the pass must flag; ``good_*`` twins must lint clean.  The walker
+never descends into ``lint_fixtures`` (the corpus exists to *hold*
+violations), so these tests lint the fixtures explicitly — and the final
+test asserts the real repo tree is clean end to end.
+"""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.tools.lint import (FileContext, LintError, Violation, lint_file,
+                              run_lint, select_passes)
+from repro.tools.lint.core import SKIP_DIRS, iter_python_files
+from repro.tools.lint.passes.donate_safety import DonateSafetyPass
+from repro.tools.lint.passes.host_sync import HostSyncPass
+from repro.tools.lint.passes.kernel_contract import KernelContractPass
+from repro.tools.lint.passes.prng_discipline import PrngDisciplinePass
+from repro.tools.lint.passes.retrace_hazard import RetraceHazardPass
+from repro.tools.lint.reporter import render_human, render_json
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = REPO / "tests" / "lint_fixtures"
+
+PASS_BY_DIR = {
+    "donate_safety": DonateSafetyPass,
+    "retrace_hazard": RetraceHazardPass,
+    "prng_discipline": PrngDisciplinePass,
+    "host_sync": HostSyncPass,
+}
+
+
+def expected_lines(path: Path):
+    return {i for i, line in enumerate(path.read_text().splitlines(), 1)
+            if "LINT-EXPECT" in line}
+
+
+def run_pass(path: Path, pass_cls):
+    """Per-file or project pass, suppressions honored."""
+    ctx = FileContext.parse(str(path))
+    p = pass_cls()
+    vios = p.check_file(ctx) + p.check_project([ctx], None)
+    return sorted(v for v in vios if not ctx.suppressed(v))
+
+
+def fixture_files(kind):
+    out = []
+    for d, cls in PASS_BY_DIR.items():
+        for f in sorted((FIXTURES / d).rglob(f"{kind}_*.py")):
+            out.append(pytest.param(f, cls, id=f"{d}/{f.name}"))
+    return out
+
+
+@pytest.mark.parametrize("path,pass_cls", fixture_files("bad"))
+def test_bad_fixtures_flagged_at_expected_lines(path, pass_cls):
+    want = expected_lines(path)
+    assert want, f"fixture {path} has no LINT-EXPECT markers"
+    got = {v.line for v in run_pass(path, pass_cls)}
+    assert got == want, (f"{path.name}: expected lines {sorted(want)}, "
+                         f"got {sorted(got)}")
+
+
+@pytest.mark.parametrize("path,pass_cls", fixture_files("good"))
+def test_good_fixtures_clean(path, pass_cls):
+    vios = run_pass(path, pass_cls)
+    assert vios == [], "\n".join(v.format() for v in vios)
+
+
+# ---------------------------------------------------------------------------
+# kernel-contract: project pass over miniature repo trees
+# ---------------------------------------------------------------------------
+
+def test_kernel_contract_bad_tree():
+    root = FIXTURES / "kernel_contract" / "bad_tree"
+    vios = KernelContractPass().check_project([], root=root)
+    msgs = [v.message for v in vios]
+    assert any("missing ref.py" in m for m in msgs)
+    assert any("private 'default_interpret'" in m for m in msgs)
+    assert any("does not import" in m for m in msgs)
+    assert any("ref oracle" in m for m in msgs)
+    assert all(v.path.startswith(str(root)) for v in vios)
+
+
+def test_kernel_contract_good_tree():
+    root = FIXTURES / "kernel_contract" / "good_tree"
+    vios = KernelContractPass().check_project([], root=root)
+    assert vios == [], "\n".join(v.format() for v in vios)
+
+
+# ---------------------------------------------------------------------------
+# suppression + framework plumbing
+# ---------------------------------------------------------------------------
+
+BAD_SRC = (
+    "import jax\n"
+    "\n"
+    "def f(state, batch):\n"
+    "    step = jax.jit(lambda s, b: s, donate_argnums=(0,))\n"
+    "    out = step(state, batch)\n"
+    "    return state, out{}\n"
+)
+
+
+def test_line_suppression():
+    dirty = lint_file("fix.py", src=BAD_SRC.format(""))
+    assert [v.pass_name for v in dirty] == ["donate-safety"]
+    clean = lint_file(
+        "fix.py", src=BAD_SRC.format("  # replint: disable=donate-safety"))
+    assert clean == []
+    wildcard = lint_file("fix.py", src=BAD_SRC.format(
+        "  # replint: disable=all"))
+    assert wildcard == []
+
+
+def test_file_suppression():
+    src = "# replint: disable-file=donate-safety\n" + BAD_SRC.format("")
+    assert lint_file("fix.py", src=src) == []
+    other = "# replint: disable-file=retrace-hazard\n" + BAD_SRC.format("")
+    assert len(lint_file("fix.py", src=other)) == 1
+
+
+def test_unknown_pass_selection_raises():
+    with pytest.raises(LintError, match="unknown pass"):
+        select_passes(["nope"])
+    names = [p.name for p in select_passes(None)]
+    assert names == ["donate-safety", "retrace-hazard", "prng-discipline",
+                     "host-sync-in-hot-path", "kernel-contract"]
+
+
+def test_walker_skips_fixture_corpus():
+    files = iter_python_files([str(REPO / "tests")])
+    assert not any("lint_fixtures" in str(f) for f in files)
+    assert "lint_fixtures" in SKIP_DIRS
+
+
+def test_syntax_error_is_collected_not_fatal(tmp_path):
+    bad = tmp_path / "broken.py"
+    bad.write_text("def oops(:\n")
+    ok = tmp_path / "fine.py"
+    ok.write_text("x = 1\n")
+    violations, files, errors = run_lint([str(tmp_path)])
+    assert len(files) == 2
+    assert len(errors) == 1 and "syntax error" in errors[0]
+    assert violations == []
+
+
+def test_reporters():
+    v = Violation(path="a.py", line=3, col=7, pass_name="donate-safety",
+                  message="boom")
+    human = render_human([v], ["a.py"], [])
+    assert "a.py:3:7: [donate-safety] boom" in human
+    assert "1 violation in 1 files" in human
+    data = json.loads(render_json([v], ["a.py"], ["a parse error"]))
+    assert data["violations"][0]["line"] == 3
+    assert data["files_checked"] == 1
+    assert data["errors"] == ["a parse error"]
+
+
+# ---------------------------------------------------------------------------
+# CLI + the merge gate: the real tree lints clean
+# ---------------------------------------------------------------------------
+
+def _cli(*args):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.tools.lint", *args],
+        cwd=REPO, capture_output=True, text=True,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"})
+
+
+def test_cli_exit_codes():
+    bad = str(FIXTURES / "donate_safety" / "bad_use_after_donate.py")
+    r = _cli(bad)
+    assert r.returncode == 1 and "donate-safety" in r.stdout
+    good = str(FIXTURES / "donate_safety" / "good_rebound.py")
+    r = _cli(good, "--select", "donate-safety")
+    assert r.returncode == 0, r.stdout + r.stderr
+    r = _cli("--list-passes")
+    assert r.returncode == 0
+    for name in ("donate-safety", "retrace-hazard", "prng-discipline",
+                 "host-sync-in-hot-path", "kernel-contract"):
+        assert name in r.stdout
+
+
+def test_cli_json_report():
+    bad = str(FIXTURES / "prng_discipline" / "bad_key_reuse.py")
+    r = _cli(bad, "--json", "--select", "prng-discipline")
+    assert r.returncode == 1
+    data = json.loads(r.stdout)
+    assert data["violations"] and data["files_checked"] == 1
+
+
+def test_repo_lints_clean():
+    """The merge gate: every pass, whole tree, zero violations."""
+    paths = [str(REPO / p) for p in ("src", "tests", "benchmarks",
+                                     "examples")
+             if (REPO / p).is_dir()]
+    violations, files, errors = run_lint(paths)
+    assert errors == []
+    assert len(files) > 100
+    assert violations == [], "\n".join(v.format() for v in violations)

@@ -118,7 +118,7 @@ def test_attention_impl_equivalence(impl):
 def test_banded_swa_equals_direct():
     """The O(S·W) banded prefill must match the O(S²) masked path."""
     cfg = tiny_cfg("dense", window=8)
-    m = build_model(cfg)
+    build_model(cfg)
     params, _ = init_params(cfg, jax.random.key(0))
     toks = jax.random.randint(jax.random.key(6), (2, 32), 0, cfg.vocab_size)
     from repro.models.transformer import forward_lm
@@ -150,7 +150,7 @@ def test_chunked_ce_matches_full():
     """cfg.loss_chunk must not change the loss value or its gradients."""
     from repro.models.transformer import lm_loss
     cfg = tiny_cfg("dense")
-    m = build_model(cfg)
+    build_model(cfg)
     params, _ = init_params(cfg, jax.random.key(0))
     toks = jax.random.randint(jax.random.key(1), (2, 30), 0, cfg.vocab_size)
     batch = {"tokens": toks,

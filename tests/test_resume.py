@@ -5,7 +5,6 @@ import os
 import tempfile
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from helpers import tiny_cfg

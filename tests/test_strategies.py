@@ -1,6 +1,5 @@
 """Unified SyncStrategy runtime: strategy equivalences + comm simulator."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -1,7 +1,6 @@
 """Streaming DiLoCo (fragment-wise staggered sync — paper reference [4])."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from helpers import tiny_cfg
