@@ -194,12 +194,70 @@ def bench_serving(n: int = 24, slots: int = 8, spec_k: int = 9,
     return res
 
 
+def bench_kv_capacity(slots: int = 8, n: int = 10) -> dict:
+    """Quantized-KV capacity arm: the SAME byte budget, a bf16 pool vs an
+    fp8 pool, identical fixed-shape request stream.
+
+    Every request needs exactly ``ceil((plen + max_new) / bs)`` pool
+    blocks, so ``peak_admitted`` is a pure pool-capacity readout: the fp8
+    pool packs ~1.8x the blocks into the budget (narrow payload + f32
+    per-token-per-head scales), and block-granular admission floors that
+    into 2x the concurrently admitted requests at this budget point.
+    Throughput must hold (fp8 within 10% of bf16) or the capacity is free
+    only on paper."""
+    import dataclasses
+    import time
+
+    import jax
+    from repro.configs.base import ModelConfig
+    from repro.models.transformer import (build_model, init_params,
+                                          paged_block_bytes)
+    from repro.serving import Engine, Request
+
+    cfg = ModelConfig(name="bench-kv", num_layers=4, d_model=128,
+                      num_heads=4, num_kv_heads=4, d_ff=512, vocab_size=256)
+    params, _ = init_params(cfg, jax.random.key(0))
+    bs, plen, max_new = 16, 16, 40            # 56 tokens -> 4 blocks/request
+    pool_bytes = 10 * paged_block_bytes(
+        dataclasses.replace(cfg, kv_cache_dtype="bf16"), bs)
+    rng = np.random.default_rng(7)
+
+    def stream():
+        return [Request(rid=i,
+                        prompt=rng.integers(1, 256, size=plen).tolist(),
+                        max_new=max_new)
+                for i in range(n)]
+
+    out = {"pool_bytes": pool_bytes, "blocks_per_request": 4}
+    for arm, kv in (("bf16", "bf16"), ("fp8", "fp8")):
+        acfg = dataclasses.replace(cfg, kv_cache_dtype=kv)
+        eng = Engine(build_model(acfg), params, max_len=64, num_slots=slots,
+                     block_size=bs, pool_bytes=pool_bytes, prefill_chunk=12)
+        eng.run(stream(), use_time=True)                  # warm
+        best = None
+        for _ in range(3):
+            stats = eng.run(stream(), use_time=True)
+            if best is None or stats["wall"] < best["wall"]:
+                best = stats
+        out[arm] = {"tokens_per_s": best["generated"] / best["wall"],
+                    "peak_admitted": best["peak_admitted"],
+                    "num_blocks": eng.kv_report()["num_blocks"],
+                    "bytes_per_block": eng.bytes_per_block,
+                    "kv_pool_dtype": eng.kv_report()["kv_pool_dtype"]}
+    out["admitted_ratio"] = out["fp8"]["peak_admitted"] \
+        / max(out["bf16"]["peak_admitted"], 1)
+    out["tokens_per_s_ratio"] = out["fp8"]["tokens_per_s"] \
+        / max(out["bf16"]["tokens_per_s"], 1e-9)
+    return out
+
+
 def main(n: int = 24, slots: int = 8, small: bool = False) -> None:
     kw = {}
     if small:
         n, slots = 10, 4
         kw["train_steps"] = 40
     res = bench_serving(n=n, slots=slots, **kw)
+    res["kv_capacity"] = bench_kv_capacity(n=6 if small else 10)
     with open("BENCH_serving.json", "w") as f:
         json.dump(res, f, indent=1)
     print("name,us_per_call,derived")
@@ -224,6 +282,19 @@ def main(n: int = 24, slots: int = 8, small: bool = False) -> None:
           f"(acceptance: spec_vs_continuous >= 1.3x)")
     print(f"serving/pallas,0.0,attn_impl={res['attn_impl']} "
           f"mode={res['pallas_mode']} backend={res['backend']}")
+    kv = res["kv_capacity"]
+    for arm in ("bf16", "fp8"):
+        a = kv[arm]
+        print(f"serving/kv_capacity/{arm},0.0,"
+              f"tokens_per_s={a['tokens_per_s']:.1f} "
+              f"peak_admitted={a['peak_admitted']} "
+              f"num_blocks={a['num_blocks']} "
+              f"bytes_per_block={a['bytes_per_block']}")
+    print(f"serving/kv_capacity/ratio,0.0,"
+          f"admitted={kv['admitted_ratio']:.1f}x "
+          f"tokens_per_s={kv['tokens_per_s_ratio']:.2f}x "
+          f"pool_bytes={kv['pool_bytes']} "
+          f"(acceptance: admitted >= 2x, tokens_per_s >= 0.9x)")
 
 
 if __name__ == "__main__":

@@ -1,13 +1,16 @@
 """Codec × strategy × fleet communication grid: bytes, modeled time, loss.
 
-For every wire codec (f32 / bf16 / int8) × sync strategy (blocking DiLoCo /
-streaming fragments / overlapped full delta / pipelined DiLoCoX fragments)
-× fleet (homogeneous / heterogeneous per-worker step clocks) this emits the
-total boundary traffic over a fixed step budget plus the wall-clock the
-event-driven simulator (``repro.launch.comm_sim``) models on the
-production constants (inner step from the analytic roofline at 40% MFU —
-or calibrated from a ``launch.dryrun`` JSON via ``--calibration`` — and
-the ``DCN_BW`` inter-pod boundary).  A DDP f32 row anchors the speedups.
+For every wire codec (f32 / bf16 / int8 / fp8) × sync strategy (blocking
+DiLoCo / streaming fragments / overlapped full delta / pipelined DiLoCoX
+fragments) × fleet (homogeneous / heterogeneous per-worker step clocks)
+this emits the total boundary traffic over a fixed step budget plus the
+wall-clock the event-driven simulator (``repro.launch.comm_sim``) models
+on the production constants (inner step from the analytic roofline at 40%
+MFU — or calibrated from a ``launch.dryrun`` JSON via ``--calibration`` —
+and the ``DCN_BW`` inter-pod boundary).  A DDP f32 row anchors the
+speedups, and compressed-DDP rows (per-step update exchange through the
+int8 / fp8 codecs) anchor the "just compress the gradients" alternative
+DiLoCo's H-step cadence is competing with.
 
 The ``loss-impact`` rows then actually TRAIN a tiny model under a sample
 of (codec, strategy) combos on identical data and report the final loss
@@ -25,8 +28,9 @@ from typing import Optional
 
 from repro.configs import get_config
 from repro.configs.base import DiLoCoConfig, TRAIN_4K
-from repro.core.sync import (DDPSync, DiLoCoSync, OverlappedSync,
-                             PipelinedSync, StreamingSync)
+from repro.core.sync import (CompressedDDPSync, DDPSync, DiLoCoSync,
+                             OverlappedSync, PipelinedSync, StreamingSync,
+                             compressed_ddp_config)
 from repro.core.transport import wire_width
 from repro.launch.analytic import flops_per_device
 from repro.launch.comm_sim import (CommCalibration, default_comm_model,
@@ -34,7 +38,8 @@ from repro.launch.comm_sim import (CommCalibration, default_comm_model,
                                    simulate_heterogeneous, simulate_schedule)
 
 CHIPS_PER_WORKER = 256   # one pod per DiLoCo worker
-CODECS = ("float32", "bfloat16", "int8")
+CODECS = ("float32", "bfloat16", "int8", "fp8")
+DDP_COMPRESS = ("int8", "fp8")   # per-step compressed-DDP anchor arms
 # heterogeneous fleet: relative per-worker step-time multipliers (one pod
 # throttled 1.5x, a couple mildly slow — a realistic mixed-generation fleet)
 HET_SPEEDS = (1.0, 1.0, 1.0, 1.0, 1.05, 1.1, 1.25, 1.5)
@@ -88,6 +93,16 @@ def rows_for(arch_id: str, steps: int = 500, h: int = 100,
     ddp.update(arch=arch_id, codec="f32", strategy="ddp",
                fleet="homogeneous", params=n, step_time_s=step_time)
     out.append(ddp)
+    for gc in DDP_COMPRESS:
+        ccfg = compressed_ddp_config(dataclasses.replace(
+            DiLoCoConfig(num_workers=k), grad_compress=gc))
+        events = _scale_events(
+            CompressedDDPSync().payload_schedule(n, steps, ccfg), byte_scale)
+        r = simulate_schedule(events, steps, step_time, comm)
+        r.update(arch=arch_id, codec=events[0].codec, strategy="ddp_compressed",
+                 fleet="homogeneous", params=n, step_time_s=step_time,
+                 speedup_vs_ddp=ddp["wall_clock_s"] / r["wall_clock_s"])
+        out.append(r)
     f32_diloco_bytes = None
     for codec in CODECS:
         dcfg = DiLoCoConfig(num_workers=k, h_inner_steps=h,
@@ -125,6 +140,9 @@ LOSS_COMBOS = (
     ("int8", "blocking"),
     ("int8", "overlapped"),
     ("int8", "pipelined"),
+    ("fp8", "blocking"),
+    ("fp8", "pipelined"),
+    ("fp8", "ddp_compressed"),    # per-step compressed-DDP anchor
 )
 
 
@@ -152,9 +170,15 @@ def loss_impact_rows(steps: int = 24, workers: int = 2, h: int = 4):
     rows = []
     base_loss = None
     for codec, sname in LOSS_COMBOS:
-        dcfg = DiLoCoConfig(num_workers=workers, h_inner_steps=h,
-                            delta_dtype=codec)
-        dt = DistTrainer(model.loss, opt, dcfg, strat_by_name[sname])
+        if sname == "ddp_compressed":
+            dcfg = compressed_ddp_config(dataclasses.replace(
+                DiLoCoConfig(num_workers=workers), grad_compress=codec))
+            strat = CompressedDDPSync()
+        else:
+            dcfg = DiLoCoConfig(num_workers=workers, h_inner_steps=h,
+                                delta_dtype=codec)
+            strat = strat_by_name[sname]
+        dt = DistTrainer(model.loss, opt, dcfg, strat)
         state = dt.init(params)
         state, hist = dt.run(state, data, steps)
         final = hist["loss"][-1]

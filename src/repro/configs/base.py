@@ -80,6 +80,12 @@ class ModelConfig:
     # numerics ----------------------------------------------------------------
     param_dtype: str = "float32"
     compute_dtype: str = "float32"   # dry-run overrides to bfloat16
+    kv_cache_dtype: str = ""         # "" = compute dtype; bf16 = narrow cast;
+                                     # int8 | fp8 | fp8_e5m2 = quantized paged
+                                     # pool with per-token-per-head scales
+    fp8_matmul: bool = False         # fp8 per-tile QK^T matmuls in the
+                                     # attention kernels (TPU; CPU/interpret
+                                     # falls back to the full-precision path)
     remat: bool = True
     use_scan: bool = True
     use_pallas: bool = False         # reference jnp path by default (CPU)
@@ -172,11 +178,16 @@ class DiLoCoConfig:
     outer_momentum: float = 0.9       # mu_outer (Nesterov)
     nesterov: bool = True
     # --- beyond-paper knobs ------------------------------------------------
-    delta_dtype: str = "float32"      # float32 | bfloat16 | int8: the outer
-                                      # sync's wire codec (core.transport)
+    delta_dtype: str = "float32"      # float32 | bfloat16 | int8 | fp8 |
+                                      # fp8_e5m2: the outer sync's wire
+                                      # codec (core.transport)
     error_feedback: bool = True       # lossy codecs carry a per-worker
                                       # residual so quantization noise
                                       # cannot bias the outer optimizer
+    grad_compress: str = "none"       # none | int8 | fp8 | fp8_e5m2: DDP-side
+                                      # per-step update compression — routes
+                                      # the everystep exchange through the
+                                      # same codec stack (ddp_compressed)
     drift_aware: bool = False         # drift-weighted averaging (paper §5 future work)
     adaptive_h: bool = False          # adaptive H schedule (paper §5 future work)
     h_min: int = 10

@@ -27,7 +27,8 @@ from repro.core.transport import Transport, make_codec, wire_width
 
 # wire width (bytes/element) of each supported delta payload dtype — a
 # compat view of the transport table for older byte-accounting calls
-DELTA_WIDTH = {d: wire_width(d) for d in ("float32", "bfloat16", "int8")}
+DELTA_WIDTH = {d: wire_width(d)
+               for d in ("float32", "bfloat16", "int8", "fp8", "fp8_e5m2")}
 
 
 class OuterState(NamedTuple):

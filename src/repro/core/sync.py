@@ -7,6 +7,11 @@ in ``repro.core.dist_trainer``) drives vmapped inner steps, and a
 
 * ``DDPSync``        — synchronize every step (K=1 + the global batch, the
                        paper's "Standard DDP" baseline),
+* ``CompressedDDPSync`` — K workers exchanging their per-step parameter
+                       updates through a lossy codec (int8/fp8) with
+                       error-feedback residuals held by the runner; with a
+                       lossless codec it IS per-step delta-averaged DDP,
+
 * ``DiLoCoSync``     — full delta exchange every H steps (paper §2.2),
                        pluggable H schedule incl. ``AdaptiveH``,
 * ``StreamingSync``  — fragment-wise staggered exchange every H/F steps
@@ -174,6 +179,62 @@ class DDPSync(SyncStrategy):
         b = 4 * n_params  # fp32 grads, every step, blocking
         return [SyncEvent(step=s, bytes_per_worker=b, kind="grads",
                           apply_step=s) for s in range(num_steps)]
+
+
+# ---------------------------------------------------------------------------
+# Compressed DDP — per-step update exchange through a lossy codec
+# ---------------------------------------------------------------------------
+
+def compressed_ddp_config(cfg: DiLoCoConfig) -> DiLoCoConfig:
+    """Fold ``cfg.grad_compress`` into a per-step delta-exchange config.
+
+    H=1 with an identity outer update (lr=1, no momentum) makes the outer
+    step exactly "average the workers' one-step parameter updates" — for
+    SGD inner optimizers that is literally gradient averaging, and for
+    AdamW/Muon it is DDP on the *effective update*, which is the quantity
+    gradient-compression schemes actually care about.  The codec (and its
+    error-feedback residual, held by the sync runner) then rides the same
+    transport stack as every DiLoCo variant.
+    """
+    codec = cfg.grad_compress if cfg.grad_compress not in ("", "none") \
+        else "float32"
+    return dataclasses.replace(
+        cfg, strategy="ddp_compressed", h_inner_steps=1, outer_lr=1.0,
+        outer_momentum=0.0, nesterov=False, delta_dtype=codec)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressedDDPSync(SyncStrategy):
+    """DDP with compressed per-step exchange: K workers average their
+    one-step parameter updates through the configured codec every step.
+    Build the config with ``compressed_ddp_config`` — the identity outer
+    update (H=1, lr=1, mu=0) is what makes this DDP rather than DiLoCo;
+    ``bind`` rejects configs that would silently change the semantics.
+    Lossless codec => bitwise per-step delta-averaged DDP; int8/fp8 adds
+    the quantizer + error feedback, the second anchor the benchmarks
+    compare DiLoCo's bandwidth savings against."""
+    name = "ddp_compressed"
+
+    def bind(self, engine, params, donate: bool = True) -> SyncRunner:
+        cfg = engine.cfg
+        if cfg.outer_lr != 1.0 or cfg.outer_momentum != 0.0 or cfg.nesterov:
+            raise ValueError(
+                "CompressedDDPSync needs the identity outer update "
+                "(outer_lr=1, outer_momentum=0, nesterov=False) — build the "
+                "config with sync.compressed_ddp_config(); got "
+                f"lr={cfg.outer_lr} mu={cfg.outer_momentum} "
+                f"nesterov={cfg.nesterov}")
+        return _DiLoCoRunner(engine, params, FixedH(1), donate)
+
+    def payload_schedule(self, n_params, num_steps, cfg):
+        codec = make_codec(cfg.delta_dtype if cfg.strategy == "ddp_compressed"
+                           else (cfg.grad_compress
+                                 if cfg.grad_compress not in ("", "none")
+                                 else "float32"))
+        b = codec.schedule_bytes(n_params)
+        return [SyncEvent(step=s, bytes_per_worker=b, kind="grads",
+                          apply_step=s, codec=codec.name)
+                for s in range(num_steps)]
 
 
 # ---------------------------------------------------------------------------
@@ -568,7 +629,8 @@ class PipelinedSync(SyncStrategy):
 # Config-driven construction
 # ---------------------------------------------------------------------------
 
-STRATEGIES = ("ddp", "diloco", "streaming", "overlapped", "pipelined")
+STRATEGIES = ("ddp", "ddp_compressed", "diloco", "streaming", "overlapped",
+              "pipelined")
 
 
 def make_strategy(cfg: DiLoCoConfig, h_schedule: Optional[HSchedule] = None
@@ -576,6 +638,8 @@ def make_strategy(cfg: DiLoCoConfig, h_schedule: Optional[HSchedule] = None
     """Build the strategy the ``DiLoCoConfig`` knobs describe."""
     if cfg.strategy == "ddp":
         return DDPSync()
+    if cfg.strategy == "ddp_compressed":
+        return CompressedDDPSync()
     if cfg.strategy == "diloco":
         return DiLoCoSync(h_schedule=h_schedule)
     if cfg.strategy == "streaming":

@@ -13,7 +13,8 @@ this module makes the wire explicit.  A sync round now flows
 Wire format of an ``OuterPayload``
 ----------------------------------
 * ``data``    — pytree mirroring the delta tree, leaves in the codec's
-  wire dtype (f32 / bf16 / int8), leading K worker dim intact.
+  wire dtype (f32 / bf16 / int8 / fp8 e4m3 / fp8 e5m2), leading K worker
+  dim intact.
 * ``scales``  — None, or a pytree of per-tensor-per-worker f32 scales
   shaped ``(K, 1, ..., 1)`` (keepdims over every non-worker axis).  These
   4 bytes/tensor/worker ride along with the payload (negligible next to
@@ -48,12 +49,24 @@ import jax.numpy as jnp
 
 # wire width (bytes/element) per codec name — the single source of truth
 # for every byte-accounting path (schedules, simulator, benchmarks)
-WIRE_WIDTH = {"f32": 4, "bf16": 2, "int8": 1}
+WIRE_WIDTH = {"f32": 4, "bf16": 2, "int8": 1, "fp8": 1, "fp8_e5m2": 1}
 
-# config spellings -> canonical codec names
+# config spellings -> canonical codec names ("fp8" is the e4m3 flavor —
+# more mantissa, the right trade for error-fed deltas; e5m2 trades it
+# back for range)
 _ALIASES = {"float32": "f32", "f32": "f32",
             "bfloat16": "bf16", "bf16": "bf16",
-            "int8": "int8"}
+            "int8": "int8",
+            "fp8": "fp8", "float8": "fp8", "e4m3": "fp8",
+            "fp8_e4m3": "fp8",
+            "e5m2": "fp8_e5m2", "fp8_e5m2": "fp8_e5m2"}
+
+# codec name -> (wire dtype, bitcast carrier) for Transport.ship's
+# narrow-dtype games: the payload crosses the replicate hop as the
+# carrier integer type so XLA cannot widen the wire
+_WIRE_BITCAST = {"bf16": ("bfloat16", "uint16"),
+                 "fp8": ("float8_e4m3fn", "uint8"),
+                 "fp8_e5m2": ("float8_e5m2", "uint8")}
 
 
 @dataclasses.dataclass
@@ -136,27 +149,34 @@ class BF16Cast(Codec):
 
 
 @dataclasses.dataclass(frozen=True)
-class Int8Symmetric(Codec):
-    """Per-tensor-per-worker symmetric int8: q = round(e / s), s = amax/127.
+class QuantizedCodec(Codec):
+    """Shared machinery for symmetric narrow-dtype codecs: q = e / s
+    (rounded for int targets), s = amax / QMAX, per-tensor-per-worker.
 
     With a residual, encode runs the FUSED quantize+residual-update Pallas
     kernel (one pass produces q, new_residual, and the scales); without,
     the same kernel runs and the residual output is dropped.
-    ``use_kernel=False`` selects the pure-jnp oracle instead.
+    ``use_kernel=False`` selects the pure-jnp oracle instead.  Subclasses
+    pick the target via ``qdtype`` (a ``kernels.quantize`` target name).
     """
-    name = "int8"
     lossy = True
     use_kernel: bool = True
+
+    @property
+    def qdtype(self) -> str:
+        return "int8"
 
     def _quant(self, e, residual):
         # residual leaves may be None (no error feedback): tree.map flattens
         # up to e's structure, so a None in a leaf slot passes through
+        qd = self.qdtype
         if self.use_kernel:
             from repro.kernels.quantize import quantize_ef
-            return jax.tree.map(lambda d, r: quantize_ef(d, r), e, residual)
+            return jax.tree.map(lambda d, r: quantize_ef(d, r, dtype=qd),
+                                e, residual)
         from repro.kernels.quantize import reference_quantize_ef
-        return jax.tree.map(lambda d, r: reference_quantize_ef(d, r), e,
-                            residual)
+        return jax.tree.map(
+            lambda d, r: reference_quantize_ef(d, r, dtype=qd), e, residual)
 
     def encode(self, delta, residual=None, kind: str = "delta",
                fragment: int = -1):
@@ -181,8 +201,36 @@ class Int8Symmetric(Codec):
         return jax.tree.map(reference_dequantize, data, scales)
 
 
+@dataclasses.dataclass(frozen=True)
+class Int8Symmetric(QuantizedCodec):
+    """Per-tensor-per-worker symmetric int8: q = round(e / s), s = amax/127."""
+    name = "int8"
+
+
+@dataclasses.dataclass(frozen=True)
+class Fp8Codec(QuantizedCodec):
+    """Per-tensor-per-worker scaled fp8 cast: q = cast(e / s), s = amax/QMAX.
+
+    ``flavor`` picks the element type: "e4m3" (default — 3 mantissa bits,
+    the Streaming-DiLoCo "outer gradients survive fp8" regime) or "e5m2"
+    (2 mantissa bits, wider exponent).  Values are clipped to ±QMAX before
+    the cast: e4m3fn has no inf encoding, so an unclipped overflow would
+    reach the wire as NaN.
+    """
+    flavor: str = "e4m3"
+
+    @property
+    def name(self) -> str:                  # type: ignore[override]
+        return "fp8" if self.flavor == "e4m3" else "fp8_e5m2"
+
+    @property
+    def qdtype(self) -> str:
+        return "fp8_e4m3" if self.flavor == "e4m3" else "fp8_e5m2"
+
+
 def make_codec(dtype: str, use_kernel: bool = True) -> Codec:
-    """Codec for a config ``delta_dtype`` spelling (float32/bfloat16/int8)."""
+    """Codec for a config ``delta_dtype`` spelling
+    (float32/bfloat16/int8/fp8/e5m2 and friends)."""
     name = _ALIASES.get(dtype)
     if name == "f32":
         return F32Passthrough()
@@ -190,6 +238,10 @@ def make_codec(dtype: str, use_kernel: bool = True) -> Codec:
         return BF16Cast()
     if name == "int8":
         return Int8Symmetric(use_kernel=use_kernel)
+    if name == "fp8":
+        return Fp8Codec(use_kernel=use_kernel, flavor="e4m3")
+    if name == "fp8_e5m2":
+        return Fp8Codec(use_kernel=use_kernel, flavor="e5m2")
     raise ValueError(f"unknown delta dtype {dtype!r}; "
                      f"expected one of {sorted(_ALIASES)}")
 
@@ -210,23 +262,26 @@ class Transport:
         all-gather on a pod mesh, identity on a single device.
 
         The narrow-dtype games mirror what ``average_deltas`` did inline:
-        bf16 is bitcast to u16 around the exchange and every non-f32
-        payload sits behind an optimization barrier, so XLA cannot fold
-        the dequant converts into the gather's producer and move
-        full-width f32 on the wire.
+        bf16 is bitcast to u16 (fp8 flavors to u8) around the exchange and
+        every non-f32 payload sits behind an optimization barrier, so XLA
+        cannot fold the dequant converts into the gather's producer and
+        move full-width f32 on the wire.
         """
         if self.replicate_fn is None:
             return payload
         data = payload.data
-        if payload.codec == "bf16":
+        cast = _WIRE_BITCAST.get(payload.codec)
+        if cast is not None:
+            carrier = jnp.dtype(cast[1])
             data = jax.tree.map(
-                lambda x: jax.lax.bitcast_convert_type(x, jnp.uint16), data)
+                lambda x: jax.lax.bitcast_convert_type(x, carrier), data)
         if payload.codec != "f32":
             data = jax.lax.optimization_barrier(data)
         data = self.replicate_fn(data)
-        if payload.codec == "bf16":
+        if cast is not None:
+            wire = jnp.dtype(cast[0])
             data = jax.tree.map(
-                lambda x: jax.lax.bitcast_convert_type(x, jnp.bfloat16), data)
+                lambda x: jax.lax.bitcast_convert_type(x, wire), data)
         scales = payload.scales
         if scales is not None:
             scales = self.replicate_fn(scales)

@@ -1,14 +1,22 @@
-from repro.kernels.decode_attention.ops import (decode_attention,
-                                                default_interpret,
-                                                paged_decode_attention,
-                                                paged_verify_attention,
-                                                pallas_mode)
+from repro.kernels.decode_attention.ops import (
+    decode_attention, default_interpret, paged_decode_attention,
+    paged_decode_attention_dequant, paged_verify_attention,
+    paged_verify_attention_dequant, pallas_mode)
 from repro.kernels.decode_attention.ref import (
     reference_decode_attention, reference_paged_decode_attention,
-    reference_paged_verify_attention)
+    reference_paged_decode_attention_dequant,
+    reference_paged_decode_attention_fp8,
+    reference_paged_verify_attention,
+    reference_paged_verify_attention_dequant,
+    reference_paged_verify_attention_fp8)
 
 __all__ = ["decode_attention", "paged_decode_attention",
-           "paged_verify_attention", "reference_decode_attention",
+           "paged_decode_attention_dequant", "paged_verify_attention",
+           "paged_verify_attention_dequant", "reference_decode_attention",
            "reference_paged_decode_attention",
+           "reference_paged_decode_attention_dequant",
+           "reference_paged_decode_attention_fp8",
            "reference_paged_verify_attention",
+           "reference_paged_verify_attention_dequant",
+           "reference_paged_verify_attention_fp8",
            "default_interpret", "pallas_mode"]

@@ -25,8 +25,19 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import qk_dot_fp8
+
 NEG_INF = -1e30
 DEFAULT_BK = 256
+
+
+def _qk(q, k, *, fp8: bool, narrow_dot: bool):
+    """The QK^T contraction every kernel body below shares: f32 dot, or
+    the per-row fp8 tile path (``common.qk_dot_fp8``) behind ``fp8``."""
+    if fp8:
+        return qk_dot_fp8(q, k, narrow_dot=narrow_dot)
+    return jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)
 
 
 def _decode_kernel(qpos_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
@@ -70,7 +81,8 @@ def _decode_kernel(qpos_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
 
 def _paged_decode_kernel(tab_ref, qpos_ref, q_ref, k_ref, v_ref, o_ref,
                          m_scr, l_scr, acc_scr, *, scale: float, window: int,
-                         bs: int, n_b: int):
+                         bs: int, n_b: int, fp8: bool = False,
+                         narrow_dot: bool = False):
     s_idx = pl.program_id(0)
     ib = pl.program_id(2)
 
@@ -86,8 +98,7 @@ def _paged_decode_kernel(tab_ref, qpos_ref, q_ref, k_ref, v_ref, o_ref,
     q_pos = qpos_ref[s_idx]                           # scalar int32
     mapped = tab_ref[s_idx, ib] >= 0                  # −1 = unmapped block
 
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale
+    s = _qk(q, k, fp8=fp8, narrow_dot=narrow_dot) * scale
     # blocks hold contiguous positions: logical position = ib*bs + lane
     k_pos = ib * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)[0]
     ok = (k_pos <= q_pos) & mapped
@@ -110,9 +121,108 @@ def _paged_decode_kernel(tab_ref, qpos_ref, q_ref, k_ref, v_ref, o_ref,
                        / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
 
 
+def _paged_decode_dequant_kernel(tab_ref, qpos_ref, q_ref, k_ref, v_ref,
+                                 ks_ref, vs_ref, o_ref, m_scr, l_scr,
+                                 acc_scr, *, scale: float, window: int,
+                                 bs: int, n_b: int):
+    """Quantized-pool variant of ``_paged_decode_kernel``: the K/V tiles
+    arrive in the pool's narrow dtype (int8 / fp8) and are dequantized
+    on load with the per-token-per-head scale tiles riding the same
+    block-table index map — the wide cache never exists in VMEM either."""
+    s_idx = pl.program_id(0)
+    ib = pl.program_id(2)
+
+    @pl.when(ib == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)               # (G, D)
+    ks = ks_ref[0, :, 0]                              # (bs,) f32
+    vs = vs_ref[0, :, 0]
+    k = k_ref[0, :, 0].astype(jnp.float32) * ks[:, None]   # (bs, D)
+    v = v_ref[0, :, 0].astype(jnp.float32) * vs[:, None]
+    q_pos = qpos_ref[s_idx]                           # scalar int32
+    mapped = tab_ref[s_idx, ib] >= 0                  # −1 = unmapped block
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    k_pos = ib * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)[0]
+    ok = (k_pos <= q_pos) & mapped
+    if window > 0:
+        ok &= (q_pos - k_pos) < window
+    s = jnp.where(ok[None, :], s, NEG_INF)            # (G, bs)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ib == n_b - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def _paged_verify_dequant_kernel(tab_ref, start_ref, ntok_ref, q_ref, k_ref,
+                                 v_ref, ks_ref, vs_ref, o_ref, m_scr, l_scr,
+                                 acc_scr, *, scale: float, window: int,
+                                 bs: int, n_b: int, T: int, G: int):
+    """Quantized-pool variant of ``_paged_verify_kernel`` (see
+    ``_paged_decode_dequant_kernel`` for the dequant-on-load contract)."""
+    s_idx = pl.program_id(0)
+    ib = pl.program_id(2)
+
+    @pl.when(ib == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0].astype(jnp.float32).reshape(T * G, -1)   # (T*G, D)
+    ks = ks_ref[0, :, 0]                              # (bs,) f32
+    vs = vs_ref[0, :, 0]
+    k = k_ref[0, :, 0].astype(jnp.float32) * ks[:, None]   # (bs, D)
+    v = v_ref[0, :, 0].astype(jnp.float32) * vs[:, None]
+    start = start_ref[s_idx]                          # scalar int32
+    n_tok = ntok_ref[s_idx]                           # scalar int32
+    mapped = tab_ref[s_idx, ib] >= 0                  # −1 = unmapped block
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    row_t = jax.lax.broadcasted_iota(jnp.int32, (T * G, 1), 0) // G
+    q_pos = start + row_t                             # (T*G, 1)
+    valid = (start >= 0) & (row_t < n_tok)
+    k_pos = ib * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    ok = valid & mapped & (k_pos <= q_pos)
+    if window > 0:
+        ok &= (q_pos - k_pos) < window
+    s = jnp.where(ok, s, NEG_INF)                     # (T*G, bs)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ib == n_b - 1)
+    def _fin():
+        o_ref[0, :, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                          ).reshape(T, G, -1).astype(o_ref.dtype)
+
+
 def _paged_verify_kernel(tab_ref, start_ref, ntok_ref, q_ref, k_ref, v_ref,
                          o_ref, m_scr, l_scr, acc_scr, *, scale: float,
-                         window: int, bs: int, n_b: int, T: int, G: int):
+                         window: int, bs: int, n_b: int, T: int, G: int,
+                         fp8: bool = False, narrow_dot: bool = False):
     """Multi-query-per-slot variant: the q tile holds T query tokens per
     slot (speculative verification / multi-token prefill), occupying
     contiguous positions ``start .. start + n - 1``.  Rows are (T, G)
@@ -135,8 +245,7 @@ def _paged_verify_kernel(tab_ref, start_ref, ntok_ref, q_ref, k_ref, v_ref,
     n_tok = ntok_ref[s_idx]                           # scalar int32
     mapped = tab_ref[s_idx, ib] >= 0                  # −1 = unmapped block
 
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale
+    s = _qk(q, k, fp8=fp8, narrow_dot=narrow_dot) * scale
     # row r of the flattened tile is query token t = r // G at absolute
     # position start + t; tokens beyond n_tok are padding (fully masked)
     row_t = jax.lax.broadcasted_iota(jnp.int32, (T * G, 1), 0) // G
@@ -165,7 +274,7 @@ def _paged_verify_kernel(tab_ref, start_ref, ntok_ref, q_ref, k_ref, v_ref,
 
 def paged_verify_attention_fwd(q, k_pool, v_pool, block_tables, start_pos,
                                n_tokens, *, window: int = 0,
-                               interpret: bool = True):
+                               interpret: bool = True, fp8: bool = False):
     """Multi-query block-table-indexed decode attention (speculative
     verification): each slot attends with T query tokens at contiguous
     positions ``start_pos[s] + t`` (t < ``n_tokens[s]``; the rest are
@@ -182,7 +291,8 @@ def paged_verify_attention_fwd(q, k_pool, v_pool, block_tables, start_pos,
     MB = block_tables.shape[1]
     scale = 1.0 / math.sqrt(D)
     kernel = functools.partial(_paged_verify_kernel, scale=scale,
-                               window=window, bs=bs, n_b=MB, T=T, G=G)
+                               window=window, bs=bs, n_b=MB, T=T, G=G,
+                               fp8=fp8, narrow_dot=fp8 and not interpret)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(S, KV, MB),
@@ -212,8 +322,108 @@ def paged_verify_attention_fwd(q, k_pool, v_pool, block_tables, start_pos,
     )(block_tables, start_pos, n_tokens, q, k_pool, v_pool)
 
 
+def paged_verify_attention_dequant_fwd(q, k_pool, v_pool, k_scale, v_scale,
+                                       block_tables, start_pos, n_tokens, *,
+                                       window: int = 0,
+                                       interpret: bool = True):
+    """Quantized-pool multi-query paged decode attention: ``k_pool`` /
+    ``v_pool`` hold the narrow payload (int8 / fp8) and ``k_scale`` /
+    ``v_scale`` the (NB, bs, KV) f32 per-token-per-head amax scales;
+    tiles are dequantized on load inside the kernel.  Shapes otherwise
+    as ``paged_verify_attention_fwd``."""
+    S, T, KV, G, D = q.shape
+    NB, bs = k_pool.shape[:2]
+    MB = block_tables.shape[1]
+    scale = 1.0 / math.sqrt(D)
+    kernel = functools.partial(_paged_verify_dequant_kernel, scale=scale,
+                               window=window, bs=bs, n_b=MB, T=T, G=G)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(S, KV, MB),
+        in_specs=[
+            pl.BlockSpec((1, T, 1, G, D),
+                         lambda s, h, ib, tab, st, nt: (s, 0, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda s, h, ib, tab, st, nt:
+                         (jnp.maximum(tab[s, ib], 0), 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda s, h, ib, tab, st, nt:
+                         (jnp.maximum(tab[s, ib], 0), 0, h, 0)),
+            pl.BlockSpec((1, bs, 1),
+                         lambda s, h, ib, tab, st, nt:
+                         (jnp.maximum(tab[s, ib], 0), 0, h)),
+            pl.BlockSpec((1, bs, 1),
+                         lambda s, h, ib, tab, st, nt:
+                         (jnp.maximum(tab[s, ib], 0), 0, h)),
+        ],
+        out_specs=pl.BlockSpec((1, T, 1, G, D),
+                               lambda s, h, ib, tab, st, nt: (s, 0, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((T * G, 1), jnp.float32),
+            pltpu.VMEM((T * G, 1), jnp.float32),
+            pltpu.VMEM((T * G, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((S, T, KV, G, D), q.dtype),
+        interpret=interpret,
+    )(block_tables, start_pos, n_tokens, q, k_pool, v_pool,
+      k_scale, v_scale)
+
+
+def paged_decode_attention_dequant_fwd(q, k_pool, v_pool, k_scale, v_scale,
+                                       block_tables, q_pos, *,
+                                       window: int = 0,
+                                       interpret: bool = True):
+    """Quantized-pool single-token paged decode attention (see
+    ``paged_verify_attention_dequant_fwd`` for the scale contract).
+    Shapes otherwise as ``paged_decode_attention_fwd``."""
+    S, KV, G, D = q.shape
+    NB, bs = k_pool.shape[:2]
+    MB = block_tables.shape[1]
+    scale = 1.0 / math.sqrt(D)
+    kernel = functools.partial(_paged_decode_dequant_kernel, scale=scale,
+                               window=window, bs=bs, n_b=MB)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(S, KV, MB),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D),
+                         lambda s, h, ib, tab, qp: (s, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda s, h, ib, tab, qp:
+                         (jnp.maximum(tab[s, ib], 0), 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda s, h, ib, tab, qp:
+                         (jnp.maximum(tab[s, ib], 0), 0, h, 0)),
+            pl.BlockSpec((1, bs, 1),
+                         lambda s, h, ib, tab, qp:
+                         (jnp.maximum(tab[s, ib], 0), 0, h)),
+            pl.BlockSpec((1, bs, 1),
+                         lambda s, h, ib, tab, qp:
+                         (jnp.maximum(tab[s, ib], 0), 0, h)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda s, h, ib, tab, qp: (s, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((S, KV, G, D), q.dtype),
+        interpret=interpret,
+    )(block_tables, q_pos, q, k_pool, v_pool, k_scale, v_scale)
+
+
 def paged_decode_attention_fwd(q, k_pool, v_pool, block_tables, q_pos, *,
-                               window: int = 0, interpret: bool = True):
+                               window: int = 0, interpret: bool = True,
+                               fp8: bool = False):
     """Block-table-indexed decode attention over a shared paged KV pool.
 
     q: (S, KV, G, D) one token per active slot; k_pool/v_pool: (NB, bs, KV, D)
@@ -232,7 +442,8 @@ def paged_decode_attention_fwd(q, k_pool, v_pool, block_tables, q_pos, *,
     MB = block_tables.shape[1]
     scale = 1.0 / math.sqrt(D)
     kernel = functools.partial(_paged_decode_kernel, scale=scale,
-                               window=window, bs=bs, n_b=MB)
+                               window=window, bs=bs, n_b=MB,
+                               fp8=fp8, narrow_dot=fp8 and not interpret)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(S, KV, MB),

@@ -7,6 +7,16 @@ import jax
 import jax.numpy as jnp
 
 
+def _fp8_rows(x):
+    """Quantize-dequantize each row of ``x`` (..., D) through fp8_e4m3
+    with a per-row amax scale — the oracle-side view of the kernels'
+    ``fp8=True`` QK^T tiles (scales factor out of the dot exactly)."""
+    from repro.kernels.quantize import reference_quantize_axis
+    xq, s = reference_quantize_axis(x.astype(jnp.float32), axis=-1,
+                                    dtype="fp8_e4m3")
+    return (xq.astype(jnp.float32) * s).astype(x.dtype)
+
+
 def reference_decode_attention(q, k, v, pos, q_pos, window: int = 0):
     """q: (B,KV,G,D); k/v: (B,KV,S,D); pos: (B,S); q_pos: (B,)."""
     D = q.shape[-1]
@@ -50,6 +60,52 @@ def reference_paged_verify_attention(q, k_pool, v_pool, block_tables,
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgts,bshd->bthgd", p, v.astype(jnp.float32))
     return out.astype(q.dtype)
+
+
+def reference_paged_decode_attention_fp8(q, k_pool, v_pool, block_tables,
+                                         q_pos, window: int = 0):
+    """Oracle for the single-token paged kernel's ``fp8=True`` QK^T path:
+    Q rows and pooled K rows pass through per-row fp8 quantization before
+    the plain oracle; V is untouched (the PV matmul stays f32)."""
+    return reference_paged_decode_attention(
+        _fp8_rows(q), _fp8_rows(k_pool), v_pool, block_tables, q_pos,
+        window=window)
+
+
+def reference_paged_verify_attention_fp8(q, k_pool, v_pool, block_tables,
+                                         start_pos, n_tokens,
+                                         window: int = 0):
+    """Oracle for the multi-query paged kernel's ``fp8=True`` QK^T path
+    (see ``reference_paged_decode_attention_fp8``)."""
+    return reference_paged_verify_attention(
+        _fp8_rows(q), _fp8_rows(k_pool), v_pool, block_tables, start_pos,
+        n_tokens, window=window)
+
+
+def reference_paged_verify_attention_dequant(q, k_pool, v_pool, k_scale,
+                                             v_scale, block_tables, start_pos,
+                                             n_tokens, window: int = 0):
+    """Quantized-pool oracle: dequantize the narrow (int8 / fp8) pool with
+    its (NB, bs, KV) f32 per-token-per-head scales, then run the plain
+    multi-query oracle.  The Pallas kernel fuses the dequant into the tile
+    load; this materializes the wide pool instead — same math."""
+    k = k_pool.astype(jnp.float32) * k_scale[..., None]
+    v = v_pool.astype(jnp.float32) * v_scale[..., None]
+    return reference_paged_verify_attention(
+        q, k.astype(q.dtype), v.astype(q.dtype), block_tables, start_pos,
+        n_tokens, window=window)
+
+
+def reference_paged_decode_attention_dequant(q, k_pool, v_pool, k_scale,
+                                             v_scale, block_tables, q_pos,
+                                             window: int = 0):
+    """Quantized-pool oracle for the single-token paged kernel (see
+    ``reference_paged_verify_attention_dequant`` for the scale contract)."""
+    k = k_pool.astype(jnp.float32) * k_scale[..., None]
+    v = v_pool.astype(jnp.float32) * v_scale[..., None]
+    return reference_paged_decode_attention(
+        q, k.astype(q.dtype), v.astype(q.dtype), block_tables, q_pos,
+        window=window)
 
 
 def reference_paged_decode_attention(q, k_pool, v_pool, block_tables, q_pos,

@@ -1,4 +1,6 @@
 from repro.kernels.flash_attention.ops import flash_attention
-from repro.kernels.flash_attention.ref import reference_attention
+from repro.kernels.flash_attention.ref import (reference_attention,
+                                               reference_attention_fp8)
 
-__all__ = ["flash_attention", "reference_attention"]
+__all__ = ["flash_attention", "reference_attention",
+           "reference_attention_fp8"]

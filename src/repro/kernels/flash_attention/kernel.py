@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import qk_dot_fp8
+
 DEFAULT_BQ = 128
 DEFAULT_BK = 128
 NEG_INF = -1e30
@@ -34,7 +36,8 @@ NEG_INF = -1e30
 
 def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                  scale: float, causal: bool, window: Optional[int],
-                 bq: int, bk: int, n_k_blocks: int):
+                 bq: int, bk: int, n_k_blocks: int,
+                 fp8: bool = False, narrow_dot: bool = False):
     iq = pl.program_id(2)
     ik = pl.program_id(3)
 
@@ -63,9 +66,12 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         q = q_ref[0, 0].astype(jnp.float32)            # (bq, d)
         k = k_ref[0, 0].astype(jnp.float32)            # (bk, d)
         v = v_ref[0, 0].astype(jnp.float32)            # (bk, d)
-        s = jax.lax.dot_general(
-            q, k, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+        if fp8:     # per-row fp8 tiles; narrow MXU contraction on TPU
+            s = qk_dot_fp8(q, k, narrow_dot=narrow_dot) * scale
+        else:
+            s = jax.lax.dot_general(
+                q, k, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32) * scale  # (bq, bk)
         mask = jnp.ones((bq, bk), jnp.bool_)
         if causal:
             mask = jnp.logical_and(mask, k_pos <= q_pos)
@@ -92,9 +98,17 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
                         causal: bool = True, window: Optional[int] = None,
                         bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
-                        interpret: bool = True) -> jax.Array:
+                        interpret: bool = True,
+                        fp8: bool = False) -> jax.Array:
     """q: (B, H, Sq, D); k/v: (B, KV, Sk, D) with H % KV == 0.
-    Returns (B, H, Sq, D)."""
+    Returns (B, H, Sq, D).
+
+    ``fp8=True`` runs the QK^T contraction on per-row fp8_e4m3 tiles with
+    per-tile amax scales (``common.qk_dot_fp8``) — the narrow-dtype MXU
+    dot only when compiling (interpret mode keeps the quantization but
+    contracts in f32, since the interpreter has no fp8 matmul units).
+    The PV matmul stays f32: P is a softmax output in [0, 1] whose
+    dynamic range fp8 would waste."""
     B, H, Sq, D = q.shape
     KV, Sk = k.shape[1], k.shape[2]
     assert H % KV == 0
@@ -107,7 +121,8 @@ def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
     kernel = functools.partial(
         _attn_kernel, scale=scale, causal=causal, window=window,
-        bq=bq, bk=bk, n_k_blocks=n_k)
+        bq=bq, bk=bk, n_k_blocks=n_k, fp8=fp8,
+        narrow_dot=fp8 and not interpret)
 
     return pl.pallas_call(
         kernel,

@@ -29,3 +29,20 @@ def reference_attention(q, k, v, *, causal: bool = True,
     p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
     return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)
                       ).astype(q.dtype)
+
+
+def reference_attention_fp8(q, k, v, *, causal: bool = True,
+                            window: Optional[int] = None) -> jnp.ndarray:
+    """Oracle for the ``fp8=True`` kernel path: quantize every (position,
+    head) row of Q and K to fp8_e4m3 with a per-row amax scale over the
+    head dim (the kernel's per-tile granularity — tiles slice rows, never
+    split them), dequantize, and run the plain oracle.  The kernel factors
+    the scales out of the dot instead of materializing the wide rows;
+    the value is identical up to f32 reassociation."""
+    from repro.kernels.quantize import reference_quantize_axis
+
+    def dq(x):
+        xq, s = reference_quantize_axis(x, axis=-1, dtype="fp8_e4m3")
+        return (xq.astype(jnp.float32) * s).astype(x.dtype)
+
+    return reference_attention(dq(q), dq(k), v, causal=causal, window=window)

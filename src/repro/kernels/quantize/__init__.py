@@ -1,6 +1,10 @@
+from repro.kernels.quantize.kernel import QDTYPES, QMAX, target_dtype
 from repro.kernels.quantize.ops import dequantize, quantize_ef
-from repro.kernels.quantize.ref import (reference_dequantize,
+from repro.kernels.quantize.ref import (fast_dequant_cast,
+                                        reference_dequantize,
+                                        reference_quantize_axis,
                                         reference_quantize_ef)
 
 __all__ = ["quantize_ef", "dequantize", "reference_quantize_ef",
-           "reference_dequantize"]
+           "reference_quantize_axis", "reference_dequantize",
+           "fast_dequant_cast", "QDTYPES", "QMAX", "target_dtype"]

@@ -1,21 +1,33 @@
-"""Fused symmetric-int8 quantization kernels for the outer-sync transport.
+"""Fused symmetric quantization kernels for the outer-sync transport and
+the quantized paged-KV cache.
 
-Two kernels back the ``Int8Symmetric`` codec (``repro.core.transport``):
+One parameterized kernel pair backs every quantized wire/pool in the repo
+(``Int8Symmetric`` / ``Fp8Codec`` in ``repro.core.transport``, the fp8/int8
+KV pools in ``serving``):
 
-* ``quantize_ef_fwd`` — fused quantize + error-feedback residual update.
-  One grid program per worker row: computes the per-tensor (per-worker)
-  amax scale, the clipped/rounded int8 payload, AND the new residual
+* ``quantize_ef_fwd`` — fused quantize + error-feedback residual update,
+  parameterized over the target dtype and the scale granularity.  Each
+  grid program computes the amax scale of ITS block, the clipped (and,
+  for int targets, rounded) narrow payload, AND the new residual
   ``e - q*scale`` in a single VMEM-resident pass, where ``e = delta +
   residual`` is the error-compensated delta.  Unfused XLA does this as
   abs/max/div/round/clip/convert/mul/sub over separate HBM round-trips;
   the kernel makes the fusion structural.
-* ``dequantize_fwd`` — int8 payload × per-row scale -> f32, column-tiled.
+* ``dequantize_fwd`` — narrow payload × per-block scale -> f32, tiled to
+  match whichever granularity produced the scales.
 
-Rows are whole (1, M) blocks so the amax reduction needs no cross-program
-pass; production-scale tensors would tile columns with a two-phase amax
-reduction, which we trade away for simplicity (the deltas this repo syncs
-fit VMEM comfortably at the reduced configs; real fleets shard the K rows
-over pods first, see ``launch/dryrun_lib.dryrun_outer_step``).
+Supported target dtypes × scale granularities (``QMAX`` is the symmetric
+clip bound; scale = max(amax, eps) / QMAX):
+
+    dtype      QMAX     payload        granularity
+    int8       127      round+clip     per-tensor row (tile=M) or per-tile
+    fp8_e4m3   448      clip+RNE cast  per-tensor row (tile=M) or per-tile
+    fp8_e5m2   57344    clip+RNE cast  per-tensor row (tile=M) or per-tile
+
+Per-tensor rows are whole (1, M) blocks so the amax reduction needs no
+cross-program pass; per-tile runs grid (K, M//tile) with one scale per
+(row, tile).  fp8 targets clip to ±QMAX *before* the cast: e4m3fn has no
+inf encoding, so an unclipped overflow would become NaN on the wire.
 """
 from __future__ import annotations
 
@@ -26,16 +38,36 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 LANE = 128          # TPU lane width: flattened payloads pad to a multiple
-SCALE_EPS = 1e-12   # matches the jnp oracle: scale = max(amax, eps) / 127
+SCALE_EPS = 1e-12   # matches the jnp oracle: scale = max(amax, eps) / QMAX
+
+# symmetric clip bound per target dtype (the finfo/iinfo max of each)
+QMAX = {"int8": 127.0, "fp8_e4m3": 448.0, "fp8_e5m2": 57344.0}
+QDTYPES = ("int8", "fp8_e4m3", "fp8_e5m2")
 
 
-def _quantize_ef_kernel(x_ref, r_ref, q_ref, nr_ref, s_ref):
+def target_dtype(dtype: str):
+    """jnp dtype for a quantize target name (raises on unknown names)."""
+    if dtype == "int8":
+        return jnp.int8
+    if dtype == "fp8_e4m3":
+        return jnp.float8_e4m3fn
+    if dtype == "fp8_e5m2":
+        return jnp.float8_e5m2
+    raise ValueError(f"unknown quantize target {dtype!r}; "
+                     f"expected one of {QDTYPES}")
+
+
+def _quantize_ef_kernel(x_ref, r_ref, q_ref, nr_ref, s_ref, *, dtype: str):
     e = x_ref[...].astype(jnp.float32) + r_ref[...].astype(jnp.float32)
+    qmax = QMAX[dtype]
     amax = jnp.max(jnp.abs(e))
-    scale = jnp.maximum(amax, SCALE_EPS) / 127.0
-    q = jnp.clip(jnp.round(e / scale), -127, 127)
-    q_ref[...] = q.astype(jnp.int8)
-    nr_ref[...] = e - q * scale
+    scale = jnp.maximum(amax, SCALE_EPS) / qmax
+    y = e / scale
+    if dtype == "int8":
+        y = jnp.round(y)
+    q = jnp.clip(y, -qmax, qmax).astype(q_ref.dtype)
+    q_ref[...] = q
+    nr_ref[...] = e - q.astype(jnp.float32) * scale
     s_ref[...] = jnp.full((1, 1), scale, jnp.float32)
 
 
@@ -43,34 +75,48 @@ def _dequantize_kernel(q_ref, s_ref, o_ref):
     o_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[0, 0]
 
 
-def quantize_ef_fwd(x, residual, *, interpret: bool = True):
+def quantize_ef_fwd(x, residual, *, dtype: str = "int8", tile: int = 0,
+                    interpret: bool = True):
     """x, residual: (K, M) f32 with M % LANE == 0.
 
-    Returns ``(q, new_residual, scale)``: int8 (K, M), f32 (K, M), and the
-    per-row f32 scales (K, 1).
+    ``tile`` selects the scale granularity: 0 (the default) is per-tensor
+    (one scale per worker row, tile = M); otherwise one scale per
+    ``tile``-wide column block (M % tile == 0, tile % LANE == 0).
+
+    Returns ``(q, new_residual, scale)``: the narrow payload (K, M), the
+    f32 residual (K, M), and the f32 scales (K, M // tile).
     """
     K, M = x.shape
     assert M % LANE == 0, (K, M)
+    if not tile:
+        tile = M
+    assert M % tile == 0 and tile % LANE == 0, (M, tile)
+    n_t = M // tile
     return pl.pallas_call(
-        _quantize_ef_kernel,
-        grid=(K,),
-        in_specs=[pl.BlockSpec((1, M), lambda i: (i, 0)),
-                  pl.BlockSpec((1, M), lambda i: (i, 0))],
-        out_specs=[pl.BlockSpec((1, M), lambda i: (i, 0)),
-                   pl.BlockSpec((1, M), lambda i: (i, 0)),
-                   pl.BlockSpec((1, 1), lambda i: (i, 0))],
-        out_shape=[jax.ShapeDtypeStruct((K, M), jnp.int8),
+        functools.partial(_quantize_ef_kernel, dtype=dtype),
+        grid=(K, n_t),
+        in_specs=[pl.BlockSpec((1, tile), lambda i, j: (i, j)),
+                  pl.BlockSpec((1, tile), lambda i, j: (i, j))],
+        out_specs=[pl.BlockSpec((1, tile), lambda i, j: (i, j)),
+                   pl.BlockSpec((1, tile), lambda i, j: (i, j)),
+                   pl.BlockSpec((1, 1), lambda i, j: (i, j))],
+        out_shape=[jax.ShapeDtypeStruct((K, M), target_dtype(dtype)),
                    jax.ShapeDtypeStruct((K, M), jnp.float32),
-                   jax.ShapeDtypeStruct((K, 1), jnp.float32)],
+                   jax.ShapeDtypeStruct((K, n_t), jnp.float32)],
         interpret=interpret,
     )(x, residual)
 
 
 def dequantize_fwd(q, scale, *, bc: int = 0, interpret: bool = True):
-    """q: (K, M) int8, scale: (K, 1) f32 -> f32 (K, M)."""
+    """q: (K, M) narrow payload, scale: (K, S) f32 with M % S == 0 ->
+    f32 (K, M).  S == 1 is the per-tensor layout; S > 1 per-tile (the
+    column-block width is M // S)."""
     K, M = q.shape
-    assert M % LANE == 0, (K, M)
-    if not bc:
+    S = scale.shape[1]
+    assert M % LANE == 0 and M % S == 0, (K, M, S)
+    if S > 1:
+        bc = M // S              # tile width is dictated by the scales
+    elif not bc:
         bc = M
         for cand in (65536, 32768, 16384, 8192, 4096, 2048, 1024, 512, 256,
                      LANE):
@@ -78,10 +124,12 @@ def dequantize_fwd(q, scale, *, bc: int = 0, interpret: bool = True):
                 bc = cand
                 break
     return pl.pallas_call(
-        functools.partial(_dequantize_kernel),
+        _dequantize_kernel,
         grid=(K, M // bc),
         in_specs=[pl.BlockSpec((1, bc), lambda i, j: (i, j)),
-                  pl.BlockSpec((1, 1), lambda i, j: (i, 0))],
+                  pl.BlockSpec((1, 1),
+                               (lambda i, j: (i, j)) if S > 1 else
+                               (lambda i, j: (i, 0)))],
         out_specs=pl.BlockSpec((1, bc), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((K, M), jnp.float32),
         interpret=interpret,

@@ -79,6 +79,16 @@ def main(argv=None):
                          "slot per round via prompt-lookup (0 = off)")
     ap.add_argument("--policy", choices=["fifo", "longest_prefill"],
                     default="fifo")
+    ap.add_argument("--kv-dtype", type=str, default=None,
+                    choices=["bf16", "f32", "int8", "fp8", "fp8_e5m2"],
+                    help="KV-pool storage format override (default: the "
+                         "checkpoint config's kv_cache_dtype, else the "
+                         "compute dtype); int8/fp8 pools quantize on "
+                         "append and halve-to-quarter pool bytes")
+    ap.add_argument("--pool-bytes", type=int, default=None,
+                    help="size the KV pool by device-byte budget instead "
+                         "of slots x blocks (quantized pools fit more "
+                         "blocks, admitting more concurrent requests)")
     ap.add_argument("--report", action="store_true",
                     help="print per-request latency + aggregate tokens/s")
     args = ap.parse_args(argv)
@@ -92,10 +102,15 @@ def main(argv=None):
     world, tok, stages, suites = build_pipeline()
     cfg = load_config(args.ckpt) if args.ckpt else None
     if cfg is not None:
-        model = build_model(cfg)
         print(f"# model config from checkpoint metadata: {cfg.name}")
     else:
-        cfg, model = make_model(args.config, True, tok.vocab_size)
+        cfg, _ = make_model(args.config, True, tok.vocab_size)
+    if args.kv_dtype is not None:
+        # the pool format is a serving decision: override whatever the
+        # checkpoint metadata says BEFORE the engine reads model.cfg
+        cfg = cfg.with_(kv_cache_dtype=args.kv_dtype
+                        if args.kv_dtype != "f32" else "float32")
+    model = build_model(cfg)
     if cfg.vocab_size != tok.vocab_size:
         print(f"# warning: checkpoint vocab {cfg.vocab_size} != pipeline "
               f"tokenizer vocab {tok.vocab_size}", file=sys.stderr)
@@ -106,7 +121,8 @@ def main(argv=None):
 
     engine = Engine(model, params, tok, max_len=args.max_len,
                     num_slots=args.slots, block_size=args.block_size,
-                    policy=args.policy, spec_k=args.spec_k)
+                    policy=args.policy, spec_k=args.spec_k,
+                    pool_bytes=args.pool_bytes)
     reqs = build_requests(args, tok)
     if not reqs:
         print("no requests", file=sys.stderr)
@@ -166,6 +182,13 @@ def main(argv=None):
                   f"rolled_back={stats['rolled_back']}")
         if stats.get("recycled_blocks"):
             print(f"# window_recycled_blocks={stats['recycled_blocks']}")
+        kv = engine.kv_report()
+        print(f"# kv_dtype={kv['kv_cache_dtype']} "
+              f"(pool {kv['kv_pool_dtype']}) "
+              f"bytes_per_block={kv['bytes_per_block']} "
+              f"num_blocks={kv['num_blocks']} "
+              f"pool_bytes={kv['pool_bytes']} "
+              f"peak_admitted={stats['peak_admitted']}")
         print(f"# attn_impl={engine.attn_impl} pallas_mode={pallas_mode()} "
               f"policy={engine.policy}")
 

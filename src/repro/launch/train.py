@@ -10,8 +10,10 @@ Runs the three-stage nanochat pipeline (base pretrain -> dialogue mid-train
   --method pipelined   DiLoCoX shape: one fragment per round, delayed apply
   --method hybrid      DiLoCo base, DDP mid+SFT (checkpoint hand-off)
 
-``--sync-dtype f32|bf16|int8`` picks the outer-sync wire codec (int8 adds
-per-tensor scales + error feedback, see repro.core.transport);
+``--sync-dtype f32|bf16|int8|fp8|e5m2`` picks the outer-sync wire codec
+(int8/fp8 add per-tensor scales + error feedback, see repro.core.transport);
+``--grad-compress int8|fp8`` turns ``--method ddp`` into K real workers
+exchanging per-step updates through the same codec stack (CompressedDDPSync);
 ``--worker-speeds 1,1,1.2,1.5`` models a heterogeneous fleet: after the
 run, the comm simulator replays the sync schedule with per-worker step
 clocks (calibrated from the measured inner-step seconds of the base
@@ -85,7 +87,18 @@ def run_stage(method: str, model, params, stage_ds, *, steps: int,
     import jax.numpy as jnp
     from repro.core import DistTrainer, make_strategy
 
-    if method == "ddp":
+    if method == "ddp" and diloco_cfg.grad_compress not in ("", "none"):
+        # DDP-side gradient compression: K real workers exchanging their
+        # per-step updates through the codec (core.sync.CompressedDDPSync)
+        from repro.core.sync import compressed_ddp_config
+        dcfg = compressed_ddp_config(
+            dataclasses.replace(diloco_cfg, num_workers=workers))
+
+        def data(step):
+            b = stage_ds.worker_batches(step, workers, per_worker_batch,
+                                        seed=seed)
+            return {k: jnp.asarray(v) for k, v in b.items()}
+    elif method == "ddp":
         dcfg = dataclasses.replace(diloco_cfg, num_workers=1,
                                    h_inner_steps=1, outer_lr=1.0,
                                    outer_momentum=0.0, nesterov=False,
@@ -150,7 +163,8 @@ def run_pipeline(method: str = "diloco", arch: str = "tiny",
                  reduced: bool = True, steps: Dict[str, int] = None,
                  workers: int = 4, per_worker_batch: int = 8,
                  seq_len: int = 128, adaptive_h: bool = False,
-                 delta_dtype: str = "float32", drift_aware: bool = False,
+                 delta_dtype: str = "float32", grad_compress: str = "none",
+                 drift_aware: bool = False,
                  sync_delay: int = 0, h_jitter: int = 0,
                  num_fragments: int = 4, error_feedback: bool = True,
                  worker_speeds: Sequence[float] = (),
@@ -177,6 +191,7 @@ def run_pipeline(method: str = "diloco", arch: str = "tiny",
                               schedule="wsd", learning_rate=0.02,
                               adam_lr=1e-3, fused_adamw=fused_adamw)
     dcfg = DiLoCoConfig(num_workers=workers, delta_dtype=delta_dtype,
+                        grad_compress=grad_compress,
                         drift_aware=drift_aware, sync_delay=sync_delay,
                         h_jitter=h_jitter, num_fragments=num_fragments,
                         error_feedback=error_feedback, sync_seed=seed)
@@ -255,9 +270,15 @@ def main(argv=None):
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--adaptive-h", action="store_true")
     ap.add_argument("--sync-dtype", default=None,
-                    choices=["f32", "bf16", "int8", "float32", "bfloat16"],
+                    choices=["f32", "bf16", "int8", "fp8", "e5m2",
+                             "float32", "bfloat16", "fp8_e5m2"],
                     help="outer-sync wire codec (preferred spelling; "
                          "overrides --delta-dtype)")
+    ap.add_argument("--grad-compress", default="none",
+                    choices=["none", "int8", "fp8", "fp8_e5m2"],
+                    help="--method ddp only: compress the per-step update "
+                         "exchange through this codec (K real workers + "
+                         "error feedback, core.sync.CompressedDDPSync)")
     ap.add_argument("--delta-dtype", default="float32",
                     help="legacy spelling of --sync-dtype")
     ap.add_argument("--no-error-feedback", action="store_true",
@@ -284,6 +305,7 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     canon = {"f32": "float32", "bf16": "bfloat16", "int8": "int8",
+             "fp8": "fp8", "e5m2": "fp8_e5m2", "fp8_e5m2": "fp8_e5m2",
              "float32": "float32", "bfloat16": "bfloat16"}
     delta_dtype = canon[args.sync_dtype] if args.sync_dtype \
         else args.delta_dtype
@@ -292,7 +314,8 @@ def main(argv=None):
                  steps={"base": args.steps, "mid": args.steps // 2,
                         "sft": args.steps // 2},
                  workers=args.workers, adaptive_h=args.adaptive_h,
-                 delta_dtype=delta_dtype, drift_aware=args.drift_aware,
+                 delta_dtype=delta_dtype, grad_compress=args.grad_compress,
+                 drift_aware=args.drift_aware,
                  sync_delay=args.sync_delay, h_jitter=args.h_jitter,
                  num_fragments=args.fragments,
                  error_feedback=not args.no_error_feedback,

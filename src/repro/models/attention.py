@@ -28,6 +28,36 @@ from repro.models.sharding import logical_constraint
 
 NEG_INF = -1e30
 
+# ``ModelConfig.kv_cache_dtype`` spellings -> kernels.quantize target names
+# (None = plain narrow cast, no scales)
+KV_QUANT_TARGETS = {"int8": "int8", "fp8": "fp8_e4m3",
+                    "fp8_e4m3": "fp8_e4m3", "fp8_e5m2": "fp8_e5m2"}
+_KV_PLAIN = {"": None, "bf16": "bfloat16", "bfloat16": "bfloat16",
+             "f32": "float32", "float32": "float32"}
+
+
+def kv_quant_dtype(cfg: ModelConfig) -> Optional[str]:
+    """The quantize-kernel target name the config's KV pool uses, or None
+    for an unquantized (plain-dtype) pool."""
+    s = cfg.kv_cache_dtype
+    if s in _KV_PLAIN:
+        return None
+    if s not in KV_QUANT_TARGETS:
+        raise ValueError(f"unknown kv_cache_dtype {cfg.kv_cache_dtype!r}; "
+                         f"expected one of {sorted(_KV_PLAIN)} or "
+                         f"{sorted(KV_QUANT_TARGETS)}")
+    return KV_QUANT_TARGETS[s]
+
+
+def kv_pool_dtype(cfg: ModelConfig):
+    """Storage dtype of the paged pool's k/v arrays."""
+    qd = kv_quant_dtype(cfg)
+    if qd is not None:
+        from repro.kernels.quantize import target_dtype
+        return jnp.dtype(target_dtype(qd))
+    return jnp.dtype(_KV_PLAIN[cfg.kv_cache_dtype] or cfg.compute_dtype)
+
+
 # Force a particular implementation (tests / perf experiments); None = auto.
 FORCE_IMPL: Optional[str] = None
 # Above this KV length the blocked/banded paths are used.
@@ -305,8 +335,9 @@ def paged_decode_attention(p, x, cfg: ModelConfig, k_pool: jax.Array,
                            v_pool: jax.Array, *, positions: jax.Array,
                            block_table: jax.Array,
                            window: Optional[jax.Array] = None,
-                           impl: Optional[str] = None
-                           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+                           impl: Optional[str] = None,
+                           k_scale: Optional[jax.Array] = None,
+                           v_scale: Optional[jax.Array] = None):
     """Decode / verify attention against a *paged* KV pool shared by all
     slots.
 
@@ -330,7 +361,19 @@ def paged_decode_attention(p, x, cfg: ModelConfig, k_pool: jax.Array,
     step.  All T fresh K/V are scattered before the attention reads, so
     causality *among* the T tokens is the same positional gate.
 
-    Returns (y (S, T, d), new_k_pool, new_v_pool).
+    Quantized pools (``cfg.kv_cache_dtype`` int8/fp8/fp8_e5m2) carry
+    ``k_scale``/``v_scale``: (NB, bs, KV) f32 per-token-per-head amax
+    scales.  Fresh K/V are quantized along the head dim on scatter
+    (``kernels.quantize.reference_quantize_axis``) and dequantized on load
+    — jnp path inline, Pallas path via the ``*_dequant`` kernel variants.
+
+    ``cfg.fp8_matmul`` runs the plain-pool Pallas kernels' QK^T on per-row
+    fp8 tiles; the dequant variants keep the f32 contraction (their K rows
+    are already one narrow cast deep — a second quantization would compound
+    the error for no bandwidth win, since the payload is narrow in memory).
+
+    Returns (y (S, T, d), new_k_pool, new_v_pool) for plain pools, plus
+    (new_k_scale, new_v_scale) when the pool is quantized.
     """
     S, T = x.shape[:2]
     hd = cfg.resolved_head_dim()
@@ -353,13 +396,30 @@ def paged_decode_attention(p, x, cfg: ModelConfig, k_pool: jax.Array,
     blk = jnp.take_along_axis(block_table, col, axis=1)        # (S, T)
     dest = blk * bs + posc % bs
     dest = jnp.where(active & (blk >= 0), dest, NB * bs)       # OOB sentinel
+    quantized = k_scale is not None
+    if quantized:
+        from repro.kernels.quantize import reference_quantize_axis
+        qd = kv_quant_dtype(cfg)
+        k_w, k_s = reference_quantize_axis(k_new, axis=-1, dtype=qd)
+        v_w, v_s = reference_quantize_axis(v_new, axis=-1, dtype=qd)
+        ks_flat = k_scale.reshape(NB * bs, cfg.num_kv_heads)
+        vs_flat = v_scale.reshape(NB * bs, cfg.num_kv_heads)
+        ks_flat = ks_flat.at[dest.reshape(-1)].set(
+            k_s.reshape(S * T, cfg.num_kv_heads), mode="drop")
+        vs_flat = vs_flat.at[dest.reshape(-1)].set(
+            v_s.reshape(S * T, cfg.num_kv_heads), mode="drop")
+        new_ks = ks_flat.reshape(NB, bs, cfg.num_kv_heads)
+        new_vs = vs_flat.reshape(NB, bs, cfg.num_kv_heads)
+    else:
+        k_w, v_w = k_new, v_new
+        new_ks = new_vs = None
     k_flat = k_pool.reshape(NB * bs, cfg.num_kv_heads, hd)
     v_flat = v_pool.reshape(NB * bs, cfg.num_kv_heads, hd)
     k_flat = k_flat.at[dest.reshape(-1)].set(
-        k_new.reshape(S * T, cfg.num_kv_heads, hd).astype(k_flat.dtype),
+        k_w.reshape(S * T, cfg.num_kv_heads, hd).astype(k_flat.dtype),
         mode="drop")
     v_flat = v_flat.at[dest.reshape(-1)].set(
-        v_new.reshape(S * T, cfg.num_kv_heads, hd).astype(v_flat.dtype),
+        v_w.reshape(S * T, cfg.num_kv_heads, hd).astype(v_flat.dtype),
         mode="drop")
     new_k = k_flat.reshape(NB, bs, cfg.num_kv_heads, hd)
     new_v = v_flat.reshape(NB, bs, cfg.num_kv_heads, hd)
@@ -367,25 +427,56 @@ def paged_decode_attention(p, x, cfg: ModelConfig, k_pool: jax.Array,
     static_window = isinstance(window, int) or window is None
     if isinstance(window, int) and window == 0:
         window = None
-    if impl == "pallas" and static_window and T == 1:
+    if impl == "pallas" and static_window and T == 1 and not quantized:
         from repro.kernels.decode_attention import \
             paged_decode_attention as paged_kernel
         out = paged_kernel(q[:, 0], new_k.astype(q.dtype),
                            new_v.astype(q.dtype), block_table,
                            jnp.where(active[:, 0], pos[:, 0], -1),
-                           window=window or 0)[:, None]         # (S,1,KV,G,hd)
-    elif impl == "pallas" and static_window:
+                           window=window or 0,
+                           fp8=cfg.fp8_matmul)[:, None]         # (S,1,KV,G,hd)
+    elif impl == "pallas" and static_window and not quantized:
         from repro.kernels.decode_attention import \
             paged_verify_attention as verify_kernel
         # live tokens are a contiguous prefix: recover (start, n) per slot
         start = jnp.where(active[:, 0], pos[:, 0], -1)
         n_tok = jnp.sum(active.astype(jnp.int32), axis=1)
         out = verify_kernel(q, new_k.astype(q.dtype), new_v.astype(q.dtype),
-                            block_table, start, n_tok, window=window or 0)
+                            block_table, start, n_tok, window=window or 0,
+                            fp8=cfg.fp8_matmul)
+    elif impl == "pallas" and static_window and T == 1:
+        from repro.kernels.decode_attention import \
+            paged_decode_attention_dequant as paged_dq_kernel
+        out = paged_dq_kernel(q[:, 0], new_k, new_v, new_ks, new_vs,
+                              block_table,
+                              jnp.where(active[:, 0], pos[:, 0], -1),
+                              window=window or 0)[:, None]
+    elif impl == "pallas" and static_window:
+        from repro.kernels.decode_attention import \
+            paged_verify_attention_dequant as verify_dq_kernel
+        start = jnp.where(active[:, 0], pos[:, 0], -1)
+        n_tok = jnp.sum(active.astype(jnp.int32), axis=1)
+        out = verify_dq_kernel(q, new_k, new_v, new_ks, new_vs, block_table,
+                               start, n_tok, window=window or 0)
     else:
         safe = jnp.maximum(block_table, 0)                     # (S, MB)
-        k_all = new_k[safe].reshape(S, MB * bs, cfg.num_kv_heads, hd)
-        v_all = new_v[safe].reshape(S, MB * bs, cfg.num_kv_heads, hd)
+        if quantized:       # dequant-on-load: payload x per-token-head scale
+            from repro.kernels.quantize import fast_dequant_cast
+            # dequantize the WHOLE pool once (table-gather convert), then
+            # block-gather f32: XLA CPU lowers a per-element fp8 convert
+            # fused after the block gather to software emulation, which
+            # dominates the step.  This jnp path only serves CPU/test
+            # runs — the Pallas dequant kernels own the accelerator path,
+            # fusing the convert into the tile load instead.
+            kf = fast_dequant_cast(new_k) * new_ks[..., None]
+            vf = fast_dequant_cast(new_v) * new_vs[..., None]
+            k_all = kf[safe].reshape(S, MB * bs, cfg.num_kv_heads,
+                                     hd).astype(q.dtype)
+            v_all = vf[safe].reshape(S, MB * bs, cfg.num_kv_heads,
+                                     hd).astype(q.dtype)
+        else:
+            k_all = new_k[safe].reshape(S, MB * bs, cfg.num_kv_heads, hd)
+            v_all = new_v[safe].reshape(S, MB * bs, cfg.num_kv_heads, hd)
         k_pos = jnp.broadcast_to(jnp.arange(MB * bs), (S, MB * bs))
         mapped = jnp.repeat(block_table >= 0, bs, axis=1)
         k_pos = jnp.where(mapped, k_pos, -1)
@@ -395,7 +486,10 @@ def paged_decode_attention(p, x, cfg: ModelConfig, k_pool: jax.Array,
     out = out.reshape(S, T, cfg.num_heads * hd)
     out = logical_constraint(out, "batch", "seq", "heads")
     y = out @ p["wo"].astype(cfg.compute_dtype)
-    return logical_constraint(y, "batch", "seq", None), new_k, new_v
+    y = logical_constraint(y, "batch", "seq", None)
+    if quantized:
+        return y, new_k, new_v, new_ks, new_vs
+    return y, new_k, new_v
 
 
 def precompute_cross_cache(p, memory: jax.Array, cfg: ModelConfig):

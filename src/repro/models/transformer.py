@@ -412,17 +412,43 @@ def paged_cache_supported(cfg: ModelConfig) -> bool:
             and not cfg.is_encoder_decoder)
 
 
+def paged_block_bytes(cfg: ModelConfig, block_size: int) -> int:
+    """Bytes one physical KV block costs across ALL layers — the unit the
+    byte-budget pool sizing and the scheduler's capacity report use.
+    Quantized pools pay the narrow payload plus the f32 per-token-per-head
+    scale planes."""
+    hd = cfg.resolved_head_dim()
+    dt = attn.kv_pool_dtype(cfg)
+    per_layer = 2 * block_size * cfg.num_kv_heads * hd * dt.itemsize
+    if attn.kv_quant_dtype(cfg) is not None:
+        per_layer += 2 * block_size * cfg.num_kv_heads * 4
+    return cfg.num_layers * per_layer
+
+
 def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
                      dtype=None) -> Dict[str, jax.Array]:
     """A pool of ``num_blocks`` fixed-size KV blocks shared by all serving
-    slots, stacked over layers: (L, NB, bs, KV, hd)."""
+    slots, stacked over layers: (L, NB, bs, KV, hd).
+
+    ``cfg.kv_cache_dtype`` picks the storage format: "" / bf16 / f32 pools
+    are plain arrays in that dtype ("" = compute dtype, or the ``dtype``
+    override); int8 / fp8 / fp8_e5m2 pools store the narrow payload plus
+    ``k_scale`` / ``v_scale`` (L, NB, bs, KV) f32 per-token-per-head amax
+    scales, quantized on scatter and dequantized on load by the attention
+    layer (``dtype`` is ignored — the wire format is the config's)."""
     if not paged_cache_supported(cfg):
         raise NotImplementedError(
             f"paged KV cache unsupported for arch {cfg.arch_type!r} "
             f"(hybrid={cfg.hybrid}, enc-dec={cfg.is_encoder_decoder})")
     hd = cfg.resolved_head_dim()
-    dt = dtype or cfg.compute_dtype
     shape = (cfg.num_layers, num_blocks, block_size, cfg.num_kv_heads, hd)
+    if attn.kv_quant_dtype(cfg) is not None:
+        dt = attn.kv_pool_dtype(cfg)
+        return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt),
+                "k_scale": jnp.zeros(shape[:-1], jnp.float32),
+                "v_scale": jnp.zeros(shape[:-1], jnp.float32)}
+    dt = dtype or (attn.kv_pool_dtype(cfg) if cfg.kv_cache_dtype
+                   else cfg.compute_dtype)
     return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
 
 
@@ -437,29 +463,59 @@ def _paged_layers(params, h, pool, cfg: ModelConfig, positions, block_table,
     heterogeneous = bool(cfg.window_pattern)
     windows = layer_windows(cfg) if heterogeneous else None
     static_w = None if heterogeneous else (cfg.window or None)
+    quantized = "k_scale" in pool
+    # XLA CPU moves fp8 arrays through scan slice/stack via per-element
+    # convert paths (~70x a 1-byte memcpy); thread fp8 pools through the
+    # scan as their uint8 bit patterns and reinterpret inside the body.
+    narrow = pool["k"].dtype
+    carrier = quantized and narrow in (jnp.float8_e4m3fn, jnp.float8_e5m2)
+    pk, pv = pool["k"], pool["v"]
+    if carrier:
+        pk = jax.lax.bitcast_convert_type(pk, jnp.uint8)
+        pv = jax.lax.bitcast_convert_type(pv, jnp.uint8)
 
     def body(hh, xs):
         if heterogeneous:
-            lp, kc, vc, w = xs
+            *rest, w = xs
             w = _effective_window(w, 0)
         else:
-            (lp, kc, vc), w = xs, static_w
+            rest, w = xs, static_w
+        if quantized:
+            lp, kc, vc, ks, vs = rest
+            if carrier:
+                kc = jax.lax.bitcast_convert_type(kc, narrow)
+                vc = jax.lax.bitcast_convert_type(vc, narrow)
+        else:
+            (lp, kc, vc), (ks, vs) = rest, (None, None)
         x = apply_norm(lp["ln1"], hh, cfg)
-        a, nk, nv = attn.paged_decode_attention(
+        out = attn.paged_decode_attention(
             lp["attn"], x, cfg, kc, vc, positions=positions,
-            block_table=block_table, window=w, impl=impl)
+            block_table=block_table, window=w, impl=impl,
+            k_scale=ks, v_scale=vs)
+        a, new_kv = out[0], out[1:]
+        if carrier:
+            new_kv = (jax.lax.bitcast_convert_type(new_kv[0], jnp.uint8),
+                      jax.lax.bitcast_convert_type(new_kv[1], jnp.uint8),
+                      ) + tuple(new_kv[2:])
         hh = hh + a
         x = apply_norm(lp["ln2"], hh, cfg)
         if cfg.num_experts:
             y, _ = moe_mod.apply_moe(lp["moe"], x, cfg)
         else:
             y = apply_mlp(lp["mlp"], x, cfg)
-        return hh + y, (nk, nv)
+        return hh + y, new_kv
 
-    xs = (params["layers"], pool["k"], pool["v"])
-    h, (nk, nv) = jax.lax.scan(body, h, xs + (windows,) if heterogeneous
-                               else xs)
-    return h, {"k": nk, "v": nv}
+    xs = (params["layers"], pk, pv)
+    if quantized:
+        xs = xs + (pool["k_scale"], pool["v_scale"])
+    h, new_kv = jax.lax.scan(body, h, xs + (windows,) if heterogeneous
+                             else xs)
+    keys = ("k", "v", "k_scale", "v_scale") if quantized else ("k", "v")
+    out_pool = dict(zip(keys, new_kv))
+    if carrier:
+        out_pool["k"] = jax.lax.bitcast_convert_type(out_pool["k"], narrow)
+        out_pool["v"] = jax.lax.bitcast_convert_type(out_pool["v"], narrow)
+    return h, out_pool
 
 
 def decode_step_paged(params, pool, batch, cfg: ModelConfig,

@@ -69,6 +69,17 @@ back to the static-bucket path, where ragged batches should use same-length
 prompts (documented limitation; the paper's nanochat model is dense
 attention).
 
+Quantized KV pools (``cfg.kv_cache_dtype`` int8 / fp8 / fp8_e5m2) store the
+paged pool in a 1-byte payload plus f32 per-token-per-head scales —
+roughly half the bytes of a bf16 pool per block — so a byte-budget engine
+(``pool_bytes``) fits proportionally more blocks and admits more
+concurrent requests in the same device budget.  Quantize-on-scatter /
+dequant-on-load happens inside ``models.attention.paged_decode_attention``;
+the speculative and sequential loops are unchanged and stay bit-exact with
+each other under greedy decoding (both read the same quantized pool).  The
+SSM/hybrid static fallback ignores ``kv_cache_dtype``: its ring-buffer
+cache is not paged, and the recurrent state cannot be position-gated.
+
 Uniform sliding-window archs additionally recycle KV blocks per slot: once
 every position in a block falls ``window`` behind the committed position it
 can never be attended again, so the block returns to the pool mid-request
@@ -93,7 +104,8 @@ import numpy as np
 _fetch = np.asarray
 
 from repro.data.tokenizer import BPETokenizer
-from repro.models.transformer import ModelAPI, paged_cache_supported
+from repro.models.transformer import (ModelAPI, paged_block_bytes,
+                                      paged_cache_supported)
 from repro.serving import drafter as drafter_mod
 from repro.serving.kv_cache import KVBlockPool, pad_block_table
 from repro.serving.scheduler import Request, Scheduler
@@ -122,6 +134,12 @@ class Engine:
     num_slots: int = 8                 # concurrent sequences in the step
     block_size: int = 16               # KV tokens per pool block
     num_blocks: Optional[int] = None   # pool size; default fits all slots
+    pool_bytes: Optional[int] = None   # byte budget for the pool instead:
+                                       # num_blocks = bytes // block cost, so
+                                       # a quantized kv_cache_dtype fits
+                                       # proportionally more blocks (and thus
+                                       # admits more requests) in the SAME
+                                       # device budget
     prefill_chunk: int = 8             # token-steps per scan-step call
     spec_k: int = 0                    # speculative draft length; 0 = the
                                        # sequential scan step (no drafting)
@@ -137,8 +155,14 @@ class Engine:
         if not self.continuous:
             return
         self._mb = -(-self.max_len // self.block_size)   # blocks per slot
+        self.bytes_per_block = paged_block_bytes(self.model.cfg,
+                                                 self.block_size)
         if self.num_blocks is None:
-            self.num_blocks = self.num_slots * self._mb
+            if self.pool_bytes is not None:
+                self.num_blocks = max(
+                    self.pool_bytes // self.bytes_per_block, 1)
+            else:
+                self.num_blocks = self.num_slots * self._mb
         self.capacity = self._mb * self.block_size
         self._pool = None       # device pool allocated lazily on first run()
                                 # so score-/static-only engines don't hold
@@ -269,11 +293,26 @@ class Engine:
     # ======================================================================
 
     def _make_sched(self, round_tokens: int) -> Scheduler:
-        sched = Scheduler(self.num_slots,
-                          KVBlockPool(self.num_blocks, self.block_size),
-                          self._mb, self.policy, window=self._recycle_w)
+        pool = KVBlockPool(self.num_blocks, self.block_size,
+                           bytes_per_block=self.bytes_per_block)
+        sched = Scheduler(self.num_slots, pool, self._mb, self.policy,
+                          window=self._recycle_w)
         sched.chunk_tokens = round_tokens
         return sched
+
+    def kv_report(self) -> Dict[str, object]:
+        """Static KV-pool facts for serving reports: the storage format
+        ``cfg.kv_cache_dtype`` resolved to, and what the pool costs."""
+        from repro.models.attention import kv_pool_dtype
+        cfg = self.model.cfg
+        return {
+            "kv_cache_dtype": cfg.kv_cache_dtype or "compute",
+            "kv_pool_dtype": str(kv_pool_dtype(cfg)),
+            "block_size": self.block_size,
+            "num_blocks": self.num_blocks,
+            "bytes_per_block": self.bytes_per_block,
+            "pool_bytes": self.num_blocks * self.bytes_per_block,
+        }
 
     def _prep_round(self, sched: Scheduler, act: List[int],
                     tables: np.ndarray, round_tokens,
@@ -374,6 +413,7 @@ class Engine:
                     slot.feed = [slot.req.tokens[-1]]   # next chunk
         self._pool = pool
         stats["wall"] = time.perf_counter() - t0
+        stats.update(sched.capacity_report())
         return stats
 
     # ------------------------------------------------------------------
@@ -521,6 +561,7 @@ class Engine:
         stats["wall"] = time.perf_counter() - t0
         stats["accept_rate"] = (stats["accepted"] / stats["drafted"]
                                 if stats["drafted"] else float("nan"))
+        stats.update(sched.capacity_report())
         return stats
 
     def _emit(self, sched: Scheduler, si: int, tok: int, stats, now,

@@ -37,10 +37,16 @@ class KVBlockPool:
     Raises on double-alloc / double-free / over-reserve so scheduler bugs
     surface as exceptions, not silent KV corruption."""
 
-    def __init__(self, num_blocks: int, block_size: int):
+    def __init__(self, num_blocks: int, block_size: int,
+                 bytes_per_block: int = 0):
         assert num_blocks > 0 and block_size > 0
         self.num_blocks = num_blocks
         self.block_size = block_size
+        # device-side cost of one block across all layers (payload + scale
+        # planes for quantized pools — see transformer.paged_block_bytes);
+        # 0 = unknown.  Pure metadata: capacity reports denominate in bytes,
+        # admission stays block-granular.
+        self.bytes_per_block = bytes_per_block
         self._free: List[int] = list(range(num_blocks - 1, -1, -1))
         self._allocated: set = set()
         self._reserved = 0          # budgeted-but-unmapped blocks
@@ -57,6 +63,11 @@ class KVBlockPool:
     @property
     def num_reserved(self) -> int:
         return self._reserved
+
+    @property
+    def total_bytes(self) -> int:
+        """Device bytes the whole pool costs (0 when untracked)."""
+        return self.num_blocks * self.bytes_per_block
 
     def blocks_for(self, num_tokens: int) -> int:
         """Blocks needed to hold ``num_tokens`` cache entries."""

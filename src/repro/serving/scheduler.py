@@ -104,6 +104,8 @@ class Scheduler:
         self.chunk_tokens = 1       # engine sets: max tokens fed per round
         self.waiting: List[Request] = []
         self.slots: List[Optional[Slot]] = [None] * num_slots
+        self.peak_admitted = 0      # max simultaneously-occupied slots seen
+        self.total_admitted = 0     # requests admitted over the run
 
     # -- queries ------------------------------------------------------------
     @property
@@ -174,7 +176,27 @@ class Scheduler:
             slot.req.admit_time = now if now != float("inf") else 0.0
             self.slots[si] = slot
             newly.append(si)
+        if newly:
+            self.total_admitted += len(newly)
+            self.peak_admitted = max(
+                self.peak_admitted,
+                sum(s is not None for s in self.slots))
         return newly
+
+    def capacity_report(self) -> dict:
+        """Bytes-denominated capacity snapshot: how much device memory the
+        pool costs, what one admitted request's budget costs, and the
+        admission high-water mark.  ``bytes_per_block`` = 0 when the pool
+        was built without byte metadata."""
+        bpb = self.pool.bytes_per_block
+        return {
+            "num_blocks": self.pool.num_blocks,
+            "block_size": self.pool.block_size,
+            "bytes_per_block": bpb,
+            "pool_bytes": self.pool.total_bytes,
+            "peak_admitted": self.peak_admitted,
+            "total_admitted": self.total_admitted,
+        }
 
     # -- lazy mapping / recycling -------------------------------------------
     def ensure_mapped(self, si: int, upto_pos: int) -> bool:

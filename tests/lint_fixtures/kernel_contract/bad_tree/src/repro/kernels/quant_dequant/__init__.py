@@ -1,0 +1,1 @@
+from repro.kernels.quant_dequant.ops import dequant  # noqa: F401

@@ -1,0 +1,2 @@
+def dequant_kernel(q_ref, s_ref, o_ref):
+    o_ref[...] = q_ref[...] * s_ref[...]

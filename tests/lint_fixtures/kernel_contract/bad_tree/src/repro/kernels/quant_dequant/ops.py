@@ -1,0 +1,9 @@
+"""Known-bad: the three-file layout and the shared interpret helper are in
+place, but no test under tests/ ever imports the dequant variant's ref
+oracle — a new kernel variant shipped without its kernel-vs-oracle test."""
+from repro.kernels.common import resolve_interpret
+
+
+def dequant(q, scale, interpret=None):
+    interpret = resolve_interpret(interpret)
+    return q * scale

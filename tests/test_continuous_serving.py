@@ -262,3 +262,105 @@ def test_paged_cache_writes_match_full_forward():
             "block_table": jnp.asarray(table)})
     np.testing.assert_allclose(np.asarray(step_logits[0, 0]), ref,
                                atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Quantized KV pools (kv_cache_dtype int8 / fp8 / fp8_e5m2)
+# ---------------------------------------------------------------------------
+
+KV_DTYPES = ["int8", "fp8", "fp8_e5m2"]
+
+
+def _quant_engine(kv, **kw):
+    cfg = tiny_cfg("dense", kv_cache_dtype=kv)
+    m = build_model(cfg)
+    params, _ = init_params(cfg, jax.random.key(0))
+    kw.setdefault("num_slots", 4)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("block_size", 8)
+    return cfg, Engine(m, params, **kw)
+
+
+@pytest.mark.parametrize("kv", KV_DTYPES)
+def test_quantized_kv_jnp_matches_pallas_bit_exact(kv):
+    """Greedy streams off a quantized pool are identical between the jnp
+    dequant fallback and the Pallas dequant-on-load kernels — quantization
+    error is in the pool contents, not the reader."""
+    outs = {}
+    for impl in ("jnp", "pallas"):
+        cfg, eng = _quant_engine(kv, attn_impl=impl)
+        outs[impl] = eng.generate_ids(RAGGED[:4], max_new=12)
+    np.testing.assert_array_equal(outs["jnp"], outs["pallas"])
+
+
+@pytest.mark.parametrize("kv", KV_DTYPES)
+def test_quantized_kv_speculative_matches_continuous_bit_exact(kv):
+    """Greedy speculation on a quantized pool is still lossless: the verify
+    kernel reads the same narrow blocks the sequential loop wrote, so
+    spec_k=0 and spec_k=4 engines emit identical tokens on a ragged
+    stream."""
+    cfg, base = _quant_engine(kv)
+    cfg, spec = _quant_engine(kv, spec_k=4)
+    a = base.generate_ids(RAGGED, max_new=13)
+    b = spec.generate_ids(RAGGED, max_new=13)
+    np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("kv,floor", [("int8", 0.85), ("fp8", 0.85),
+                                      ("fp8_e5m2", 0.5)])
+def test_quantized_kv_tracks_full_precision_greedy(kv, floor):
+    """Bit-exactness-vs-tolerance: a quantized pool is lossy, and one
+    flipped argmax diverges the whole greedy suffix — so the statement is
+    aggregate token agreement with the full-precision stream above a
+    per-flavor floor (e4m3/int8 nearly exact on the tiny model, e5m2's
+    2 mantissa bits noticeably looser), everything else about the
+    scheduler path unchanged."""
+    cfg, full = _engine()
+    want = np.asarray(full.generate_ids(RAGGED, max_new=13))
+    cfg, q = _quant_engine(kv)
+    got = np.asarray(q.generate_ids(RAGGED, max_new=13))
+    assert got.shape == want.shape
+    agree = float(np.mean(got == want))
+    assert agree >= floor, \
+        f"{kv} pool agreement {agree:.2f} vs full precision"
+
+
+def test_quantized_kv_churn_preserves_pool_invariants():
+    """The scheduler-churn test on a quantized pool: a byte-budget pool too
+    small for all requests at once, every request completes, and the
+    per-request tokens are schedule-independent (equal to a fresh
+    quantized engine serving the request alone)."""
+    from repro.models.transformer import paged_block_bytes
+    rng = np.random.default_rng(0)
+    cfg = tiny_cfg("dense", kv_cache_dtype="fp8")
+    bpb = paged_block_bytes(cfg, 8)
+    cfg2, eng = _quant_engine("fp8", num_slots=2, max_len=24, block_size=8,
+                              pool_bytes=6 * bpb)
+    assert eng.num_blocks == 6 and eng.bytes_per_block == bpb
+    prompts = [rng.integers(1, 90, size=int(rng.integers(1, 12))).tolist()
+               for _ in range(9)]
+    reqs = [Request(rid=i, prompt=p, max_new=int(rng.integers(1, 8)))
+            for i, p in enumerate(prompts)]
+    eng.run(reqs)
+    for r in reqs:
+        assert len(r.tokens) == r.max_new, r.rid
+    cfg3, solo = _quant_engine("fp8", num_slots=2, max_len=24, block_size=8)
+    for r in reqs:
+        np.testing.assert_array_equal(
+            np.asarray(r.tokens),
+            solo.generate_ids([r.prompt], max_new=r.max_new)[0])
+
+
+def test_quantized_pool_bytes_budget_fits_more_blocks():
+    """Same pool_bytes, narrower payload -> strictly more blocks, and the
+    kv_report the serve CLI prints reflects the quantized layout."""
+    budget = 65536
+    cfg_b, bf16 = _engine(pool_bytes=budget)
+    cfg_q, fp8 = _quant_engine("fp8", pool_bytes=budget)
+    assert fp8.bytes_per_block < bf16.bytes_per_block
+    assert fp8.num_blocks > bf16.num_blocks
+    rep = fp8.kv_report()
+    assert rep["kv_cache_dtype"] == "fp8"
+    assert rep["kv_pool_dtype"] == "float8_e4m3fn"
+    assert rep["pool_bytes"] <= budget
+    assert rep["num_blocks"] == fp8.num_blocks

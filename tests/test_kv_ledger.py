@@ -53,8 +53,69 @@ def _assert_invariants(pool, slots, scratch):
 def churn(ops, num_blocks=12, block_size=4):
     """Interpret (opcode, a, b) triples against a pool + slot set,
     asserting every invariant after every step."""
-    pool = KVBlockPool(num_blocks, block_size)
+    return _churn_into(KVBlockPool(num_blocks, block_size), ops)
+
+
+def test_seeded_churn():
+    rng = random.Random(1234)
+    for _ in range(30):
+        n = rng.randrange(1, 300)
+        ops = [(rng.randrange(64), rng.randrange(64), rng.randrange(64))
+               for _ in range(n)]
+        pool, slots, scratch = churn(ops,
+                                     num_blocks=rng.randrange(1, 24),
+                                     block_size=rng.choice([1, 2, 4, 8]))
+        # drain: finishing everything must return the pool to pristine
+        for s in list(slots):
+            dead = [blk for blk in s.blocks if blk >= 0]
+            if dead:
+                pool.free(dead)
+            pool.release(s.reserved)
+        if scratch:
+            pool.free(scratch)
+        pool.check_invariants()
+        assert pool.num_free == pool.num_blocks
+        assert pool.num_allocated == 0 and pool.num_reserved == 0
+
+
+def test_churn_on_quantized_byte_budget_pool():
+    """The ledger is dtype-agnostic, but a quantized pool at the same byte
+    budget holds ~1.8x the blocks of a bf16 pool (narrow payload + f32
+    scale sideband): size both from one budget, run the same churn program
+    against the larger quantized pool, and check the byte accounting."""
+    from helpers import tiny_cfg
+    from repro.models.transformer import paged_block_bytes
+
+    bs = 4
+    bf16 = paged_block_bytes(tiny_cfg("dense", kv_cache_dtype="bf16"), bs)
+    fp8 = paged_block_bytes(tiny_cfg("dense", kv_cache_dtype="fp8"), bs)
+    assert fp8 < bf16
+    budget = 12 * bf16
+    n_bf16, n_fp8 = budget // bf16, budget // fp8
+    assert n_fp8 > n_bf16
+    rng = random.Random(99)
+    ops = [(rng.randrange(64), rng.randrange(64), rng.randrange(64))
+           for _ in range(200)]
+    for num_blocks, bpb in ((n_bf16, bf16), (n_fp8, fp8)):
+        pool = KVBlockPool(num_blocks, bs, bytes_per_block=bpb)
+        assert pool.total_bytes == num_blocks * bpb <= budget
+        pool, slots, scratch = _churn_into(pool, ops)
+        for s in list(slots):
+            dead = [blk for blk in s.blocks if blk >= 0]
+            if dead:
+                pool.free(dead)
+            pool.release(s.reserved)
+        if scratch:
+            pool.free(scratch)
+        pool.check_invariants()
+        assert pool.num_free == pool.num_blocks
+
+
+def _churn_into(pool, ops):
+    """churn()'s interpreter against a caller-built pool (byte-budget
+    variants); see churn() for the opcode table."""
     slots, scratch = [], []
+    num_blocks, block_size = pool.num_blocks, pool.block_size
     for opcode, a, b in ops:
         op = opcode % 7
         if op == 0:                                   # admit: reserve budget
@@ -98,28 +159,6 @@ def churn(ops, num_blocks=12, block_size=4):
                 scratch.extend(pool.alloc(1))
         _assert_invariants(pool, slots, scratch)
     return pool, slots, scratch
-
-
-def test_seeded_churn():
-    rng = random.Random(1234)
-    for _ in range(30):
-        n = rng.randrange(1, 300)
-        ops = [(rng.randrange(64), rng.randrange(64), rng.randrange(64))
-               for _ in range(n)]
-        pool, slots, scratch = churn(ops,
-                                     num_blocks=rng.randrange(1, 24),
-                                     block_size=rng.choice([1, 2, 4, 8]))
-        # drain: finishing everything must return the pool to pristine
-        for s in list(slots):
-            dead = [blk for blk in s.blocks if blk >= 0]
-            if dead:
-                pool.free(dead)
-            pool.release(s.reserved)
-        if scratch:
-            pool.free(scratch)
-        pool.check_invariants()
-        assert pool.num_free == pool.num_blocks
-        assert pool.num_allocated == 0 and pool.num_reserved == 0
 
 
 def test_ledger_raises_on_misuse():

@@ -86,6 +86,19 @@ def test_kernel_contract_bad_tree():
     assert all(v.path.startswith(str(root)) for v in vios)
 
 
+def test_kernel_contract_flags_dequant_variant_without_oracle_test():
+    """The quant_dequant fixture ships the full three-file layout AND the
+    shared interpret helper — its only sin is that no test imports its ref
+    oracle.  The pass must flag exactly that, and nothing else, so a new
+    kernel *variant* (e.g. a dequant flavor of an existing op) cannot land
+    untested just because the package otherwise looks healthy."""
+    root = FIXTURES / "kernel_contract" / "bad_tree"
+    vios = [v for v in KernelContractPass().check_project([], root=root)
+            if "quant_dequant" in v.path]
+    assert len(vios) == 1, "\n".join(v.format() for v in vios)
+    assert "ref oracle" in vios[0].message
+
+
 def test_kernel_contract_good_tree():
     root = FIXTURES / "kernel_contract" / "good_tree"
     vios = KernelContractPass().check_project([], root=root)

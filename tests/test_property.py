@@ -15,7 +15,7 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 from repro.core.outer_opt import dequantize_delta, quantize_delta
 from repro.configs.base import DiLoCoConfig
 from repro.core.outer_opt import average_deltas
-from repro.core.transport import BF16Cast, Int8Symmetric
+from repro.core.transport import BF16Cast, Fp8Codec, Int8Symmetric
 from repro.models.layers import softmax_cross_entropy
 from repro.optim import newton_schulz
 from repro.optim.schedule import lr_schedule
@@ -49,6 +49,29 @@ def test_int8_codec_roundtrip_error_bound(seed, k, n):
     for i in range(k):
         amax = np.abs(x[i]).max()
         assert np.abs(back[i] - x[i]).max() <= amax / 254 + 1e-9
+    np.testing.assert_allclose(np.asarray(new_res["w"]), x - back,
+                               atol=1e-7)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 4), st.integers(2, 24),
+       st.sampled_from(["e4m3", "e5m2"]))
+def test_fp8_codec_roundtrip_error_bound(seed, k, n, flavor):
+    """Per element: |dec(enc(x)) - x| <= |x| * half-ulp(flavor) + scale
+    (half-ulp 2^-4 for e4m3's 3 mantissa bits, 2^-3 for e5m2's 2; the
+    scale term covers the subnormal region), and the error-feedback
+    residual equals the round-trip error exactly."""
+    codec = Fp8Codec(use_kernel=False, flavor=flavor)
+    qmax, rel = (448.0, 2.0 ** -4) if flavor == "e4m3" else \
+        (57344.0, 2.0 ** -3)
+    x = np.asarray(jax.random.normal(jax.random.key(seed), (k, n)))
+    res0 = {"w": jnp.zeros((k, n))}
+    payload, new_res = codec.encode({"w": jnp.asarray(x)}, res0)
+    assert np.asarray(payload.data["w"]).dtype.itemsize == 1
+    back = np.asarray(codec.decode(payload)["w"])
+    for i in range(k):
+        s = max(np.abs(x[i]).max(), 1e-12) / qmax
+        assert (np.abs(back[i] - x[i]) <= np.abs(x[i]) * rel + s).all()
     np.testing.assert_allclose(np.asarray(new_res["w"]), x - back,
                                atol=1e-7)
 

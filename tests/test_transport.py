@@ -12,8 +12,8 @@ from repro.configs.base import DiLoCoConfig, OptimizerConfig
 from repro.core import (DiLoCoSync, DistTrainer, PipelinedSync,
                         StreamingSync, make_strategy)
 from repro.core.sync import SyncEvent
-from repro.core.transport import (BF16Cast, F32Passthrough, Int8Symmetric,
-                                  make_codec)
+from repro.core.transport import (BF16Cast, F32Passthrough, Fp8Codec,
+                                  Int8Symmetric, make_codec)
 from repro.kernels.quantize import (dequantize, quantize_ef,
                                     reference_dequantize,
                                     reference_quantize_ef)
@@ -109,20 +109,107 @@ def test_error_feedback_recovers_accumulated_truncation():
     np.testing.assert_allclose(total[1], 10 * tiny, rtol=0.3)
 
 
+@pytest.mark.parametrize("flavor,qmax,rel", [("e4m3", 448.0, 2.0 ** -4),
+                                             ("e5m2", 57344.0, 2.0 ** -3)])
+@pytest.mark.parametrize("use_kernel", [True, False])
+def test_fp8_codec_error_bound(flavor, qmax, rel, use_kernel):
+    """Per element: |dec(enc(x)) - x| <= |x| * half-ulp(flavor) + scale
+    (the scale term covers the subnormal region near zero)."""
+    delta = _tree(seed=6, scale=0.1)
+    codec = Fp8Codec(use_kernel=use_kernel, flavor=flavor)
+    payload, _ = codec.encode(delta)
+    assert payload.codec == ("fp8" if flavor == "e4m3" else "fp8_e5m2")
+    assert payload.scales is not None
+    back = codec.decode(payload)
+    for key in delta:
+        x = np.asarray(delta[key]).reshape(3, -1)
+        b = np.asarray(back[key]).reshape(3, -1)
+        assert np.asarray(payload.data[key]).dtype.itemsize == 1
+        for i in range(3):
+            s = max(np.abs(x[i]).max(), 1e-12) / qmax
+            assert (np.abs(b[i] - x[i]) <= np.abs(x[i]) * rel + s).all()
+
+
+@pytest.mark.parametrize("flavor", ["e4m3", "e5m2"])
+def test_fp8_error_feedback_residual_is_the_roundtrip_error(flavor):
+    delta = _tree(seed=7)
+    residual = jax.tree.map(jnp.zeros_like, delta)
+    codec = Fp8Codec(flavor=flavor)
+    payload, new_res = codec.encode(delta, residual)
+    back = codec.decode(payload)
+    for key in delta:
+        np.testing.assert_allclose(
+            np.asarray(new_res[key]),
+            np.asarray(delta[key]) - np.asarray(back[key]), atol=1e-6)
+
+
+def test_fp8_error_feedback_recovers_accumulated_truncation():
+    """e4m3's smallest subnormal is 2^-9: with amax 1.0 the scale is 1/448,
+    so anything below ~2.2e-6 truncates to zero every round without error
+    feedback but accumulates in the residual and ships with it."""
+    big, tiny = 1.0, 1e-6
+    delta = {"w": jnp.asarray([[big, tiny]])}
+    codec = Fp8Codec()
+    shipped = codec.decode(codec.encode(delta)[0])
+    assert float(shipped["w"][0, 1]) == 0.0
+    residual = {"w": jnp.zeros((1, 2))}
+    total = np.zeros(2)
+    for _ in range(10):
+        payload, residual = codec.encode(delta, residual)
+        total += np.asarray(codec.decode(payload)["w"][0])
+    np.testing.assert_allclose(total[1], 10 * tiny, rtol=0.5)
+
+
 def test_payload_nbytes_counts_wire_dtype_and_scales():
     delta = {"w": jnp.zeros((2, 16))}
     assert F32Passthrough().encode(delta)[0].nbytes() == 2 * 16 * 4
     assert BF16Cast().encode(delta)[0].nbytes() == 2 * 16 * 2
-    # int8: 1 byte/elem + one f32 scale per worker row
+    # int8/fp8: 1 byte/elem + one f32 scale per worker row
     assert Int8Symmetric().encode(delta)[0].nbytes() == 2 * 16 + 2 * 4
+    assert Fp8Codec().encode(delta)[0].nbytes() == 2 * 16 + 2 * 4
 
 
 def test_make_codec_aliases_and_unknown():
     assert make_codec("float32").name == "f32"
     assert make_codec("bf16").name == "bf16"
     assert make_codec("int8").width == 1
+    for spelling in ("fp8", "float8", "e4m3", "fp8_e4m3"):
+        c = make_codec(spelling)
+        assert c.name == "fp8" and c.width == 1 and c.qdtype == "fp8_e4m3"
+    for spelling in ("e5m2", "fp8_e5m2"):
+        c = make_codec(spelling)
+        assert c.name == "fp8_e5m2" and c.qdtype == "fp8_e5m2"
     with pytest.raises(ValueError):
         make_codec("fp4")
+
+
+@pytest.mark.parametrize("use_kernel", [True, False])
+@pytest.mark.parametrize("qd", ["int8", "fp8_e4m3", "fp8_e5m2"])
+def test_codec_scale_shapes_scalar_and_empty_sentinel_leaves(qd, use_kernel):
+    """Regression: the (K, 1, ...) keepdims scale contract assumed >=1-d
+    tensors — scalar params (0-d) must quantize elementwise with a 0-d
+    scale, and 0-size sentinel leaves must pass through with unit scales
+    instead of producing NaN scales from an empty amax."""
+    codec = make_codec(qd if qd != "fp8_e4m3" else "fp8",
+                       use_kernel=use_kernel)
+    delta = {"w": jnp.asarray([[0.25, -1.0], [3.0, 0.5]]),
+             "scalar": jnp.asarray(0.75),
+             "sentinel": jnp.zeros((2, 0))}
+    residual = jax.tree.map(jnp.zeros_like, delta)
+    payload, new_res = codec.encode(delta, residual)
+    assert payload.scales["w"].shape == (2, 1)
+    assert payload.scales["scalar"].shape == ()
+    assert payload.scales["sentinel"].shape == (2, 1)
+    assert not np.isnan(np.asarray(payload.scales["sentinel"])).any()
+    back = codec.decode(payload)
+    for key in delta:
+        assert back[key].shape == delta[key].shape
+        assert new_res[key].shape == delta[key].shape
+    assert np.asarray(back["sentinel"]).size == 0
+    # a scalar is its own amax, so it lands exactly on the top bucket
+    np.testing.assert_allclose(float(back["scalar"]), 0.75, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(new_res["scalar"]),
+                               0.75 - np.asarray(back["scalar"]), atol=1e-7)
 
 
 # ---------------------------------------------------------------------------
@@ -156,6 +243,28 @@ def test_quantize_kernel_no_residual_path():
     qr, nrr, _ = reference_quantize_ef(x)
     np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
     np.testing.assert_allclose(np.asarray(nr), np.asarray(nrr), atol=1e-7)
+
+
+@pytest.mark.parametrize("dtype", ["fp8_e4m3", "fp8_e5m2"])
+@pytest.mark.parametrize("shape", [(2, 128), (3, 5, 7), (1, 100), (4,)])
+def test_quantize_kernel_matches_oracle_fp8(dtype, shape):
+    """Same contract as the int8 sweep for both fp8 flavors: scales agree
+    to reduction-order noise and the dequantized payloads agree within one
+    quantization level."""
+    ks = jax.random.split(jax.random.key(sum(shape) + len(dtype)), 2)
+    x = jax.random.normal(ks[0], shape) * 0.05
+    r = jax.random.normal(ks[1], shape) * 0.005
+    q, nr, s = quantize_ef(x, r, dtype=dtype, interpret=True)
+    qr, nrr, sr = reference_quantize_ef(x, r, dtype=dtype)
+    assert q.dtype == qr.dtype and q.dtype.itemsize == 1
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    out = dequantize(q, s, interpret=True)
+    ref = reference_dequantize(qr, sr)
+    rel = 2.0 ** -3 if dtype == "fp8_e4m3" else 2.0 ** -2
+    tol = float(np.max(np.abs(np.asarray(ref)))) * rel \
+        + float(np.max(np.asarray(sr)))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=tol)
+    np.testing.assert_allclose(np.asarray(nr), np.asarray(nrr), atol=tol)
 
 
 # ---------------------------------------------------------------------------
@@ -227,6 +336,18 @@ def test_int8_error_feedback_tracks_f32_loss():
     assert rel < 0.02, rel
 
 
+def test_fp8_error_feedback_tracks_f32_loss():
+    """The fp8 (e4m3) error-feedback toy run matches the f32 final loss
+    within 2% — same acceptance bar as int8."""
+    cfg, m, params, dcfg = _setup(k=2, h=4)
+    _, f32_hist = _run(m, params, dcfg, DiLoCoSync(), cfg, 20, k=2)
+    dcfg8 = DiLoCoConfig(num_workers=2, h_inner_steps=4, delta_dtype="fp8")
+    _, fp8_hist = _run(m, params, dcfg8, DiLoCoSync(), cfg, 20, k=2)
+    rel = abs(fp8_hist["loss"][-1] - f32_hist["loss"][-1]) \
+        / f32_hist["loss"][-1]
+    assert rel < 0.02, rel
+
+
 def test_streaming_int8_error_feedback_converges():
     cfg, m, params, _ = _setup()
     dcfg = DiLoCoConfig(num_workers=2, h_inner_steps=4, delta_dtype="int8")
@@ -264,6 +385,23 @@ def test_codec_aware_payload_schedules():
                    for e in DiLoCoSync().payload_schedule(n, steps, bf))
     assert bf_bytes * 2 == base
     assert [e.fragment for e in events] == [0, 1, 2, 3]
+
+
+def test_fp8_pipelined_ships_half_the_int8_bytes():
+    """The BENCH_train acceptance arm, as a unit statement: fp8 wire width
+    equals int8's, so doubling the fragment count (one n/F fragment per
+    outer round) halves the boundary bytes exactly."""
+    n, steps, h = 1_000_000, 400, 100
+    i8 = DiLoCoConfig(h_inner_steps=h, delta_dtype="int8")
+    f8 = DiLoCoConfig(h_inner_steps=h, delta_dtype="fp8")
+    i8_ev = PipelinedSync(num_fragments=4,
+                          delay=h // 2).payload_schedule(n, steps, i8)
+    f8_ev = PipelinedSync(num_fragments=8,
+                          delay=h // 2).payload_schedule(n, steps, f8)
+    assert all(e.codec == "fp8" for e in f8_ev)
+    i8_bytes = sum(e.bytes_per_worker for e in i8_ev)
+    f8_bytes = sum(e.bytes_per_worker for e in f8_ev)
+    assert i8_bytes == 2 * f8_bytes, (i8_bytes, f8_bytes)
 
 
 # ---------------------------------------------------------------------------
