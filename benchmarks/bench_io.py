@@ -1,0 +1,34 @@
+"""Shared JSON I/O for the benchmark writers.
+
+Several benchmarks contribute sections to the same artifact (e.g.
+``BENCH_train.json`` holds train_bench's loop arms AND
+strategies_bench's gossip section).  A plain ``json.dump`` from either
+writer would clobber the other's section, so every writer goes through
+``merge_json``: read-modify-write, preserving keys it does not own.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict
+
+
+def merge_json(path: str, updates: Dict) -> Dict:
+    """Merge ``updates`` into the JSON object at ``path`` (top-level keys;
+    created if missing or unreadable) and write it back atomically.
+    Returns the merged object."""
+    data: Dict = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                loaded = json.load(f)
+            if isinstance(loaded, dict):
+                data = loaded
+        except (json.JSONDecodeError, OSError):
+            pass   # corrupt artifact: rebuild from this writer's section
+    data.update(updates)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(data, f, indent=1)
+    os.replace(tmp, path)
+    return data

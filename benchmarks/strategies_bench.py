@@ -18,24 +18,35 @@ against the f32 blocking-DiLoCo baseline — quantization is only a win if
 the loss curve holds, so the grid shows bytes × wall-clock × loss side by
 side.
 
-CSV rows: ``strategies/<arch>/<codec>/<strategy>/<fleet>,0.0,<derived>``
-and ``strategies/loss/<codec>-<strategy>,0.0,<derived>``.
+The ``gossip`` section (merged into ``BENCH_train.json["gossip"]``)
+measures the no-all-reduce claims: per-worker bytes stay FLAT as the
+fleet grows 8 -> 64 (each worker ships one peer payload per round, vs
+the all-reduce gather's (K-1)x), the async pair-barrier wall-clock never
+exceeds the fleet-barrier baseline at the same staleness bound, and a
+tiny ring-gossip training run lands within 1% of blocking DiLoCo's
+final loss.
+
+CSV rows: ``strategies/<arch>/<codec>/<strategy>/<fleet>,0.0,<derived>``,
+``strategies/loss/<codec>-<strategy>,0.0,<derived>`` and
+``strategies/gossip/...`` rows for the gossip section.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Dict, Optional
 
 from repro.configs import get_config
 from repro.configs.base import DiLoCoConfig, TRAIN_4K
-from repro.core.sync import (CompressedDDPSync, DDPSync, DiLoCoSync,
-                             OverlappedSync, PipelinedSync, StreamingSync,
+from repro.core.sync import (AsyncGossipSync, CompressedDDPSync, DDPSync,
+                             DiLoCoSync, GossipSync, OverlappedSync,
+                             PipelinedSync, StreamingSync,
                              compressed_ddp_config)
 from repro.core.transport import wire_width
 from repro.launch.analytic import flops_per_device
 from repro.launch.comm_sim import (CommCalibration, default_comm_model,
                                    load_calibration, modeled_step_time,
-                                   simulate_heterogeneous, simulate_schedule)
+                                   simulate_gossip, simulate_heterogeneous,
+                                   simulate_schedule)
 
 CHIPS_PER_WORKER = 256   # one pod per DiLoCo worker
 CODECS = ("float32", "bfloat16", "int8", "fp8")
@@ -128,6 +139,128 @@ def rows_for(arch_id: str, steps: int = 500, h: int = 100,
                     f32_diloco_bytes / max(r["total_bytes"], 1.0))
                 out.append(r)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Gossip section — fleet sweep, async-vs-barrier wall, tiny loss run
+# ---------------------------------------------------------------------------
+
+GOSSIP_FLEET = (8, 16, 32, 64)
+
+
+def gossip_fleet_sweep(arch_id: str, steps: int, h: int) -> Dict:
+    """Per-worker boundary bytes over ``steps`` as the fleet grows:
+    ring gossip ships one peer payload per round regardless of K, the
+    all-reduce DiLoCo gather ships (K-1) payloads, DDP's summable ring
+    all-reduce 2(K-1)/K per step."""
+    n = get_config(arch_id).param_count()
+    per_k = {}
+    for k in GOSSIP_FLEET:
+        dcfg = DiLoCoConfig(num_workers=k, h_inner_steps=h)
+        row = {}
+        for name, strat in (("gossip", GossipSync(topology="ring")),
+                            ("diloco", DiLoCoSync()),
+                            ("ddp", DDPSync())):
+            row[name] = sum(e.bytes_per_worker
+                            for e in strat.payload_schedule(n, steps, dcfg))
+        per_k[str(k)] = row
+    lo, hi = str(GOSSIP_FLEET[0]), str(GOSSIP_FLEET[-1])
+    return {"per_worker_bytes": per_k, "params": n, "steps": steps, "h": h,
+            "gossip_bytes_flat": per_k[lo]["gossip"] == per_k[hi]["gossip"],
+            "diloco_growth": per_k[hi]["diloco"] / per_k[lo]["diloco"]}
+
+
+def gossip_async_wall(arch_id: str, steps: int, h: int,
+                      calibration: Optional[CommCalibration] = None) -> Dict:
+    """Modeled wall-clock on the heterogeneous fleet: async gossip's
+    per-pair barriers vs the SAME payload events replayed through the
+    fleet-barrier simulator at the same staleness bound.  A pair maximum
+    can never exceed the fleet maximum, so async <= barrier by
+    construction — the row quantifies by how much."""
+    cfg = get_config(arch_id)
+    n = cfg.param_count()
+    k = len(HET_SPEEDS)
+    step_time = modeled_step_time(
+        flops_per_device(cfg, TRAIN_4K, CHIPS_PER_WORKER)["total_flops"],
+        calibration=calibration)
+    times = [step_time * m for m in HET_SPEEDS]
+    comm = default_comm_model()
+    bound = max(h // 4, 1)
+    jitter = max(h // 10, 1)
+    dcfg = DiLoCoConfig(num_workers=k, h_inner_steps=h, topology="ring",
+                        staleness_bound=bound, h_jitter=jitter)
+    strat = AsyncGossipSync(topology="ring", staleness_bound=bound,
+                            jitter=jitter)
+    rounds = strat.gossip_rounds(n, steps, dcfg)
+    events = strat.payload_schedule(n, steps, dcfg)
+    gossip = simulate_gossip(rounds, steps, times, comm,
+                             staleness_steps=bound)
+    barrier = simulate_heterogeneous(events, steps, times, comm,
+                                     staleness_steps=bound)
+    # context row: what the same fleet pays for the full all-reduce gather
+    allreduce = simulate_heterogeneous(
+        DiLoCoSync().payload_schedule(n, steps, dcfg), steps, times, comm,
+        staleness_steps=bound)
+    return {"staleness_bound": bound, "jitter": jitter, "k": k,
+            "async_wall_s": gossip["wall_clock_s"],
+            "barrier_wall_s": barrier["wall_clock_s"],
+            "allreduce_wall_s": allreduce["wall_clock_s"],
+            "async_leq_barrier": (gossip["wall_clock_s"]
+                                  <= barrier["wall_clock_s"] + 1e-9)}
+
+
+def gossip_loss_rows(steps: int = 48, k: int = 4, h: int = 8) -> Dict:
+    """Tiny REAL training run: ring gossip vs blocking DiLoCo on
+    nanochat-d20-tiny (train_bench's CPU-regime config), identical data.
+    Ring gossip pays half the mixing per round, so the acceptance bar is
+    a final loss within 1% of the all-reduce mean."""
+    import jax
+    from repro.configs import get_reduced
+    from repro.configs.base import OptimizerConfig
+    from repro.core import DistTrainer
+    from repro.models import build_model
+    from repro.models.transformer import init_params
+
+    cfg = dataclasses.replace(
+        get_reduced("nanochat-d20"), name="nanochat-d20-tiny",
+        num_layers=1, d_model=16, num_heads=1, num_kv_heads=1, head_dim=16,
+        d_ff=64, vocab_size=512)
+    model = build_model(cfg)
+    params, _ = init_params(cfg, jax.random.key(0))
+    opt = OptimizerConfig(total_steps=steps, warmup_steps=0,
+                          schedule="constant", learning_rate=0.02,
+                          adam_lr=1e-3, muon_ns_steps=2, grad_clip=0.0)
+    dcfg = DiLoCoConfig(num_workers=k, h_inner_steps=h)
+
+    def data(step):
+        key = jax.random.key(1000 + step)
+        toks = jax.random.randint(key, (k, 4, 16), 0, cfg.vocab_size)
+        return {"tokens": toks, "labels": (toks + 1) % cfg.vocab_size}
+
+    losses = {}
+    for name, strat in (("diloco", DiLoCoSync()),
+                        ("gossip_ring", GossipSync(topology="ring"))):
+        dt = DistTrainer(model.loss, opt, dcfg, strat)
+        state = dt.init(params)
+        _, hist = dt.run(state, data, steps)
+        losses[name] = hist["loss"][-1]
+    frac = ((losses["gossip_ring"] - losses["diloco"])
+            / abs(losses["diloco"]))
+    return {"arch": cfg.name, "steps": steps, "k": k, "h": h,
+            "diloco_loss": losses["diloco"],
+            "gossip_ring_loss": losses["gossip_ring"],
+            "loss_vs_diloco_frac": frac,
+            "within_1pct": abs(frac) <= 0.01}
+
+
+def gossip_section(arch_id: str, steps: int, h: int, small: bool = False,
+                   calibration: Optional[CommCalibration] = None) -> Dict:
+    return {
+        "fleet_sweep": gossip_fleet_sweep(arch_id, steps, h),
+        "async_wall": gossip_async_wall(arch_id, steps, h,
+                                        calibration=calibration),
+        "loss": gossip_loss_rows(steps=32 if small else 48),
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -231,6 +364,33 @@ def main(arch_id: str = "nanochat-d20", steps: int = 500,
             print(f"strategies/loss/{r['codec']}-{r['strategy']},0.0,"
                   f"final_loss={r['final_loss']:.4f} "
                   f"vs_f32={100 * r['vs_f32_frac']:+.2f}%")
+
+    from benchmarks.bench_io import merge_json
+    sec = gossip_section(arch_id, steps, h, small=small, calibration=cal)
+    merge_json("BENCH_train.json", {"gossip": sec})
+    sweep = sec["fleet_sweep"]
+    for k in GOSSIP_FLEET:
+        row = sweep["per_worker_bytes"][str(k)]
+        print(f"strategies/gossip/fleet/k{k},0.0,"
+              f"gossip={row['gossip']/1e9:.3f}GB "
+              f"diloco={row['diloco']/1e9:.3f}GB "
+              f"ddp={row['ddp']/1e9:.3f}GB")
+    print(f"strategies/gossip/fleet,0.0,"
+          f"bytes_flat={sweep['gossip_bytes_flat']} "
+          f"diloco_growth={sweep['diloco_growth']:.1f}x")
+    aw = sec["async_wall"]
+    print(f"strategies/gossip/async_wall,0.0,"
+          f"async={aw['async_wall_s']:.1f}s "
+          f"barrier={aw['barrier_wall_s']:.1f}s "
+          f"allreduce={aw['allreduce_wall_s']:.1f}s "
+          f"bound={aw['staleness_bound']} jitter={aw['jitter']} "
+          f"async_leq_barrier={aw['async_leq_barrier']}")
+    lo = sec["loss"]
+    print(f"strategies/gossip/loss,0.0,"
+          f"diloco={lo['diloco_loss']:.4f} "
+          f"gossip_ring={lo['gossip_ring_loss']:.4f} "
+          f"vs_diloco={100 * lo['loss_vs_diloco_frac']:+.2f}% "
+          f"within_1pct={lo['within_1pct']}")
 
 
 if __name__ == "__main__":

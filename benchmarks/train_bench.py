@@ -31,7 +31,6 @@ CI-smoke size).
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 from typing import Dict
@@ -203,9 +202,11 @@ def bench_train(steps: int = 96, k: int = 2, B: int = 6, S: int = 16,
 
 
 def main(small: bool = False) -> None:
+    from benchmarks.bench_io import merge_json
     res = bench_train(small=small)
-    with open("BENCH_train.json", "w") as f:
-        json.dump(res, f, indent=1)
+    # merge, don't overwrite: strategies_bench owns the "gossip" section
+    # of the same artifact
+    merge_json("BENCH_train.json", res)
     print("name,us_per_call,derived")
     for arm in ("legacy_per_step", "per_step", "chunked",
                 "chunked_donate_prefetch"):

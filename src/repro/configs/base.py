@@ -195,13 +195,23 @@ class DiLoCoConfig:
     # --- sync-strategy runtime (repro.core.sync / DistTrainer) -------------
     strategy: str = "diloco"          # ddp | diloco | streaming | overlapped
                                       # | pipelined (DiLoCoX-style fragments)
+                                      # | gossip | async_gossip (NoLoCo-style
+                                      # peer averaging, no all-reduce)
     num_fragments: int = 4            # streaming/pipelined: F fragments
     sync_delay: int = 0               # overlapped/pipelined: steps between
                                       # delta capture and outer application
     h_jitter: int = 0                 # overlapped: max per-worker straggler
-                                      # jitter (inner steps) on delta capture
+                                      # jitter (inner steps) on delta capture;
+                                      # async_gossip: max per-worker period
+                                      # jitter (worker i syncs every H+j_i)
     sync_seed: int = 0                # seeds the per-worker straggler jitter
-                                      # draws (reproducible runs)
+                                      # draws and the gossip topology schedule
+                                      # (reproducible runs)
+    topology: str = "ring"            # gossip peer schedule: ring | random
+                                      # matching | full (= the DiLoCo mean)
+    staleness_bound: int = 0          # async_gossip: drop peer contributions
+                                      # staler than this many inner steps
+                                      # (0 = synchronous apply)
 
 
 @dataclass(frozen=True)

@@ -8,9 +8,11 @@ from repro.core.schedule import AdaptiveH, FixedH, StagedH
 from repro.core.grpo import GRPOTrainer, arith_reward_fn, grpo_loss
 from repro.core.streaming import (StreamingDiLoCoTrainer, fragment_masks,
                                   run_streaming_diloco)
-from repro.core.sync import (DDPSync, DiLoCoSync, OverlappedSync,
+from repro.core.sync import (AsyncGossipSync, DDPSync, DiLoCoSync,
+                             GossipRound, GossipSync, OverlappedSync,
                              PipelinedSync, StreamingSync, SyncEvent,
-                             SyncStrategy, make_strategy)
+                             SyncStrategy, gossip_peers, make_strategy,
+                             register_strategy, strategy_names)
 from repro.core.transport import (BF16Cast, Codec, F32Passthrough,
                                   Int8Symmetric, OuterPayload, Transport,
                                   make_codec)
@@ -23,6 +25,8 @@ __all__ = ["DiLoCoTrainer", "DiLoCoState", "run_diloco", "DDPTrainer",
            "StreamingDiLoCoTrainer", "fragment_masks",
            "run_streaming_diloco", "DistTrainer", "SyncStrategy", "SyncEvent",
            "DDPSync", "DiLoCoSync", "StreamingSync", "OverlappedSync",
-           "PipelinedSync", "make_strategy", "Codec", "OuterPayload",
+           "PipelinedSync", "GossipSync", "AsyncGossipSync", "GossipRound",
+           "gossip_peers", "register_strategy", "strategy_names",
+           "make_strategy", "Codec", "OuterPayload",
            "Transport", "F32Passthrough", "BF16Cast", "Int8Symmetric",
            "make_codec"]

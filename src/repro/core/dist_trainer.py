@@ -29,14 +29,18 @@ default ``chunked=True`` loop makes that true:
   boundary (further split by ``eval_every`` and ``num_steps``), so one
   device dispatch replaces ~H per-step dispatches.  For DiLoCo the chunk
   boundaries ARE the H boundaries; for streaming/pipelined schedules the
-  fragment events fire at the same steps they would per-step.
+  fragment events fire at the same steps they would per-step.  Runners on
+  per-worker event clocks (async gossip: worker i syncs every ``H + j_i``
+  steps) report the MIN over workers' next boundaries, so a chunk ends
+  whenever ANY worker is due — the contract is per-runner, not per-fleet.
 * **one fetch per chunk.**  Per-step per-worker losses come back as one
   (T, K) device array fetched with a single ``device_get``; ``after_step``
   is then replayed per step on the host with fixed-order means of those
   rows (between events it is pure bookkeeping by contract, see
   ``SyncRunner``), so histories —
-  ``step``/``loss``/``sync_steps``/``frag_syncs``/``evals`` — are
-  bit-identical to the per-step loop's.
+  ``step``/``loss``/``sync_steps``/``frag_syncs``/``evals``, plus any
+  runner-defined keys such as gossip's ``gossip_syncs`` (lists are
+  created on demand) — are bit-identical to the per-step loop's.
 * **buffer donation.**  The chunk jit donates the state (params, momenta,
   and optimizer moments update in place on accelerators), as do the
   runners' outer-step jits.  ``run`` defensively copies the caller's
@@ -176,7 +180,9 @@ class DistTrainer:
 
         def record(recs):
             for key, val in recs:
-                history[key].append(val)
+                # runners may emit novel keys (e.g. gossip_syncs): history
+                # lists are created on demand
+                history.setdefault(key, []).append(val)
 
         chunk_step_seconds = []
         with warnings.catch_warnings():
@@ -274,7 +280,9 @@ class DistTrainer:
 
         def record(recs):
             for key, val in recs:
-                history[key].append(val)
+                # runners may emit novel keys (e.g. gossip_syncs): history
+                # lists are created on demand
+                history.setdefault(key, []).append(val)
 
         step_durations = []
         t_prev = time.time()

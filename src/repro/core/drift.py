@@ -27,6 +27,15 @@ def _flatten(tree) -> jax.Array:
                             for x in jax.tree.leaves(tree)])
 
 
+def delta_cosine(tree_a, tree_b) -> jax.Array:
+    """Cosine similarity between two delta pytrees (flattened).  The
+    async-gossip apply rule uses this as its observed-drift signal: a
+    stale peer delta pointing away from the local one gets down-weighted
+    toward zero instead of averaged in at full weight."""
+    a, b = _flatten(tree_a), _flatten(tree_b)
+    return jnp.vdot(a, b) / (jnp.linalg.norm(a) * jnp.linalg.norm(b) + 1e-12)
+
+
 def param_drift(worker_params, global_params) -> Dict[str, jax.Array]:
     """Dispersion of per-worker deltas.  worker_params has leading K."""
     k = jax.tree.leaves(worker_params)[0].shape[0]

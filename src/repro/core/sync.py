@@ -27,7 +27,21 @@ in ``repro.core.dist_trainer``) drives vmapped inner steps, and a
                        applied ``delay`` steps later.  Each parameter syncs
                        every F·H steps, so combined with the int8 codec the
                        boundary traffic drops another ~4F× below f32
-                       DiLoCo at unchanged compute.
+                       DiLoCo at unchanged compute,
+* ``GossipSync``     — NoLoCo-style no-all-reduce averaging
+                       (arXiv:2506.10911): each outer round every worker
+                       averages its delta with ONE peer drawn from a
+                       deterministic topology schedule (ring / random
+                       matching / full), so per-worker sync traffic is
+                       O(1) in fleet size.  Workers keep their own anchor
+                       + outer momentum; K=2 (any pairing) and the full
+                       topology are bit-exact ``DiLoCoSync``,
+* ``AsyncGossipSync``— gossip where workers sync on their OWN step clocks
+                       (per-worker period H+jitter_i) and the apply rule
+                       drops or drift-reweights peer contributions staler
+                       than ``staleness_bound`` inner steps.  With
+                       jitter=0 and bound=0 it is bit-exact ``GossipSync``
+                       (the synchronous barrier).
 
 A strategy has two faces:
 
@@ -36,6 +50,46 @@ A strategy has two faces:
 2. ``payload_schedule(n_params, num_steps, cfg) -> [SyncEvent]`` — the pure
    communication footprint, consumed by the event-driven wall-clock
    simulator in ``repro.launch.comm_sim``.
+
+The ``SyncRunner`` contract (what ``DistTrainer`` drives)
+---------------------------------------------------------
+* ``after_step(state, step, loss) -> (state, records)`` — called after
+  EVERY inner step.  Between events it must be pure host bookkeeping that
+  ignores ``state`` (under chunking it sees the post-chunk state for every
+  step of the chunk); at an event it may run jitted device work and must
+  return the replaced state.  ``records`` are ``(history_key, value)``
+  pairs appended to the run history — any key is allowed, the trainer
+  creates history lists on demand.
+* ``next_event(step) -> Optional[int]`` — the first step >= ``step``
+  whose ``after_step`` may touch device state.  The chunked loop scans
+  inner steps to exactly that boundary in ONE device dispatch, so an
+  under-reported event (firing mid-chunk) is a contract violation the
+  trainer raises on.  ``None`` = no event before the run ends.
+* ``refresh(state) -> state`` — bring ``global_params`` up to date for an
+  observer (eval hook); identity for strategies that maintain it at every
+  sync.
+* ``finalize(state, num_steps) -> (state, records)`` — called once after
+  the last step; flushes trailing partial rounds / in-flight applies so
+  ``global_params`` reflects all work.
+* donation (PR 4 rules): when bound with ``donate=True`` the runner's
+  jits donate their state/residual/anchor arguments — call them as
+  ``state, self.x = self._jit(state, self.x)`` so stale host references
+  never outlive donated buffers, and any snapshot kept across steps must
+  be a FRESH buffer (``jax.tree.map(jnp.copy, ...)``), never an alias of
+  ``state`` leaves.
+
+Per-worker byte accounting (``hop_bytes_per_worker``)
+-----------------------------------------------------
+``payload_schedule`` denominates ``SyncEvent.bytes_per_worker`` in bytes
+each worker actually moves over ITS boundary link for one hop:
+
+* codec'd delta exchange (DiLoCo family): per-worker scales make
+  in-network reduction impossible, so the replicate hop is an all-GATHER
+  — (K-1)·payload per worker, growing with fleet size;
+* f32 DDP gradients are summable: bandwidth-optimal ring all-reduce,
+  2·(K-1)/K·payload ≈ 2·payload;
+* gossip: ONE peer payload per worker, flat in K (full topology is the
+  gather again — it IS the DiLoCo mean).
 
 Transport-layer contract (see ``repro.core.transport`` for the wire format)
 ---------------------------------------------------------------------------
@@ -56,6 +110,7 @@ not writing a new training loop.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import random as _pyrandom
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -87,6 +142,30 @@ class SyncEvent:
     apply_step: int
     fragment: int = -1
     codec: str = "f32"
+
+
+def hop_bytes_per_worker(payload_bytes: int, k: int, collective: str) -> int:
+    """Bytes ONE worker moves over its boundary link for one sync hop.
+
+    ``collective`` names what the hop actually is on the wire:
+
+    * ``"gather"`` — codec'd payloads carry per-worker scales, so rows
+      cannot be summed in-network; every worker receives the other K-1
+      rows: (K-1)·payload (K=1 degenerates to 1·payload);
+    * ``"reduce"`` — summable f32 tensors (DDP grads): bandwidth-optimal
+      ring all-reduce, 2·(K-1)/K·payload;
+    * ``"peer"``   — gossip: one peer payload, flat in K.
+    """
+    if collective == "gather":
+        return payload_bytes * max(k - 1, 1)
+    if collective == "reduce":
+        if k <= 1:
+            return payload_bytes
+        return int(payload_bytes * 2 * (k - 1) / k)
+    if collective == "peer":
+        return payload_bytes
+    raise ValueError(f"unknown collective {collective!r}; "
+                     "expected gather | reduce | peer")
 
 
 class SyncRunner:
@@ -176,7 +255,8 @@ class DDPSync(SyncStrategy):
         return _DDPRunner()
 
     def payload_schedule(self, n_params, num_steps, cfg):
-        b = 4 * n_params  # fp32 grads, every step, blocking
+        # fp32 grads are summable: ring all-reduce, every step, blocking
+        b = hop_bytes_per_worker(4 * n_params, cfg.num_workers, "reduce")
         return [SyncEvent(step=s, bytes_per_worker=b, kind="grads",
                           apply_step=s) for s in range(num_steps)]
 
@@ -231,7 +311,8 @@ class CompressedDDPSync(SyncStrategy):
                            else (cfg.grad_compress
                                  if cfg.grad_compress not in ("", "none")
                                  else "float32"))
-        b = codec.schedule_bytes(n_params)
+        b = hop_bytes_per_worker(codec.schedule_bytes(n_params),
+                                 cfg.num_workers, "gather")
         return [SyncEvent(step=s, bytes_per_worker=b, kind="grads",
                           apply_step=s, codec=codec.name)
                 for s in range(num_steps)]
@@ -295,7 +376,8 @@ class DiLoCoSync(SyncStrategy):
     def payload_schedule(self, n_params, num_steps, cfg):
         h = self.h or cfg.h_inner_steps
         codec = make_codec(cfg.delta_dtype)
-        b = codec.schedule_bytes(n_params)
+        b = hop_bytes_per_worker(codec.schedule_bytes(n_params),
+                                 cfg.num_workers, "gather")
         return [SyncEvent(step=s, bytes_per_worker=b, kind="delta",
                           apply_step=s, codec=codec.name)
                 for s in range(h - 1, num_steps, h)]
@@ -343,7 +425,9 @@ class StreamingSync(SyncStrategy):
         h = cfg.h_inner_steps
         period = max(h // self.num_fragments, 1)
         codec = make_codec(cfg.delta_dtype)
-        b = codec.schedule_bytes(n_params // self.num_fragments)
+        b = hop_bytes_per_worker(
+            codec.schedule_bytes(n_params // self.num_fragments),
+            cfg.num_workers, "gather")
         return [SyncEvent(step=s, bytes_per_worker=b, kind="fragment",
                           # a fragment may stream until its next slot
                           apply_step=s + period - 1,
@@ -491,7 +575,8 @@ class OverlappedSync(SyncStrategy):
     def payload_schedule(self, n_params, num_steps, cfg):
         h = self.h or cfg.h_inner_steps
         codec = make_codec(cfg.delta_dtype)
-        b = codec.schedule_bytes(n_params)
+        b = hop_bytes_per_worker(codec.schedule_bytes(n_params),
+                                 cfg.num_workers, "gather")
         return [SyncEvent(step=s, bytes_per_worker=b, kind="delta",
                           apply_step=s + self.delay, codec=codec.name)
                 for s in range(h - 1, num_steps, h)]
@@ -617,7 +702,9 @@ class PipelinedSync(SyncStrategy):
     def payload_schedule(self, n_params, num_steps, cfg):
         h = self.h or cfg.h_inner_steps
         codec = make_codec(cfg.delta_dtype)
-        b = codec.schedule_bytes(n_params // self.num_fragments)
+        b = hop_bytes_per_worker(
+            codec.schedule_bytes(n_params // self.num_fragments),
+            cfg.num_workers, "gather")
         return [SyncEvent(step=s, bytes_per_worker=b, kind="fragment",
                           apply_step=s + self.delay,
                           fragment=((s + 1) // h - 1) % self.num_fragments,
@@ -626,29 +713,616 @@ class PipelinedSync(SyncStrategy):
 
 
 # ---------------------------------------------------------------------------
-# Config-driven construction
+# Gossip — no-all-reduce peer averaging (NoLoCo, arXiv:2506.10911)
 # ---------------------------------------------------------------------------
 
-STRATEGIES = ("ddp", "ddp_compressed", "diloco", "streaming", "overlapped",
-              "pipelined")
+GOSSIP_TOPOLOGIES = ("ring", "random", "full")
+
+
+def _matching_from_order(order: List[int]) -> List[int]:
+    """Pair consecutive entries of ``order`` into an involution: peer[i] is
+    i's partner; an odd leftover is self-paired (a solo outer step)."""
+    peer = list(range(len(order)))
+    for a in range(0, len(order) - 1, 2):
+        i, j = order[a], order[a + 1]
+        peer[i], peer[j] = j, i
+    return peer
+
+
+def gossip_peers(k: int, round_idx: int, topology: str,
+                 seed: int = 0) -> Optional[List[int]]:
+    """The deterministic peer matching for one gossip round.
+
+    Returns ``peer`` with ``peer[peer[i]] == i`` (an involution), or
+    ``None`` for the full topology (average ALL workers — the DiLoCo
+    mean).  ``ring`` alternates the pairing offset each round so
+    information walks around the ring; ``random`` draws a fresh seeded
+    matching per round (NoLoCo's schedule), keyed by ``(seed, round)`` so
+    runs reproduce.
+    """
+    if topology == "full":
+        return None
+    if topology == "ring":
+        off = round_idx % 2
+        order = [(off + j) % k for j in range(k)]
+    elif topology == "random":
+        order = list(range(k))
+        # int-keyed (tuple seeding is deprecated); still (seed, round)-unique
+        _pyrandom.Random((seed << 32) ^ round_idx).shuffle(order)
+    else:
+        raise ValueError(f"unknown gossip topology {topology!r}; "
+                         f"expected one of {GOSSIP_TOPOLOGIES}")
+    return _matching_from_order(order)
+
+
+@dataclasses.dataclass(frozen=True)
+class GossipRound:
+    """One gossip exchange for the event-driven simulator
+    (``repro.launch.comm_sim.simulate_gossip``).
+
+    ``emit_steps[w]`` is the (worker-local) step at which worker w ships
+    its ``nbytes`` payload (-1 = w does not participate this round);
+    ``deps[w]`` lists the ``(src_worker, src_emit_step)`` transfers w's
+    apply consumes — a pair barrier for ring/random gossip, all K-1 peers
+    for the full topology, empty when the contribution was dropped."""
+    emit_steps: Tuple[int, ...]
+    deps: Tuple[Tuple[Tuple[int, int], ...], ...]
+    nbytes: int
+    codec: str = "f32"
+
+
+def _gossip_payload_bytes(codec, n_params: int) -> int:
+    """One gossip publication on the wire: the codec'd delta PLUS the
+    sender's f32 anchors and outer momentum (pair consensus averages the
+    whole outer state — without it the receiver cannot mix, and the
+    per-worker anchors random-walk apart; NoLoCo ships parameters for
+    the same reason).  Still one flat peer payload, independent of fleet
+    size — the all-reduce gather ships (K-1) of these."""
+    return codec.schedule_bytes(n_params) + 2 * 4 * n_params
+
+
+def _gossip_outer_rows(cfg, state, anchors, v, avg):
+    """Per-row Nesterov outer update on stacked (K, ...) trees.  The math
+    in ``outer_opt.outer_update`` is purely elementwise, so the stacked
+    call IS the per-row update — no vmap needed, and the emitted code
+    matches DiLoCoSync's unstacked call (pinned by the K=2 equivalence
+    test)."""
+    new_anchors, ostate = outer_opt.outer_update(
+        anchors, avg, outer_opt.OuterState(v=v, t=state.outer.t), cfg)
+    return new_anchors, ostate.v
+
+
+def _gossip_new_state(state, new_anchors):
+    """Worker params land on their updated anchors; ``global_params``
+    tracks the anchor mean (the fleet consensus estimate) so eval /
+    checkpoint consumers keep working; ``state.outer`` only counts."""
+    new_wp = jax.tree.map(lambda a, w: a.astype(w.dtype),
+                          new_anchors, state.worker_params)
+    new_global = jax.tree.map(
+        lambda a, g: jnp.mean(a.astype(jnp.float32), axis=0).astype(g.dtype),
+        new_anchors, state.global_params)
+    return state._replace(
+        global_params=new_global, worker_params=new_wp,
+        outer=outer_opt.OuterState(state.outer.v, state.outer.t + 1))
+
+
+def _gossip_pair_impl(cfg, replicate_fn, state, anchors, v, residual,
+                      peer_idx):
+    """One synchronized gossip round: encode per-worker deltas, ship ONE
+    peer row each, pair-average, per-row outer update.
+
+    Module-level on purpose: ``GossipSync`` and the fully-synchronous
+    ``AsyncGossipSync`` specialization jit THIS SAME function, so bitwise
+    equality between them is structural (one traced module), not a
+    compiler accident — XLA:CPU contracts mul+add chains to FMAs per
+    module at the LLVM level, below HLO, so even ``optimization_barrier``
+    cannot pin cross-module rounding."""
+    transport = outer_opt.make_transport(cfg, replicate_fn)
+    delta = jax.tree.map(
+        lambda w, a: w.astype(jnp.float32) - a.astype(jnp.float32),
+        state.worker_params, anchors)
+    dq, peer_dq, new_res = transport.exchange_peers(delta, peer_idx,
+                                                    residual)
+    # pair CONSENSUS: the pair averages its whole OUTER STATE — anchors
+    # and outer momentum — not just its deltas (NoLoCo ships parameters
+    # for the same reason).  Delta-only averaging leaves the per-worker
+    # anchors on an uncontracted random walk and the fleet never agrees;
+    # unmixed momentum keeps amplifying per-worker disagreement.  The
+    # matching is an involution, so both pair members compute the same
+    # mix and land on IDENTICAL outer state; x*0.5 is exact, so with
+    # equal rows (K=2) the mix is bitwise a no-op and the 2-row mean is
+    # bitwise the DiLoCo mean (a+b)/2.
+    def pair_mean(t):
+        peer_rows = jax.tree.map(lambda x: x[peer_idx], t)
+        return jax.tree.map(lambda a, b: a * 0.5 + b * 0.5, t, peer_rows)
+
+    base, v_mix = pair_mean(anchors), pair_mean(v)
+    avg = jax.tree.map(lambda a, b: a * 0.5 + b * 0.5, dq, peer_dq)
+    new_anchors, new_v = _gossip_outer_rows(cfg, state, base, v_mix, avg)
+    return _gossip_new_state(state, new_anchors), new_anchors, new_v, new_res
+
+
+def _gossip_async_impl(cfg, replicate_fn, state, anchors, v, residual, pub,
+                       pub_anch, pub_v, due, peer, base_w, gate):
+    """One async-gossip apply event with a dynamic due-set.
+
+    ``due``/``peer``/``base_w``/``gate`` are (K,) arrays — the jit
+    signature is fixed, so a changing due-set or matching never
+    retraces.  All rows are encoded in one fixed-shape pass; non-due rows
+    (params, momentum, EF residual, published delta) are masked back to
+    their previous values, so a worker that shipped nothing advances
+    nothing."""
+    from repro.core.drift import delta_cosine
+    transport = outer_opt.make_transport(cfg, replicate_fn)
+
+    def rows(m, a):      # (K,) mask/weight -> broadcast over a row tree
+        return m.reshape((-1,) + (1,) * (a.ndim - 1))
+
+    delta = jax.tree.map(
+        lambda w, a: w.astype(jnp.float32) - a.astype(jnp.float32),
+        state.worker_params, anchors)
+    dq, new_res = transport.exchange(delta, residual)
+
+    def publish(new, old):
+        return jax.tree.map(
+            lambda n, o: jnp.where(rows(due, n), n, o), new, old)
+
+    # a publication is (delta, anchors, momentum)-at-publish: the
+    # consumer mixes the whole outer state, so the pair-consensus
+    # contraction survives the missing barrier
+    pub_new = publish(dq, pub)
+    pub_anch_new = publish(anchors, pub_anch)
+    pub_v_new = publish(v, pub_v)
+    peer_dq = jax.tree.map(lambda p: p[peer], pub_new)
+    # observed drift: a stale peer delta pointing away from the local one
+    # is down-weighted toward zero (gate is set only for 0 < s <= bound)
+    cos = jax.vmap(delta_cosine)(dq, peer_dq)                        # (K,)
+    w_eff = jnp.where(gate, base_w * jnp.maximum(cos, 0.0), base_w)
+
+    def mix(own, published):
+        peer_rows = jax.tree.map(lambda p: p[peer], published)
+        return jax.tree.map(
+            lambda a, b: a * rows(1.0 - w_eff, a) + b * rows(w_eff, b),
+            own, peer_rows)
+
+    avg = jax.tree.map(
+        lambda a, b: a * rows(1.0 - w_eff, a) + b * rows(w_eff, b),
+        dq, peer_dq)
+    base = mix(anchors, pub_anch_new)
+    v_mix = mix(v, pub_v_new)
+    cand_anchors, cand_v = _gossip_outer_rows(cfg, state, base, v_mix, avg)
+
+    def merge(n, o):
+        return jnp.where(rows(due, n), n, o)
+
+    new_anchors = jax.tree.map(merge, cand_anchors, anchors)
+    new_v = jax.tree.map(merge, cand_v, v)
+    new_wp = jax.tree.map(
+        lambda a, wp: jnp.where(rows(due, wp), a.astype(wp.dtype), wp),
+        new_anchors, state.worker_params)
+    if residual is not None:
+        new_res = jax.tree.map(merge, new_res, residual)
+    new_global = jax.tree.map(
+        lambda a, g: jnp.mean(a.astype(jnp.float32), axis=0).astype(g.dtype),
+        new_anchors, state.global_params)
+    new_state = state._replace(
+        global_params=new_global, worker_params=new_wp,
+        outer=outer_opt.OuterState(state.outer.v, state.outer.t + 1))
+    return (new_state, new_anchors, new_v, new_res, pub_new, pub_anch_new,
+            pub_v_new)
+
+
+def _jit_gossip_pair(engine, donate: bool):
+    fn = functools.partial(_gossip_pair_impl, engine.cfg,
+                           engine.replicate_fn)
+    return jax.jit(fn, donate_argnums=(0, 1, 2, 3) if donate else ())
+
+
+class _GossipRunner(SyncRunner):
+    """Synchronized gossip rounds: every H steps each worker encodes its
+    delta against its OWN anchor, exchanges (delta, anchors, momentum)
+    with one peer from the topology schedule, and applies a per-worker
+    Nesterov outer update from the pair-averaged outer state on the
+    pair-averaged delta — so each pairing contracts the pair to an
+    IDENTICAL outer state and the fleet gossips toward consensus.  Anchors and outer momentum live
+    per worker (the runner holds them, like the EF residual —
+    ``DiLoCoState`` and checkpoints are untouched); ``global_params``
+    tracks the anchor mean at every sync.  With K=2 any pairing is the
+    pair mean over shared anchors, so this is bit-exact ``DiLoCoSync``;
+    the full topology binds ``_DiLoCoRunner`` directly (see
+    ``GossipSync.bind``)."""
+
+    def __init__(self, engine, params, h: int, topology: str, seed: int,
+                 donate: bool = True):
+        from repro.core.diloco import _broadcast
+        if topology == "full":
+            raise ValueError("full topology is the DiLoCo mean — "
+                             "GossipSync.bind delegates it to _DiLoCoRunner")
+        gossip_peers(2, 0, topology, seed)   # validate the topology name
+        self.engine = engine
+        self.h = h
+        self.topology = topology
+        self.seed = seed
+        self.k = engine.cfg.num_workers
+        self.since = 0
+        self.round = 0
+        self.anchors = _broadcast(params, self.k)
+        self.outer_v = jax.tree.map(
+            lambda p: jnp.zeros((self.k,) + p.shape, jnp.float32), params)
+        self.residual = engine.init_residual(params)
+        self._sync = _jit_gossip_pair(engine, donate)
+
+    def _do_sync(self, state, step):
+        peers = gossip_peers(self.k, self.round, self.topology, self.seed)
+        records = [("gossip_syncs", (step, w, peers[w], 0))
+                   for w in range(self.k)]
+        records.append(("sync_steps", step))
+        state, self.anchors, self.outer_v, self.residual = self._sync(
+            state, self.anchors, self.outer_v, self.residual,
+            jnp.asarray(peers, jnp.int32))
+        self.round += 1
+        return state, records
+
+    def after_step(self, state, step, loss):
+        self.since += 1
+        if self.since >= self.h:
+            self.since = 0
+            return self._do_sync(state, step)
+        return state, []
+
+    def next_event(self, step):
+        return step + max(self.h - self.since, 1) - 1
+
+    def finalize(self, state, num_steps):
+        if self.since:  # trailing partial round
+            return self._do_sync(state, num_steps - 1)
+        return state, []
+
+
+@dataclasses.dataclass(frozen=True)
+class GossipSync(SyncStrategy):
+    """NoLoCo-style gossip outer sync: each round every worker averages
+    anchors AND deltas with ONE peer from a deterministic ``topology``
+    schedule (ring / random matching / full, keyed by ``seed``), the
+    delta shipped through the codec transport — so per-worker boundary
+    traffic is one flat peer payload regardless of fleet size, and
+    fp8/int8 wire compression of the delta composes for free."""
+    name = "gossip"
+    h: Optional[int] = None
+    topology: str = "ring"
+    seed: int = 0
+
+    def bind(self, engine, params, donate: bool = True) -> SyncRunner:
+        h = self.h or engine.cfg.h_inner_steps
+        if self.topology == "full" or engine.cfg.num_workers == 2:
+            # the full matching — and K=2, where the one pair IS the
+            # fleet — averages ALL workers at once: definitionally the
+            # DiLoCo mean, so it binds the DiLoCo runner itself and the
+            # equivalence is structural (bitwise by shared compilation,
+            # not a per-module FMA-contraction accident)
+            return _DiLoCoRunner(engine, params, FixedH(h), donate)
+        return _GossipRunner(engine, params, h, self.topology, self.seed,
+                             donate)
+
+    def payload_schedule(self, n_params, num_steps, cfg):
+        h = self.h or cfg.h_inner_steps
+        codec = make_codec(cfg.delta_dtype)
+        if self.topology == "full":
+            # the DiLoCo mean: anchors are common knowledge, only the
+            # codec'd deltas travel (all-gather)
+            b = hop_bytes_per_worker(codec.schedule_bytes(n_params),
+                                     cfg.num_workers, "gather")
+        else:
+            b = hop_bytes_per_worker(_gossip_payload_bytes(codec, n_params),
+                                     cfg.num_workers, "peer")
+        return [SyncEvent(step=s, bytes_per_worker=b, kind="delta",
+                          apply_step=s, codec=codec.name)
+                for s in range(h - 1, num_steps, h)]
+
+    def gossip_rounds(self, n_params, num_steps, cfg) -> List[GossipRound]:
+        """Per-pair event model for ``comm_sim.simulate_gossip``."""
+        h = self.h or cfg.h_inner_steps
+        k = cfg.num_workers
+        codec = make_codec(cfg.delta_dtype)
+        b = (codec.schedule_bytes(n_params) if self.topology == "full"
+             else _gossip_payload_bytes(codec, n_params))
+        rounds = []
+        for r, s in enumerate(range(h - 1, num_steps, h)):
+            peers = gossip_peers(k, r, self.topology, self.seed)
+            if peers is None:
+                deps = tuple(tuple((j, s) for j in range(k) if j != w)
+                             for w in range(k))
+            else:
+                deps = tuple(((peers[w], s),) if peers[w] != w else ()
+                             for w in range(k))
+            rounds.append(GossipRound(emit_steps=(s,) * k, deps=deps,
+                                      nbytes=b, codec=codec.name))
+        return rounds
+
+
+class _AsyncGossipRunner(SyncRunner):
+    """Gossip on per-worker step clocks: worker i syncs every
+    ``periods[i] = H + jitter_i`` steps against the latest
+    (delta, anchors, momentum) its peer PUBLISHED (no barrier).  The
+    apply rule weights the peer contribution — outer-state mix and delta
+    average alike — by its observed staleness
+    s = own_step - peer_publish_step:
+
+    * s == 0            — peer is co-due: plain 0.5/0.5 pair average;
+    * 0 < s <= bound    — base weight 0.5·(1 - s/(bound+1)), further
+                          scaled by the observed drift
+                          ``max(cos(own_delta, peer_delta), 0)``
+                          (``repro.core.drift.delta_cosine``);
+    * s > bound / none  — dropped: solo outer step on the own delta.
+
+    One fixed-signature jit applies every event (due/peer/weight/gate are
+    dynamic (K,) arrays — a changing due-set never retraces); non-due
+    rows pass through untouched, including their EF residual.  With
+    jitter=0 and bound=0 every worker is co-due every H with staleness 0,
+    and the apply specializes to the SAME jitted pair graph
+    ``_GossipRunner`` uses — the reduction to the synchronous barrier is
+    bit-exact by construction."""
+
+    def __init__(self, engine, params, h: int, topology: str,
+                 staleness_bound: int, jitter: int, seed: int,
+                 donate: bool = True):
+        if topology == "full":
+            raise ValueError(
+                "async gossip is peer-based; topology='full' is the "
+                "synchronous DiLoCo mean — use GossipSync(topology='full') "
+                "or DiLoCoSync")
+        from repro.core.diloco import _broadcast
+        gossip_peers(2, 0, topology, seed)   # validate the topology name
+        if jitter < 0 or staleness_bound < 0:
+            raise ValueError(
+                f"jitter and staleness_bound must be >= 0, got "
+                f"jitter={jitter} staleness_bound={staleness_bound}")
+        self.engine = engine
+        self.k = k = engine.cfg.num_workers
+        self.h, self.topology = h, topology
+        self.bound = staleness_bound
+        self.seed = seed
+        rng = _pyrandom.Random(seed)
+        self.periods = tuple(
+            h + (rng.randint(0, jitter) if jitter else 0) for _ in range(k))
+        self.fully_sync = (jitter == 0 and staleness_bound == 0)
+        self.anchors = _broadcast(params, k)
+        self.outer_v = jax.tree.map(
+            lambda p: jnp.zeros((k,) + p.shape, jnp.float32), params)
+        self.residual = engine.init_residual(params)
+        self.pub_step = [-(10 ** 9)] * k      # host-side publish clocks
+        self.rounds = [0] * k
+        if self.fully_sync:
+            self.pub = self.pub_anch = self.pub_v = None
+            self._apply_pair = _jit_gossip_pair(engine, donate)
+        else:
+            # published (decoded delta, anchors, momentum), device-held
+            self.pub = jax.tree.map(
+                lambda p: jnp.zeros((k,) + p.shape, jnp.float32), params)
+            self.pub_anch = jax.tree.map(jnp.zeros_like, self.anchors)
+            self.pub_v = jax.tree.map(jnp.zeros_like, self.outer_v)
+            fn = functools.partial(_gossip_async_impl, engine.cfg,
+                                   engine.replicate_fn)
+            self._apply = jax.jit(
+                fn, donate_argnums=(0, 1, 2, 3, 4, 5, 6) if donate else ())
+
+    def _do_apply(self, state, step, due):
+        k = self.k
+        peer = list(range(k))
+        base_w = [0.0] * k
+        gate = [False] * k
+        records = []
+        for w in due:                     # publish BEFORE any read, so a
+            self.pub_step[w] = step       # co-due peer is staleness 0
+        for w in due:
+            p = gossip_peers(k, self.rounds[w], self.topology, self.seed)[w]
+            peer[w] = p
+            s = step - self.pub_step[p] if self.pub_step[p] >= 0 else -1
+            if p == w or s < 0 or s > self.bound:
+                base_w[w] = 0.0           # drop: solo outer step
+            elif s == 0:
+                base_w[w] = 0.5
+            else:
+                base_w[w] = 0.5 * (1.0 - s / (self.bound + 1.0))
+                gate[w] = True            # stale: drift-reweighted
+            records.append(("gossip_syncs", (step, w, p, s)))
+            self.rounds[w] += 1
+        if len(due) == k:
+            records.append(("sync_steps", step))
+        if self.fully_sync:
+            # equal clocks + bound 0: due is always the whole fleet and
+            # every peer co-due — run the synchronous pair graph
+            state, self.anchors, self.outer_v, self.residual = (
+                self._apply_pair(state, self.anchors, self.outer_v,
+                                 self.residual,
+                                 jnp.asarray(peer, jnp.int32)))
+            return state, records
+        due_set = set(due)
+        (state, self.anchors, self.outer_v, self.residual,
+         self.pub, self.pub_anch, self.pub_v) = self._apply(
+            state, self.anchors, self.outer_v, self.residual, self.pub,
+            self.pub_anch, self.pub_v,
+            jnp.asarray([w in due_set for w in range(k)], bool),
+            jnp.asarray(peer, jnp.int32),
+            jnp.asarray(base_w, jnp.float32),
+            jnp.asarray(gate, bool))
+        return state, records
+
+    def after_step(self, state, step, loss):
+        due = [w for w in range(self.k)
+               if (step + 1) % self.periods[w] == 0]
+        if not due:
+            return state, []
+        return self._do_apply(state, step, due)
+
+    def next_event(self, step):
+        return min((step // p + 1) * p - 1 for p in self.periods)
+
+    def finalize(self, state, num_steps):
+        due = [w for w in range(self.k) if num_steps % self.periods[w] != 0]
+        if not due:
+            return state, []
+        return self._do_apply(state, num_steps - 1, due)
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncGossipSync(SyncStrategy):
+    """Gossip on per-worker step clocks with a staleness-aware apply rule:
+    worker i syncs every ``H + jitter_i`` steps (jitter drawn from
+    ``seed``), consumes its peer's latest PUBLISHED delta without a
+    barrier, and drops or drift-reweights contributions staler than
+    ``staleness_bound`` inner steps.  ``jitter=0, staleness_bound=0`` is
+    bit-exact ``GossipSync`` (the synchronous barrier)."""
+    name = "async_gossip"
+    h: Optional[int] = None
+    topology: str = "ring"
+    staleness_bound: int = 0
+    jitter: int = 0
+    seed: int = 0
+
+    def bind(self, engine, params, donate: bool = True) -> SyncRunner:
+        h = self.h or engine.cfg.h_inner_steps
+        if (self.jitter == 0 and self.staleness_bound == 0
+                and engine.cfg.num_workers == 2
+                and self.topology != "full"):
+            # equal clocks + bound 0 + one pair: the synchronous fleet
+            # mean — same structural delegation as GossipSync at K=2
+            # (full still falls through to the runner's rejection)
+            gossip_peers(2, 0, self.topology, self.seed)  # validate name
+            return _DiLoCoRunner(engine, params, FixedH(h), donate)
+        return _AsyncGossipRunner(engine, params, h, self.topology,
+                                  self.staleness_bound, self.jitter,
+                                  self.seed, donate)
+
+    def _periods(self, h: int, k: int) -> Tuple[int, ...]:
+        rng = _pyrandom.Random(self.seed)
+        return tuple(
+            h + (rng.randint(0, self.jitter) if self.jitter else 0)
+            for _ in range(k))
+
+    def payload_schedule(self, n_params, num_steps, cfg):
+        # the mean worker's footprint: one peer payload every ~H steps,
+        # with the staleness window as overlap budget; the per-worker
+        # event model (per-pair barriers, per-worker clocks) is
+        # gossip_rounds + comm_sim.simulate_gossip
+        h = self.h or cfg.h_inner_steps
+        codec = make_codec(cfg.delta_dtype)
+        b = hop_bytes_per_worker(_gossip_payload_bytes(codec, n_params),
+                                 cfg.num_workers, "peer")
+        return [SyncEvent(step=s, bytes_per_worker=b, kind="delta",
+                          apply_step=s + self.staleness_bound,
+                          codec=codec.name)
+                for s in range(h - 1, num_steps, h)]
+
+    def gossip_rounds(self, n_params, num_steps, cfg) -> List[GossipRound]:
+        """Replay the runner's publish/consume schedule as simulator
+        events: one ``GossipRound`` per step with due workers, pair deps
+        only for consumed (non-dropped) contributions."""
+        h = self.h or cfg.h_inner_steps
+        k = cfg.num_workers
+        codec = make_codec(cfg.delta_dtype)
+        b = _gossip_payload_bytes(codec, n_params)
+        periods = self._periods(h, k)
+        pub = [-(10 ** 9)] * k
+        rounds_count = [0] * k
+        out = []
+        for step in range(num_steps):
+            due = [w for w in range(k) if (step + 1) % periods[w] == 0]
+            if not due:
+                continue
+            for w in due:
+                pub[w] = step
+            emit = [-1] * k
+            deps: List[Tuple] = [()] * k
+            for w in due:
+                emit[w] = step
+                p = gossip_peers(k, rounds_count[w], self.topology,
+                                 self.seed)[w]
+                s = step - pub[p]
+                if p != w and s <= self.staleness_bound:
+                    deps[w] = ((p, pub[p]),)
+                rounds_count[w] += 1
+            out.append(GossipRound(emit_steps=tuple(emit), deps=tuple(deps),
+                                   nbytes=b, codec=codec.name))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Config-driven construction — declarative method -> factory registry
+# ---------------------------------------------------------------------------
+
+# name -> factory(cfg, h_schedule) -> SyncStrategy.  New strategies register
+# in one line; launch.train derives its --method choices from this table.
+_STRATEGY_REGISTRY: Dict[str, Any] = {}
+
+
+def register_strategy(name: str):
+    """Decorator: register a ``factory(cfg, h_schedule) -> SyncStrategy``
+    under ``name`` (the ``DiLoCoConfig.strategy`` spelling)."""
+    def deco(factory):
+        _STRATEGY_REGISTRY[name] = factory
+        return factory
+    return deco
+
+
+def strategy_names() -> Tuple[str, ...]:
+    """Registered strategy names, in registration order."""
+    return tuple(_STRATEGY_REGISTRY)
+
+
+@register_strategy("ddp")
+def _ddp_factory(cfg, h_schedule):
+    return DDPSync()
+
+
+@register_strategy("ddp_compressed")
+def _ddp_compressed_factory(cfg, h_schedule):
+    return CompressedDDPSync()
+
+
+@register_strategy("diloco")
+def _diloco_factory(cfg, h_schedule):
+    return DiLoCoSync(h_schedule=h_schedule)
+
+
+@register_strategy("streaming")
+def _streaming_factory(cfg, h_schedule):
+    return StreamingSync(num_fragments=cfg.num_fragments)
+
+
+@register_strategy("overlapped")
+def _overlapped_factory(cfg, h_schedule):
+    return OverlappedSync(delay=cfg.sync_delay, jitter=cfg.h_jitter,
+                          seed=cfg.sync_seed)
+
+
+@register_strategy("pipelined")
+def _pipelined_factory(cfg, h_schedule):
+    return PipelinedSync(num_fragments=cfg.num_fragments,
+                         delay=cfg.sync_delay)
+
+
+@register_strategy("gossip")
+def _gossip_factory(cfg, h_schedule):
+    return GossipSync(topology=cfg.topology, seed=cfg.sync_seed)
+
+
+@register_strategy("async_gossip")
+def _async_gossip_factory(cfg, h_schedule):
+    return AsyncGossipSync(topology=cfg.topology,
+                           staleness_bound=cfg.staleness_bound,
+                           jitter=cfg.h_jitter, seed=cfg.sync_seed)
+
+
+STRATEGIES = strategy_names()
 
 
 def make_strategy(cfg: DiLoCoConfig, h_schedule: Optional[HSchedule] = None
                   ) -> SyncStrategy:
-    """Build the strategy the ``DiLoCoConfig`` knobs describe."""
-    if cfg.strategy == "ddp":
-        return DDPSync()
-    if cfg.strategy == "ddp_compressed":
-        return CompressedDDPSync()
-    if cfg.strategy == "diloco":
-        return DiLoCoSync(h_schedule=h_schedule)
-    if cfg.strategy == "streaming":
-        return StreamingSync(num_fragments=cfg.num_fragments)
-    if cfg.strategy == "overlapped":
-        return OverlappedSync(delay=cfg.sync_delay, jitter=cfg.h_jitter,
-                              seed=cfg.sync_seed)
-    if cfg.strategy == "pipelined":
-        return PipelinedSync(num_fragments=cfg.num_fragments,
-                             delay=cfg.sync_delay)
-    raise ValueError(f"unknown strategy {cfg.strategy!r}; "
-                     f"expected one of {STRATEGIES}")
+    """Build the strategy the ``DiLoCoConfig`` knobs describe (registry
+    lookup — see ``register_strategy``)."""
+    factory = _STRATEGY_REGISTRY.get(cfg.strategy)
+    if factory is None:
+        raise ValueError(f"unknown strategy {cfg.strategy!r}; "
+                         f"expected one of {strategy_names()}")
+    return factory(cfg, h_schedule)

@@ -295,3 +295,51 @@ class Transport:
             stacked_delta, residual, kind=kind, fragment=fragment)
         payload = self.ship(payload)
         return self.codec.decode(payload), new_residual
+
+    def ship_peers(self, payload: OuterPayload, peer_idx) -> OuterPayload:
+        """The gossip hop: worker i receives ONLY row ``peer_idx[i]`` of the
+        stacked payload — one peer payload per worker instead of the
+        (K-1)-row replicate gather, which is what makes gossip O(1) in
+        fleet size.
+
+        The row gather runs on the ENCODED data in the wire dtype (same
+        bitcast-carrier + optimization-barrier games as ``ship``), so the
+        narrow bytes are what cross the link.  On a pod mesh this hop
+        lowers to a ``ppermute`` along the worker axis (a named follow-up);
+        the single-device simulation gathers rows locally.
+        """
+        data = payload.data
+        cast = _WIRE_BITCAST.get(payload.codec)
+        if cast is not None:
+            carrier = jnp.dtype(cast[1])
+            data = jax.tree.map(
+                lambda x: jax.lax.bitcast_convert_type(x, carrier), data)
+        if payload.codec != "f32":
+            data = jax.lax.optimization_barrier(data)
+        data = jax.tree.map(lambda x: x[peer_idx], data)
+        if self.replicate_fn is not None:
+            data = self.replicate_fn(data)
+        if cast is not None:
+            wire = jnp.dtype(cast[0])
+            data = jax.tree.map(
+                lambda x: jax.lax.bitcast_convert_type(x, wire), data)
+        scales = payload.scales
+        if scales is not None:
+            scales = jax.tree.map(lambda s: s[peer_idx], scales)
+            if self.replicate_fn is not None:
+                scales = self.replicate_fn(scales)
+        return dataclasses.replace(payload, data=data, scales=scales)
+
+    def exchange_peers(self, stacked_delta, peer_idx, residual=None,
+                       kind: str = "delta", fragment: int = -1
+                       ) -> Tuple[Any, Any, Optional[Any]]:
+        """Peer-pair exchange: encode -> ship one peer row per worker ->
+        decode.  Returns ``(dq_own, dq_peer, new_residual)`` where
+        ``dq_own[i]`` is worker i's own decoded delta and ``dq_peer[i]``
+        is worker ``peer_idx[i]``'s.  ``peer_idx`` is a dynamic (K,) int32
+        array, so a changing matching (random topology) never retraces."""
+        payload, new_residual = self.codec.encode(
+            stacked_delta, residual, kind=kind, fragment=fragment)
+        peer_payload = self.ship_peers(payload, peer_idx)
+        return (self.codec.decode(payload), self.codec.decode(peer_payload),
+                new_residual)

@@ -13,7 +13,11 @@ fully documented:
   Transfers on one link serialize.  ``simulate_schedule`` models the
   symmetric fleet (one link); ``simulate_heterogeneous`` gives every
   worker its own step clock (``step_times[w]``) and link, with a
-  bounded-staleness apply rule;
+  bounded-staleness apply rule; ``simulate_gossip`` replaces the fleet
+  barrier with per-PAIR barriers driven by ``GossipRound`` events
+  (``SyncStrategy.gossip_rounds``) — each worker blocks only on its own
+  transfer and the peers named by its deps, which is why modeled gossip
+  wall-clock stays at or below the bounded-staleness all-reduce baseline;
 * blocking: a transfer whose ``apply_step`` equals its emit step stalls the
   loop immediately (DDP's per-step all-reduce, DiLoCo's outer step); a
   later ``apply_step`` gives the transfer a window of inner compute to hide
@@ -173,6 +177,83 @@ def simulate_heterogeneous(events: Iterable, num_steps: int,
             "comm_s": max(busy), "stall_s": max(stall),
             "straggler_s": num_steps * (max(step_times) - min(step_times)),
             "total_bytes": float(total_bytes), "bytes_by_codec": by_codec,
+            "overhead_frac": (now - compute_s) / max(now, 1e-12)}
+
+
+def simulate_gossip(rounds: Iterable, num_steps: int,
+                    step_times: Sequence[float], comm: CommModel,
+                    staleness_steps: int = 0) -> Dict[str, float]:
+    """Per-pair event model for the gossip strategies.
+
+    ``rounds`` are ``repro.core.sync.GossipRound``s (duck-typed, like
+    ``SyncEvent``): worker w ships ``nbytes`` over its OWN link when its
+    clock reaches ``emit_steps[w]`` (-1 = not participating), then blocks
+    at ``emit + staleness_steps`` on its own transfer plus the transfers
+    named by ``deps[w]`` — a PAIR barrier, not a fleet barrier.  A dropped
+    contribution (empty deps) blocks only on the worker's own ship-out.
+    Byte totals are denominated per worker (the busiest link), matching
+    ``hop_bytes_per_worker``: gossip traffic is flat in fleet size.
+    """
+    w_n = len(step_times)
+    if w_n == 0:
+        raise ValueError("need at least one worker step time")
+    by_emit: Dict[int, List] = {}
+    for rnd in rounds:
+        for w, es in enumerate(rnd.emit_steps):
+            if es >= 0:
+                by_emit.setdefault(es, []).append((w, rnd))
+
+    clock = [0.0] * w_n
+    link_free = [0.0] * w_n
+    busy = [0.0] * w_n
+    stall = [0.0] * w_n
+    shipped = [0.0] * w_n
+    by_codec_w: List[Dict[str, float]] = [{} for _ in range(w_n)]
+    transfers: Dict = {}      # (worker, emit_step) -> done time
+    pending: List = []        # (block_step, worker, transfer keys)
+
+    def block(w: int, keys) -> None:
+        done = max((transfers[k] for k in keys if k in transfers),
+                   default=0.0)
+        if done > clock[w]:
+            stall[w] += done - clock[w]
+            clock[w] = done
+
+    for step in range(num_steps):
+        for w in range(w_n):
+            clock[w] += step_times[w]
+        # ship-outs first: a co-due peer's transfer must exist before any
+        # same-step pair barrier references it
+        for w, rnd in by_emit.get(step, ()):
+            start = max(clock[w], link_free[w])
+            done = start + transfer_time(rnd.nbytes, comm)
+            busy[w] += done - start
+            link_free[w] = done
+            shipped[w] += rnd.nbytes
+            codec = getattr(rnd, "codec", "f32")
+            by_codec_w[w][codec] = by_codec_w[w].get(codec, 0.0) + rnd.nbytes
+            transfers[(w, step)] = done
+            keys = [(w, step)] + [tuple(d) for d in rnd.deps[w]]
+            pending.append((step + staleness_steps, w, keys))
+        still = []
+        for block_step, w, keys in pending:
+            if block_step <= step:
+                block(w, keys)
+            else:
+                still.append((block_step, w, keys))
+        pending = still
+
+    for _, w, keys in pending:   # results in flight at the end must land
+        block(w, keys)
+
+    now = max(clock)
+    compute_s = num_steps * max(step_times)
+    busiest = max(range(w_n), key=lambda w: shipped[w])
+    return {"wall_clock_s": now, "compute_s": compute_s,
+            "comm_s": max(busy), "stall_s": max(stall),
+            "straggler_s": num_steps * (max(step_times) - min(step_times)),
+            "total_bytes": float(shipped[busiest]),
+            "bytes_by_codec": by_codec_w[busiest],
             "overhead_frac": (now - compute_s) / max(now, 1e-12)}
 
 

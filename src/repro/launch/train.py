@@ -8,7 +8,13 @@ Runs the three-stage nanochat pipeline (base pretrain -> dialogue mid-train
   --method streaming   Streaming DiLoCo (fragment-wise staggered sync)
   --method overlapped  delayed outer application + straggler jitter
   --method pipelined   DiLoCoX shape: one fragment per round, delayed apply
+  --method gossip      no-all-reduce peer averaging (--topology ring|random|full)
+  --method async_gossip gossip on per-worker clocks (H + jitter_i) with a
+                       staleness-aware apply rule (--staleness-bound)
   --method hybrid      DiLoCo base, DDP mid+SFT (checkpoint hand-off)
+
+``--method`` accepts any name registered in ``repro.core.sync`` (the list
+above plus whatever plugins register_strategy() added) and "hybrid".
 
 ``--sync-dtype f32|bf16|int8|fp8|e5m2`` picks the outer-sync wire codec
 (int8/fp8 add per-tensor scales + error feedback, see repro.core.transport);
@@ -136,7 +142,7 @@ def comm_report(dcfg, method: str, n_params: int, steps: int, h: int,
     are relative per-worker multipliers on the measured step seconds)."""
     import dataclasses
     from repro.core import make_strategy
-    from repro.launch.comm_sim import (default_comm_model,
+    from repro.launch.comm_sim import (default_comm_model, simulate_gossip,
                                        simulate_heterogeneous,
                                        simulate_schedule)
     # mirror run_stage's clamping so the replayed schedule matches the
@@ -154,9 +160,17 @@ def comm_report(dcfg, method: str, n_params: int, steps: int, h: int,
     het = simulate_heterogeneous(
         events, steps, [step_time_s * m for m in worker_speeds], comm,
         staleness_steps=staleness)
-    return {"homogeneous": homo, "heterogeneous": het,
-            "worker_speeds": list(worker_speeds),
-            "step_time_s": step_time_s}
+    report = {"homogeneous": homo, "heterogeneous": het,
+              "worker_speeds": list(worker_speeds),
+              "step_time_s": step_time_s}
+    if hasattr(strat, "gossip_rounds"):
+        # gossip strategies synchronize per pair, not per fleet: replay the
+        # actual pair dependencies so the wall-clock reflects pair barriers
+        rounds = strat.gossip_rounds(n_params, steps, dcfg)
+        report["gossip"] = simulate_gossip(
+            rounds, steps, [step_time_s * m for m in worker_speeds], comm,
+            staleness_steps=dcfg.staleness_bound)
+    return report
 
 
 def run_pipeline(method: str = "diloco", arch: str = "tiny",
@@ -166,6 +180,7 @@ def run_pipeline(method: str = "diloco", arch: str = "tiny",
                  delta_dtype: str = "float32", grad_compress: str = "none",
                  drift_aware: bool = False,
                  sync_delay: int = 0, h_jitter: int = 0,
+                 topology: str = "ring", staleness_bound: int = 0,
                  num_fragments: int = 4, error_feedback: bool = True,
                  worker_speeds: Sequence[float] = (),
                  prefetch: int = 0, fused_adamw: bool = False,
@@ -193,7 +208,9 @@ def run_pipeline(method: str = "diloco", arch: str = "tiny",
     dcfg = DiLoCoConfig(num_workers=workers, delta_dtype=delta_dtype,
                         grad_compress=grad_compress,
                         drift_aware=drift_aware, sync_delay=sync_delay,
-                        h_jitter=h_jitter, num_fragments=num_fragments,
+                        h_jitter=h_jitter, topology=topology,
+                        staleness_bound=staleness_bound,
+                        num_fragments=num_fragments,
                         error_feedback=error_feedback, sync_seed=seed)
 
     # paper §3: H=100 base, H=30 mid/SFT (scaled to our step budget: the
@@ -240,12 +257,18 @@ def run_pipeline(method: str = "diloco", arch: str = "tiny",
                           worker_speeds)
         results["comm_model"] = rep
         homo, het = rep["homogeneous"], rep["heterogeneous"]
+        pair = ""
+        if "gossip" in rep:
+            # the fleet-barrier het number above is the worst case; the
+            # per-pair replay is what the gossip runners actually pay
+            pair = (f" pair-barrier wall="
+                    f"{rep['gossip']['wall_clock_s']:.2f}s")
         print(f"[comm:{method}/{delta_dtype}] "
               f"bytes={homo['total_bytes']/1e6:.2f}MB/worker "
               f"homogeneous wall={homo['wall_clock_s']:.2f}s "
               f"heterogeneous wall={het['wall_clock_s']:.2f}s "
               f"(straggler adds {het['straggler_s']:.2f}s compute, "
-              f"stall {het['stall_s']:.2f}s)")
+              f"stall {het['stall_s']:.2f}s)" + pair)
 
     if out_dir:
         os.makedirs(out_dir, exist_ok=True)
@@ -259,10 +282,10 @@ def run_pipeline(method: str = "diloco", arch: str = "tiny",
 
 
 def main(argv=None):
+    from repro.core import strategy_names
     ap = argparse.ArgumentParser()
     ap.add_argument("--method",
-                    choices=["ddp", "diloco", "streaming", "overlapped",
-                             "pipelined", "hybrid"],
+                    choices=list(strategy_names()) + ["hybrid"],
                     default="diloco")
     ap.add_argument("--arch", type=str, default="tiny")
     ap.add_argument("--reduced", action="store_true", default=True)
@@ -288,7 +311,15 @@ def main(argv=None):
                     help="overlapped/pipelined: steps between delta capture "
                          "and apply")
     ap.add_argument("--h-jitter", type=int, default=0,
-                    help="overlapped: max per-worker straggler jitter")
+                    help="overlapped/async_gossip: max per-worker straggler "
+                         "jitter on the sync period")
+    ap.add_argument("--topology", default="ring",
+                    choices=["ring", "random", "full"],
+                    help="gossip/async_gossip: peer-matching topology "
+                         "(full topology is exactly the DiLoCo mean)")
+    ap.add_argument("--staleness-bound", type=int, default=0,
+                    help="async_gossip: max staleness (in steps) of a peer "
+                         "delta before it is dropped; 0 = synchronous pairs")
     ap.add_argument("--fragments", type=int, default=4,
                     help="streaming/pipelined: number of fragments F")
     ap.add_argument("--worker-speeds", type=str, default="",
@@ -317,6 +348,8 @@ def main(argv=None):
                  delta_dtype=delta_dtype, grad_compress=args.grad_compress,
                  drift_aware=args.drift_aware,
                  sync_delay=args.sync_delay, h_jitter=args.h_jitter,
+                 topology=args.topology,
+                 staleness_bound=args.staleness_bound,
                  num_fragments=args.fragments,
                  error_feedback=not args.no_error_feedback,
                  worker_speeds=speeds, prefetch=args.prefetch,

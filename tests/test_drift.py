@@ -1,0 +1,140 @@
+"""Representation-drift diagnostics (repro.core.drift): identity,
+orthogonality, and invariance anchors for each metric."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.drift import (delta_cosine, linear_cka, param_drift,
+                              subspace_overlap, worker_cka_matrix)
+
+
+def _approx(v, tol=1e-5):
+    return pytest.approx(v, abs=tol)
+
+
+def _acts(seed, n=64, d=8):
+    return jax.random.normal(jax.random.key(seed), (n, d))
+
+
+def _orthogonal_pair(n=64, d=4, seed=0):
+    """Two (n, d) activation matrices with exactly orthogonal, zero-mean
+    columns: center a random matrix, then QR — each Q column is a linear
+    combination of zero-mean columns, so linear_cka's internal centering
+    is a no-op and X^T Y == 0 holds exactly."""
+    a = np.asarray(jax.random.normal(jax.random.key(seed), (n, 2 * d)))
+    a = a - a.mean(axis=0)
+    q, _ = np.linalg.qr(a)
+    return jnp.asarray(q[:, :d]), jnp.asarray(q[:, d:2 * d])
+
+
+# ---------------------------------------------------------------------------
+# linear_cka
+# ---------------------------------------------------------------------------
+
+def test_linear_cka_identity_is_one():
+    x = _acts(0)
+    assert float(linear_cka(x, x)) == _approx(1.0)
+
+
+def test_linear_cka_scale_invariant():
+    x = _acts(1)
+    assert float(linear_cka(x, 3.7 * x)) == _approx(1.0)
+    assert float(linear_cka(x, -0.2 * x)) == _approx(1.0)
+
+
+def test_linear_cka_orthogonal_is_zero():
+    x, y = _orthogonal_pair()
+    assert abs(float(linear_cka(x, y))) < 1e-6
+    assert float(linear_cka(x, x)) == _approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# subspace_overlap
+# ---------------------------------------------------------------------------
+
+def test_subspace_overlap_identity_is_one():
+    x = _acts(2, n=64, d=6)
+    assert float(subspace_overlap(x, x, r=4)) == _approx(1.0)
+
+
+def test_subspace_overlap_disjoint_supports_is_zero():
+    """Activations living on disjoint coordinate blocks span orthogonal
+    right-singular subspaces."""
+    n, d = 64, 4
+    a = np.zeros((n, 2 * d), np.float32)
+    b = np.zeros((n, 2 * d), np.float32)
+    a[:, :d] = np.asarray(jax.random.normal(jax.random.key(3), (n, d)))
+    b[:, d:] = np.asarray(jax.random.normal(jax.random.key(4), (n, d)))
+    got = float(subspace_overlap(jnp.asarray(a), jnp.asarray(b), r=d))
+    assert abs(got) < 1e-6
+
+
+def test_subspace_overlap_rotation_invariant():
+    """The top-r right subspace is a property of the span, not the basis:
+    an orthogonal feature rotation leaves the overlap at 1."""
+    x = np.asarray(_acts(5, n=64, d=6))
+    q, _ = np.linalg.qr(np.asarray(
+        jax.random.normal(jax.random.key(6), (6, 6))))
+    got = float(subspace_overlap(jnp.asarray(x), jnp.asarray(x @ q), r=6))
+    assert got == _approx(1.0, tol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# delta_cosine
+# ---------------------------------------------------------------------------
+
+def test_delta_cosine_identity_and_scale():
+    t = {"a": jnp.asarray([1.0, 2.0, -3.0]), "b": jnp.ones((2, 2))}
+    assert float(delta_cosine(t, t)) == _approx(1.0)
+    t5 = jax.tree.map(lambda x: 5.0 * x, t)
+    assert float(delta_cosine(t, t5)) == _approx(1.0)
+    tneg = jax.tree.map(lambda x: -x, t)
+    assert float(delta_cosine(t, tneg)) == _approx(-1.0)
+
+
+def test_delta_cosine_orthogonal_is_zero():
+    a = {"w": jnp.asarray([1.0, 0.0, 0.0, 0.0])}
+    b = {"w": jnp.asarray([0.0, 1.0, 0.0, 0.0])}
+    assert abs(float(delta_cosine(a, b))) < 1e-7
+
+
+# ---------------------------------------------------------------------------
+# param_drift / worker_cka_matrix
+# ---------------------------------------------------------------------------
+
+def test_param_drift_identical_workers():
+    """All workers at global + the SAME delta: zero norm dispersion,
+    perfect alignment to the mean and to each other."""
+    g = {"w": jnp.ones((3, 2)), "b": jnp.zeros((2,))}
+    delta = {"w": jnp.full((3, 2), 0.1), "b": jnp.full((2,), -0.2)}
+    wp = jax.tree.map(lambda gg, d: jnp.stack([gg + d] * 4), g, delta)
+    out = param_drift(wp, g)
+    assert float(out["delta_norm_std"]) == _approx(0.0)
+    assert float(out["cos_to_mean"]) == _approx(1.0)
+    assert float(out["pairwise_cos"]) == _approx(1.0)
+
+
+def test_param_drift_opposed_workers():
+    """Two workers with exactly opposite deltas: pairwise cosine -1 and a
+    vanishing mean direction."""
+    g = {"w": jnp.zeros((4,))}
+    d = jnp.asarray([1.0, -2.0, 0.5, 0.0])
+    wp = {"w": jnp.stack([d, -d])}
+    out = param_drift(wp, g)
+    assert float(out["pairwise_cos"]) == _approx(-1.0)
+    assert float(out["delta_norm_std"]) == _approx(0.0)
+
+
+def test_worker_cka_matrix_identical_workers():
+    k, d = 3, 4
+    params = {"w": jnp.stack([jnp.eye(d)] * k)}
+    batch = jax.random.normal(jax.random.key(7), (16, d))
+
+    def probe(p, x):
+        return x @ p["w"]
+
+    mat = np.asarray(worker_cka_matrix(params, probe, batch))
+    assert mat.shape == (k, k)
+    np.testing.assert_allclose(mat, np.ones((k, k)), atol=1e-5)
+    np.testing.assert_allclose(mat, mat.T, atol=1e-6)

@@ -1,0 +1,329 @@
+"""Gossip outer sync (ISSUE 8): the honesty anchors — K=2 gossip is
+bit-exact DiLoCo, the full topology IS the DiLoCo mean, async with
+jitter=0 and staleness_bound=0 is the synchronous barrier — plus the
+topology schedule, payload accounting, and the per-pair simulator."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from helpers import tiny_cfg
+from repro.configs.base import DiLoCoConfig, OptimizerConfig
+from repro.core import (AsyncGossipSync, DiLoCoSync, DistTrainer, GossipSync,
+                        gossip_peers, strategy_names)
+from repro.core.sync import (_GossipRunner, _gossip_payload_bytes,
+                             hop_bytes_per_worker)
+from repro.core.transport import make_codec
+from repro.launch.comm_sim import CommModel, simulate_gossip
+from repro.models.transformer import build_model, init_params
+
+OPT = OptimizerConfig(total_steps=100, warmup_steps=0, schedule="constant",
+                      learning_rate=0.02, adam_lr=1e-3)
+
+
+def _setup(k=2, h=4, **dkw):
+    # smaller than helpers.TINY: every test here runs two full training
+    # arms, and the equivalences are about the outer loop, not the model
+    cfg = tiny_cfg("dense", num_layers=1, d_model=32, num_heads=2,
+                   num_kv_heads=1, d_ff=64)
+    m = build_model(cfg)
+    params, _ = init_params(cfg, jax.random.key(0))
+    dcfg = DiLoCoConfig(num_workers=k, h_inner_steps=h, **dkw)
+    return cfg, m, params, dcfg
+
+
+def _data(cfg, k, step, B=4, S=16):
+    key = jax.random.key(1000 + step)
+    toks = jax.random.randint(key, (k, B, S), 0, cfg.vocab_size)
+    return {"tokens": toks, "labels": (toks + 1) % cfg.vocab_size}
+
+
+def _run(m, params, dcfg, strategy, cfg, steps, k):
+    dt = DistTrainer(m.loss, OPT, dcfg, strategy)
+    state = dt.init(params)
+    return dt.run(state, lambda s: _data(cfg, k, s), steps)
+
+
+def _assert_bitwise(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _assert_close(a, b, atol):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=atol,
+                                   rtol=0)
+
+
+# ---------------------------------------------------------------------------
+# Equivalence anchors
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("topology", ["ring", "random"])
+def test_gossip_k2_bitexact_diloco(topology):
+    """With two workers the one gossip pair IS the fleet, so any topology
+    is the DiLoCo mean — bit-for-bit (structural: K=2 binds the DiLoCo
+    runner itself)."""
+    cfg, m, params, dcfg = _setup(k=2, h=4)
+    a_state, a_hist = _run(m, params, dcfg, DiLoCoSync(), cfg, 12, k=2)
+    b_state, b_hist = _run(m, params, dcfg, GossipSync(topology=topology),
+                           cfg, 12, k=2)
+    _assert_bitwise(a_state.global_params, b_state.global_params)
+    _assert_bitwise(a_state.worker_params, b_state.worker_params)
+    assert a_hist["sync_steps"] == b_hist["sync_steps"] == [3, 7, 11]
+    np.testing.assert_array_equal(a_hist["loss"], b_hist["loss"])
+
+
+def test_gossip_full_topology_bitexact_diloco():
+    """topology='full' averages ALL workers — definitionally DiLoCo, and
+    bound to the DiLoCo runner so the match is bitwise at any K."""
+    cfg, m, params, dcfg = _setup(k=4, h=4)
+    a_state, _ = _run(m, params, dcfg, DiLoCoSync(), cfg, 8, k=4)
+    b_state, b_hist = _run(m, params, dcfg, GossipSync(topology="full"),
+                           cfg, 8, k=4)
+    _assert_bitwise(a_state.global_params, b_state.global_params)
+    _assert_bitwise(a_state.worker_params, b_state.worker_params)
+    assert b_hist["sync_steps"] == [3, 7]
+
+
+def test_async_zero_jitter_zero_bound_bitexact_gossip():
+    """jitter=0 + staleness_bound=0: every worker is co-due every H with
+    staleness 0, so async gossip IS the synchronous barrier — bitwise,
+    including the per-worker (step, worker, peer, staleness) records."""
+    cfg, m, params, dcfg = _setup(k=4, h=4)
+    a_state, a_hist = _run(m, params, dcfg, GossipSync(), cfg, 12, k=4)
+    b_state, b_hist = _run(m, params, dcfg, AsyncGossipSync(), cfg, 12, k=4)
+    _assert_bitwise(a_state.global_params, b_state.global_params)
+    _assert_bitwise(a_state.worker_params, b_state.worker_params)
+    assert a_hist["gossip_syncs"] == b_hist["gossip_syncs"]
+    assert all(s == 0 for *_, s in b_hist["gossip_syncs"])
+    np.testing.assert_array_equal(a_hist["loss"], b_hist["loss"])
+
+
+def test_async_k2_bitexact_diloco():
+    """K=2 with equal clocks and bound 0 delegates to the DiLoCo runner,
+    same as the synchronous strategy."""
+    cfg, m, params, dcfg = _setup(k=2, h=4)
+    a_state, _ = _run(m, params, dcfg, DiLoCoSync(), cfg, 8, k=2)
+    b_state, _ = _run(m, params, dcfg, AsyncGossipSync(), cfg, 8, k=2)
+    _assert_bitwise(a_state.global_params, b_state.global_params)
+    _assert_bitwise(a_state.worker_params, b_state.worker_params)
+
+
+def test_trailing_partial_round_finalize_parity():
+    """A run ending mid-window flushes one trailing round in finalize on
+    both the sync and async paths — same final state, same extra sync."""
+    cfg, m, params, dcfg = _setup(k=4, h=4)
+    a_state, a_hist = _run(m, params, dcfg, GossipSync(), cfg, 10, k=4)
+    b_state, b_hist = _run(m, params, dcfg, AsyncGossipSync(), cfg, 10, k=4)
+    assert a_hist["sync_steps"] == b_hist["sync_steps"] == [3, 7, 9]
+    _assert_bitwise(a_state.global_params, b_state.global_params)
+    _assert_bitwise(a_state.worker_params, b_state.worker_params)
+
+
+def test_int8_wire_sync_matches_async():
+    """The codec transport (error feedback included) rides under both
+    gossip paths identically."""
+    cfg, m, params, dcfg = _setup(k=4, h=4, delta_dtype="int8")
+    a_state, _ = _run(m, params, dcfg, GossipSync(), cfg, 8, k=4)
+    b_state, _ = _run(m, params, dcfg, AsyncGossipSync(), cfg, 8, k=4)
+    _assert_bitwise(a_state.global_params, b_state.global_params)
+    _assert_bitwise(a_state.worker_params, b_state.worker_params)
+
+
+class _RawPairGossip(GossipSync):
+    """Bypass the K=2 structural delegation: always bind the pair runner,
+    so the pair math itself gets compared against DiLoCo."""
+
+    def bind(self, engine, params, donate=True):
+        h = self.h or engine.cfg.h_inner_steps
+        return _GossipRunner(engine, params, h, self.topology, self.seed,
+                             donate)
+
+
+def test_raw_pair_math_matches_diloco_k2():
+    """The actual pair module at K=2 — pair-averaged anchors, momentum
+    and deltas over two identical-anchor rows — computes the DiLoCo mean
+    up to FMA-contraction rounding (the structural delegation exists
+    because bitwise across separately-compiled modules is a compiler
+    lottery, not because the math differs)."""
+    cfg, m, params, dcfg = _setup(k=2, h=4)
+    a_state, _ = _run(m, params, dcfg, DiLoCoSync(), cfg, 8, k=2)
+    b_state, _ = _run(m, params, dcfg, _RawPairGossip(), cfg, 8, k=2)
+    _assert_close(a_state.global_params, b_state.global_params, atol=1e-5)
+    _assert_close(a_state.worker_params, b_state.worker_params, atol=1e-5)
+
+
+def test_async_jittered_trains_and_records_staleness():
+    """Desynchronized clocks + bounded staleness still train: losses stay
+    finite, every due worker leaves a (step, worker, peer, staleness)
+    record, and observed staleness is -1 (never-published) or >= 0."""
+    cfg, m, params, dcfg = _setup(k=4, h=4)
+    strat = AsyncGossipSync(jitter=2, staleness_bound=3, seed=7)
+    state, hist = _run(m, params, dcfg, strat, cfg, 13, k=4)
+    assert np.isfinite(hist["loss"]).all()
+    recs = hist["gossip_syncs"]
+    assert recs, "jittered run produced no gossip applies"
+    for step, w, p, s in recs:
+        assert 0 <= w < 4 and 0 <= p < 4
+        assert s == -1 or s >= 0
+    # finalize flushed workers whose period does not divide the run length
+    assert {w for _, w, _, _ in recs} == set(range(4))
+
+
+def test_gossip_random_topology_trains():
+    cfg, m, params, dcfg = _setup(k=4, h=4)
+    state, hist = _run(m, params, dcfg, GossipSync(topology="random", seed=3),
+                       cfg, 12, k=4)
+    assert np.isfinite(hist["loss"]).all()
+    assert hist["sync_steps"] == [3, 7, 11]
+
+
+# ---------------------------------------------------------------------------
+# Topology schedule
+# ---------------------------------------------------------------------------
+
+def test_gossip_peers_involution_and_determinism():
+    for topology in ("ring", "random"):
+        for k in (2, 4, 8):
+            for r in range(6):
+                peers = gossip_peers(k, r, topology, seed=5)
+                assert sorted(peers) == list(range(k))
+                assert all(peers[peers[i]] == i for i in range(k))
+        # keyed by (seed, round): same args, same matching
+        assert (gossip_peers(8, 3, topology, seed=5)
+                == gossip_peers(8, 3, topology, seed=5))
+    # different rounds actually rotate the ring matching
+    assert gossip_peers(4, 0, "ring") != gossip_peers(4, 1, "ring")
+
+
+def test_gossip_peers_odd_k_self_pairs_one_worker():
+    """An odd fleet leaves exactly one worker self-paired (a solo outer
+    step) each round."""
+    for r in range(4):
+        peers = gossip_peers(5, r, "ring", seed=0)
+        assert sum(1 for i, p in enumerate(peers) if p == i) == 1
+        assert all(peers[peers[i]] == i for i in range(5))
+
+
+def test_gossip_peers_full_and_unknown():
+    assert gossip_peers(8, 0, "full") is None
+    with pytest.raises(ValueError, match="topology"):
+        gossip_peers(8, 0, "torus")
+
+
+def test_runners_reject_bad_args():
+    cfg, m, params, dcfg = _setup(k=4, h=4)
+
+    def bind(strategy):
+        dt = DistTrainer(m.loss, OPT, dcfg, strategy)
+        dt.run(dt.init(params), lambda s: _data(cfg, 4, s), 2)
+
+    with pytest.raises(ValueError, match="topology"):
+        bind(GossipSync(topology="torus"))
+    with pytest.raises(ValueError, match="full"):
+        bind(AsyncGossipSync(topology="full"))
+    with pytest.raises(ValueError, match="jitter"):
+        bind(AsyncGossipSync(jitter=-1))
+    with pytest.raises(ValueError, match="staleness_bound"):
+        bind(AsyncGossipSync(staleness_bound=-1))
+
+
+def test_registry_has_gossip_strategies():
+    names = strategy_names()
+    assert "gossip" in names and "async_gossip" in names
+
+
+# ---------------------------------------------------------------------------
+# Payload accounting + per-pair simulator
+# ---------------------------------------------------------------------------
+
+def test_hop_bytes_per_worker_collectives():
+    assert hop_bytes_per_worker(100, 8, "gather") == 700
+    assert hop_bytes_per_worker(100, 8, "reduce") == 175
+    assert hop_bytes_per_worker(100, 8, "peer") == 100
+    assert hop_bytes_per_worker(100, 1, "gather") == 100
+    assert hop_bytes_per_worker(100, 1, "reduce") == 100
+    with pytest.raises(ValueError, match="collective"):
+        hop_bytes_per_worker(100, 8, "broadcast")
+
+
+def test_gossip_payload_flat_in_k_and_carries_outer_state():
+    """One publication = codec'd delta + f32 anchors + f32 momentum
+    (12n for the f32 codec), flat in fleet size; 'full' ships the
+    (K-1)-row gather of codec-only deltas like DiLoCo."""
+    n, steps = 1000, 20
+    codec = make_codec("float32")
+    assert _gossip_payload_bytes(codec, n) == 4 * n + 8 * n
+    for k in (2, 8, 64):
+        dcfg = DiLoCoConfig(num_workers=k, h_inner_steps=10)
+        ev = GossipSync().payload_schedule(n, steps, dcfg)
+        assert [e.bytes_per_worker for e in ev] == [12 * n, 12 * n]
+        full = GossipSync(topology="full").payload_schedule(n, steps, dcfg)
+        assert all(e.bytes_per_worker == (k - 1) * 4 * n for e in full)
+    # int8 wire: 1 byte/param + 4-byte scale per leaf row on the delta,
+    # anchors/momentum still f32 — strictly between 8n and 12n
+    b8 = _gossip_payload_bytes(make_codec("int8"), n)
+    assert 8 * n < b8 < 12 * n
+
+
+def test_gossip_rounds_pair_deps():
+    dcfg = DiLoCoConfig(num_workers=4, h_inner_steps=4)
+    rounds = GossipSync().gossip_rounds(1000, 12, dcfg)
+    assert [r.emit_steps for r in rounds] == [(3,) * 4, (7,) * 4, (11,) * 4]
+    for r, rnd in enumerate(rounds):
+        peers = gossip_peers(4, r, "ring", 0)
+        for w in range(4):
+            assert rnd.deps[w] == ((peers[w], rnd.emit_steps[w]),)
+    full = GossipSync(topology="full").gossip_rounds(1000, 12, dcfg)
+    assert all(len(rnd.deps[w]) == 3 for rnd in full for w in range(4))
+
+
+def test_async_gossip_rounds_match_runner_schedule():
+    """The simulator replay emits exactly when the runner's per-worker
+    clocks fire, and a dropped (stale/never-published) contribution has
+    no pair dep."""
+    dcfg = DiLoCoConfig(num_workers=4, h_inner_steps=4)
+    strat = AsyncGossipSync(jitter=2, staleness_bound=1, seed=7)
+    rounds = strat.gossip_rounds(1000, 13, dcfg)
+    periods = strat._periods(4, 4)
+    fired = sorted((s, w) for rnd in rounds
+                   for w, s in enumerate(rnd.emit_steps) if s >= 0)
+    want = sorted((s, w) for w in range(4) for s in range(13)
+                  if (s + 1) % periods[w] == 0)
+    assert fired == want
+    for rnd in rounds:
+        for w in range(4):
+            assert len(rnd.deps[w]) <= 1
+
+
+def test_simulate_gossip_pair_barrier_beats_fleet_barrier():
+    """Same emits, same bytes: blocking on ONE peer is never slower than
+    blocking on all K-1 — the reason gossip tolerates stragglers."""
+    comm = CommModel(bandwidth=1e6, latency=1e-3)
+    dcfg = DiLoCoConfig(num_workers=4, h_inner_steps=4)
+    ring = GossipSync().gossip_rounds(100_000, 16, dcfg)
+    fleet = [dataclasses.replace(
+        rnd, deps=tuple(tuple((j, rnd.emit_steps[j]) for j in range(4)
+                              if j != w) for w in range(4)))
+        for rnd in ring]
+    times = [0.01, 0.01, 0.012, 0.02]
+    r_pair = simulate_gossip(ring, 16, times, comm)
+    r_fleet = simulate_gossip(fleet, 16, times, comm)
+    assert r_pair["wall_clock_s"] <= r_fleet["wall_clock_s"]
+    assert r_pair["total_bytes"] == r_fleet["total_bytes"]
+
+
+def test_simulate_gossip_staleness_window_monotone():
+    """A larger staleness window can only hide more of the transfer:
+    modeled wall clock is non-increasing in staleness_steps."""
+    comm = CommModel(bandwidth=1e6, latency=1e-3)
+    dcfg = DiLoCoConfig(num_workers=4, h_inner_steps=4)
+    rounds = GossipSync().gossip_rounds(500_000, 16, dcfg)
+    times = [0.01, 0.01, 0.015, 0.03]
+    walls = [simulate_gossip(rounds, 16, times, comm,
+                             staleness_steps=s)["wall_clock_s"]
+             for s in (0, 1, 2, 4, 8)]
+    assert all(a >= b - 1e-12 for a, b in zip(walls, walls[1:]))
+    assert walls[0] > walls[-1]  # the window actually bought something

@@ -15,7 +15,10 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 from repro.core.outer_opt import dequantize_delta, quantize_delta
 from repro.configs.base import DiLoCoConfig
 from repro.core.outer_opt import average_deltas
+from repro.core.sync import AsyncGossipSync, DiLoCoSync
 from repro.core.transport import BF16Cast, Fp8Codec, Int8Symmetric
+from repro.launch.comm_sim import (CommModel, simulate_gossip,
+                                   simulate_heterogeneous, simulate_schedule)
 from repro.models.layers import softmax_cross_entropy
 from repro.optim import newton_schulz
 from repro.optim.schedule import lr_schedule
@@ -144,6 +147,57 @@ def test_lr_schedule_positive_and_bounded(kind, warm, total):
     for s in range(0, total, max(total // 10, 1)):
         v = float(f(s))
         assert 0.0 <= v <= 1.0 + 1e-6
+
+
+@settings(**SETTINGS)
+@given(st.integers(2, 6), st.integers(4, 30), st.floats(0.001, 0.1),
+       st.integers(1_000, 1_000_000))
+def test_heterogeneous_equal_clocks_matches_schedule(h, steps, t, n):
+    """With identical per-worker step times and staleness 0 the
+    heterogeneous simulator reduces exactly to the single-timeline one —
+    every per-worker link replays the same transfers."""
+    dcfg = DiLoCoConfig(num_workers=4, h_inner_steps=h)
+    evs = DiLoCoSync().payload_schedule(n, steps, dcfg)
+    comm = CommModel(bandwidth=1e6, latency=1e-3)
+    a = simulate_schedule(evs, steps, t, comm)
+    b = simulate_heterogeneous(evs, steps, [t] * 4, comm)
+    assert b["wall_clock_s"] == pytest.approx(a["wall_clock_s"], rel=1e-9)
+    assert b["stall_s"] == pytest.approx(a["stall_s"], rel=1e-9, abs=1e-12)
+    assert b["total_bytes"] == a["total_bytes"]
+
+
+@settings(**SETTINGS)
+@given(st.integers(2, 6), st.integers(6, 30),
+       st.lists(st.floats(0.005, 0.05), min_size=2, max_size=5),
+       st.integers(10_000, 1_000_000))
+def test_heterogeneous_wall_monotone_in_staleness(h, steps, times, n):
+    """A larger staleness window can only delay blocking further — modeled
+    wall clock is non-increasing in staleness_steps for any fleet."""
+    dcfg = DiLoCoConfig(num_workers=len(times), h_inner_steps=h)
+    evs = DiLoCoSync().payload_schedule(n, steps, dcfg)
+    comm = CommModel(bandwidth=1e6, latency=1e-3)
+    walls = [simulate_heterogeneous(evs, steps, times, comm,
+                                    staleness_steps=s)["wall_clock_s"]
+             for s in range(6)]
+    assert all(a >= b - 1e-12 for a, b in zip(walls, walls[1:]))
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2 ** 16), st.integers(2, 6), st.integers(6, 30),
+       st.integers(0, 3),
+       st.lists(st.floats(0.005, 0.05), min_size=2, max_size=5))
+def test_gossip_wall_monotone_in_staleness(seed, h, steps, jitter, times):
+    """Same invariant for the per-pair gossip simulator, over jittered
+    per-worker publish schedules."""
+    k = len(times)
+    dcfg = DiLoCoConfig(num_workers=k, h_inner_steps=h)
+    strat = AsyncGossipSync(jitter=jitter, staleness_bound=2, seed=seed)
+    rounds = strat.gossip_rounds(500_000, steps, dcfg)
+    comm = CommModel(bandwidth=1e6, latency=1e-3)
+    walls = [simulate_gossip(rounds, steps, times, comm,
+                             staleness_steps=s)["wall_clock_s"]
+             for s in range(6)]
+    assert all(a >= b - 1e-12 for a, b in zip(walls, walls[1:]))
 
 
 @settings(**SETTINGS)

@@ -5,8 +5,8 @@ import pytest
 
 from helpers import tiny_cfg
 from repro.configs.base import DiLoCoConfig, OptimizerConfig
-from repro.core import (DDPSync, DiLoCoSync, DistTrainer, OverlappedSync,
-                        StreamingSync, make_strategy)
+from repro.core import (DDPSync, DiLoCoSync, DistTrainer, GossipSync,
+                        OverlappedSync, StreamingSync, make_strategy)
 from repro.core.sync import SyncEvent
 from repro.launch.comm_sim import (CommModel, modeled_step_time,
                                    simulate_schedule)
@@ -130,7 +130,16 @@ def test_make_strategy_from_config():
     s = make_strategy(DiLoCoConfig(strategy="overlapped", sync_delay=5,
                                    h_jitter=3))
     assert (s.delay, s.jitter) == (5, 3)
-    with pytest.raises(ValueError):
+    s = make_strategy(DiLoCoConfig(strategy="gossip", topology="random",
+                                   sync_seed=11))
+    assert (s.name, s.topology, s.seed) == ("gossip", "random", 11)
+    s = make_strategy(DiLoCoConfig(strategy="async_gossip",
+                                   staleness_bound=3, h_jitter=2,
+                                   sync_seed=5))
+    assert (s.name, s.staleness_bound, s.jitter, s.seed) == (
+        "async_gossip", 3, 2, 5)
+    with pytest.raises(ValueError, match="gossip"):
+        # the registry error enumerates every registered name
         make_strategy(DiLoCoConfig(strategy="nope"))
 
 
@@ -140,8 +149,10 @@ def test_make_strategy_from_config():
 
 def test_payload_schedules_bytes_ratio():
     """Over one H window, DDP ships H full fp32 payloads, DiLoCo one —
-    the paper's ~H× reduction, strategy-for-strategy."""
-    dcfg = DiLoCoConfig(h_inner_steps=10)
+    the paper's ~H× reduction, strategy-for-strategy.  K=2 so the
+    collective factors (ring reduce 2(K-1)/K, gather K-1) are both 1 and
+    the per-hop payload is the raw 4n."""
+    dcfg = DiLoCoConfig(num_workers=2, h_inner_steps=10)
     n = 1000
     ddp = DDPSync().payload_schedule(n, 10, dcfg)
     dlc = DiLoCoSync().payload_schedule(n, 10, dcfg)
@@ -154,6 +165,26 @@ def test_payload_schedules_bytes_ratio():
     # overlapped: same bytes as diloco, but a delay window to hide them in
     ov = OverlappedSync(delay=4).payload_schedule(n, 10, dcfg)
     assert [e.apply_step - e.step for e in ov] == [4]
+
+
+def test_per_worker_bytes_scaling_in_k():
+    """K-scaling regression: the all-reduce/gather strategies' per-worker
+    boundary bytes GROW with fleet size, gossip's stay flat — the
+    tentpole claim, pinned at the payload-schedule level."""
+    n, steps = 1000, 20
+
+    def total(strat, k):
+        dcfg = DiLoCoConfig(num_workers=k, h_inner_steps=10)
+        return sum(e.bytes_per_worker
+                   for e in strat.payload_schedule(n, steps, dcfg))
+
+    for k in (8, 16, 32, 64):
+        # gather: each worker receives the other K-1 codec'd rows
+        assert total(DiLoCoSync(), k) == (k - 1) * total(DiLoCoSync(), 2)
+        # ring reduce: 2(K-1)/K per hop, monotone in K
+        assert total(DDPSync(), k) > total(DDPSync(), 2)
+        # gossip: one flat peer payload, independent of K
+        assert total(GossipSync(), k) == total(GossipSync(), 2)
 
 
 def test_simulator_blocking_vs_overlapped():
@@ -195,8 +226,9 @@ def test_simulator_serializes_link():
 def test_simulator_ddp_slower_than_diloco():
     """End-to-end: modeled wall-clock orders the strategies the way the
     paper argues — DDP pays every step, DiLoCo every H, overlapped hides
-    the exchange."""
-    dcfg = DiLoCoConfig(h_inner_steps=10)
+    the exchange.  K=2 keeps the reduce/gather hop factors equal (both 1)
+    so the byte ratio is exactly the cadence ratio H."""
+    dcfg = DiLoCoConfig(num_workers=2, h_inner_steps=10)
     n = 10_000_000
     comm = CommModel(bandwidth=1e9, latency=0.0)
     step_t = 0.01
