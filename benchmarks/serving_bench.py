@@ -81,13 +81,14 @@ def _run_continuous(engine, stream):
     rs = [Request(rid=i, prompt=list(p), max_new=m)
           for i, (p, m) in enumerate(stream)]
     stats = engine.run(rs, use_time=True)
-    return stats, [r.finish_time - r.arrival for r in rs]
+    return (stats, [r.finish_time - r.arrival for r in rs],
+            [r.ttft for r in rs])
 
 
 def bench_all(engines: dict, stream, slots: int):
     """Warm every arm, then alternate timed reps; best-of-REPS each.
     ``engines``: {"static": eng, "continuous": eng, "continuous_spec": eng}.
-    Returns {arm: {tokens_per_s, p50, p95, stats?}}."""
+    Returns {arm: {tokens_per_s, p50, p95, ttft_p50/p95, stats?}}."""
     useful = sum(m for _, m in stream)
     _run_static(engines["static"], stream, slots)     # warm (bucket compiles)
     _run_continuous(engines["continuous"], stream)    # warm (scan step)
@@ -98,19 +99,21 @@ def bench_all(engines: dict, stream, slots: int):
         if "static" not in best or wall < best["static"][0]:
             best["static"] = (wall, done_at)
         for arm in ("continuous", "continuous_spec"):
-            stats, lats = _run_continuous(engines[arm], stream)
+            stats, lats, ttfts = _run_continuous(engines[arm], stream)
             if arm not in best or stats["wall"] < best[arm][0]["wall"]:
-                best[arm] = (stats, lats)
+                best[arm] = (stats, lats, ttfts)
     out = {}
     wall, done_at = best["static"]
     out["static"] = {"tokens_per_s": useful / wall,
                      "latency_p50": _pct(done_at, 50),
                      "latency_p95": _pct(done_at, 95)}
     for arm in ("continuous", "continuous_spec"):
-        stats, lats = best[arm]
+        stats, lats, ttfts = best[arm]
         out[arm] = {"tokens_per_s": stats["generated"] / stats["wall"],
                     "latency_p50": _pct(lats, 50),
                     "latency_p95": _pct(lats, 95),
+                    "ttft_p50": _pct(ttfts, 50),
+                    "ttft_p95": _pct(ttfts, 95),
                     "stats": stats}
     return out
 
@@ -251,6 +254,84 @@ def bench_kv_capacity(slots: int = 8, n: int = 10) -> dict:
     return out
 
 
+def bench_prefix_sharing(slots: int = 8, n: int = 12,
+                         small: bool = False) -> dict:
+    """Prefix-sharing capacity arm: the SAME pool byte budget, sharing off
+    vs on, identical shared-template request stream (a long common system
+    prompt + a short distinct user tail — the chat-serving regime the
+    radix cache exists for).
+
+    With sharing off every request reserves its full footprint, so the
+    fixed pool admits ``num_blocks // blocks_per_request`` requests at a
+    time and prefills the whole template per request.  With sharing on the
+    template blocks are resident ONCE (tree reference), each request
+    reserves only its tail budget and skips the matched prefill, so the
+    same bytes admit more concurrent requests AND each admission reaches
+    sampling sooner — the admitted and tokens/s ratios are the headline;
+    TTFT is the per-request view of the same win."""
+    import dataclasses
+    import time
+
+    import jax
+    from repro.configs.base import ModelConfig
+    from repro.models.transformer import (build_model, init_params,
+                                          paged_block_bytes)
+    from repro.serving import Engine, Request
+
+    cfg = ModelConfig(name="bench-prefix", num_layers=4, d_model=128,
+                      num_heads=4, num_kv_heads=4, d_ff=512, vocab_size=256)
+    model = build_model(cfg)
+    params, _ = init_params(cfg, jax.random.key(0))
+    bs, max_new = 16, 16
+    tpl_blocks = 4 if small else 6
+    pool_blocks = 12 if small else 24
+    if small:
+        slots, n = 6, 8
+    tpl = np.random.default_rng(11).integers(
+        1, 256, size=tpl_blocks * bs).tolist()
+    pool_bytes = pool_blocks * paged_block_bytes(cfg, bs)
+    bpr = (len(tpl) + 8 + max_new + bs - 1) // bs   # blocks per request
+
+    def stream():
+        # distinct first tail token per request -> no cross-tail forks;
+        # re-serving the same stream forks each request's OWN cached tail
+        return [Request(rid=i, prompt=tpl + [200 + i] * 8, max_new=max_new)
+                for i in range(n)]
+
+    out = {"pool_bytes": pool_bytes, "num_blocks": pool_blocks,
+           "blocks_per_request": bpr, "template_tokens": len(tpl),
+           "requests": n, "slots": slots}
+    for arm, share in (("sharing_off", False), ("sharing_on", True)):
+        eng = Engine(model, params, max_len=(tpl_blocks + 2) * bs,
+                     num_slots=slots, block_size=bs, pool_bytes=pool_bytes,
+                     prefill_chunk=12, prefix_cache=share)
+        eng.run(stream(), use_time=True)    # warm: compiles + primes cache
+        best, rs = None, None
+        for _ in range(3):
+            reqs = stream()
+            stats = eng.run(reqs, use_time=True)
+            if best is None or stats["wall"] < best["wall"]:
+                best, rs = stats, reqs
+        ttfts = [r.ttft for r in rs if r.first_token_time is not None]
+        out[arm] = {"tokens_per_s": best["generated"] / best["wall"],
+                    "peak_admitted": best["peak_admitted"],
+                    "prefill_tokens": best["prefill_tokens"],
+                    "ttft_p50": _pct(ttfts, 50),
+                    "ttft_p95": _pct(ttfts, 95)}
+        if share:
+            p = best["prefix"]
+            out[arm].update(
+                hit_rate=p["hit_rate"], matched_frac=p["matched_frac"],
+                shared_blocks=p["resident_blocks"], forked=p["forked"],
+                bytes_saved=p["bytes_saved"],
+                skipped_prefill_tokens=best["prefix_skipped_tokens"])
+    out["admitted_ratio"] = out["sharing_on"]["peak_admitted"] \
+        / max(out["sharing_off"]["peak_admitted"], 1)
+    out["tokens_per_s_ratio"] = out["sharing_on"]["tokens_per_s"] \
+        / max(out["sharing_off"]["tokens_per_s"], 1e-9)
+    return out
+
+
 def main(n: int = 24, slots: int = 8, small: bool = False) -> None:
     kw = {}
     if small:
@@ -258,6 +339,7 @@ def main(n: int = 24, slots: int = 8, small: bool = False) -> None:
         kw["train_steps"] = 40
     res = bench_serving(n=n, slots=slots, **kw)
     res["kv_capacity"] = bench_kv_capacity(n=6 if small else 10)
+    res["prefix_sharing"] = bench_prefix_sharing(small=small)
     with open("BENCH_serving.json", "w") as f:
         json.dump(res, f, indent=1)
     print("name,us_per_call,derived")
@@ -295,6 +377,24 @@ def main(n: int = 24, slots: int = 8, small: bool = False) -> None:
           f"tokens_per_s={kv['tokens_per_s_ratio']:.2f}x "
           f"pool_bytes={kv['pool_bytes']} "
           f"(acceptance: admitted >= 2x, tokens_per_s >= 0.9x)")
+    px = res["prefix_sharing"]
+    for arm in ("sharing_off", "sharing_on"):
+        a = px[arm]
+        extra = ""
+        if arm == "sharing_on":
+            extra = (f" hit_rate={a['hit_rate']:.2f}"
+                     f" shared_blocks={a['shared_blocks']}"
+                     f" bytes_saved={a['bytes_saved']}")
+        print(f"serving/prefix/{arm},0.0,"
+              f"tokens_per_s={a['tokens_per_s']:.1f} "
+              f"peak_admitted={a['peak_admitted']} "
+              f"prefill_tokens={a['prefill_tokens']} "
+              f"ttft_p50={a['ttft_p50']:.3f}s{extra}")
+    print(f"serving/prefix/ratio,0.0,"
+          f"admitted={px['admitted_ratio']:.1f}x "
+          f"tokens_per_s={px['tokens_per_s_ratio']:.2f}x "
+          f"pool_bytes={px['pool_bytes']} "
+          f"(acceptance: admitted >= 1.5x, tokens_per_s >= 1.3x)")
 
 
 if __name__ == "__main__":

@@ -77,8 +77,16 @@ def main(argv=None):
     ap.add_argument("--spec-k", type=int, default=0,
                     help="speculative decoding: draft up to K tokens per "
                          "slot per round via prompt-lookup (0 = off)")
-    ap.add_argument("--policy", choices=["fifo", "longest_prefill"],
+    ap.add_argument("--policy",
+                    choices=["fifo", "longest_prefill", "cache_aware"],
                     default="fifo")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share prompt-prefix KV blocks across requests "
+                         "via a radix tree: matched prefixes skip prefill "
+                         "and reserve no pool budget (dense archs only)")
+    ap.add_argument("--prefix-cache-blocks", type=int, default=None,
+                    help="LRU bound on resident prefix-cache blocks "
+                         "(default: bounded only by the pool)")
     ap.add_argument("--kv-dtype", type=str, default=None,
                     choices=["bf16", "f32", "int8", "fp8", "fp8_e5m2"],
                     help="KV-pool storage format override (default: the "
@@ -122,7 +130,9 @@ def main(argv=None):
     engine = Engine(model, params, tok, max_len=args.max_len,
                     num_slots=args.slots, block_size=args.block_size,
                     policy=args.policy, spec_k=args.spec_k,
-                    pool_bytes=args.pool_bytes)
+                    pool_bytes=args.pool_bytes,
+                    prefix_cache=args.prefix_cache,
+                    prefix_cache_blocks=args.prefix_cache_blocks)
     reqs = build_requests(args, tok)
     if not reqs:
         print("no requests", file=sys.stderr)
@@ -164,13 +174,27 @@ def main(argv=None):
         from repro.kernels.common import pallas_mode
         lats = [r.finish_time - r.arrival for _, r in reqs
                 if r.finish_time is not None]
+        # time-to-first-token: the per-request latency prefix sharing
+        # actually moves (a cache hit skips the matched prefill outright)
+        ttfts = [r.ttft for _, r in reqs if r.first_token_time is not None]
         print(f"# requests={len(reqs)} generated={stats['generated']} "
               f"step_calls={stats['step_calls']} "
               f"prefill_tokens={stats['prefill_tokens']}")
         print(f"# wall={stats['wall']:.3f}s "
               f"tokens_per_s={stats['generated'] / stats['wall']:.1f} "
               f"latency_p50={percentile(lats, 50):.3f}s "
-              f"latency_p95={percentile(lats, 95):.3f}s")
+              f"latency_p95={percentile(lats, 95):.3f}s "
+              f"ttft_p50={percentile(ttfts, 50):.3f}s "
+              f"ttft_p95={percentile(ttfts, 95):.3f}s")
+        if "prefix" in stats:
+            p = stats["prefix"]
+            print(f"# prefix_cache hit_rate={p['hit_rate']:.2f} "
+                  f"matched_tokens={p['matched_tokens']} "
+                  f"(matched_frac={p['matched_frac']:.2f}) "
+                  f"shared_blocks={p['resident_blocks']} "
+                  f"forked={p['forked']} "
+                  f"bytes_saved={p['bytes_saved']} "
+                  f"skipped_prefill_tokens={stats['prefix_skipped_tokens']}")
         if args.spec_k > 0:
             # per-request accept rates: p50/p95 over requests that drafted
             rates = [r.accept_rate for _, r in reqs if r.drafted]

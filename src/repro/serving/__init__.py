@@ -1,7 +1,8 @@
 from repro.serving.drafter import propose as draft_propose
 from repro.serving.engine import Engine
 from repro.serving.kv_cache import KVBlockPool, pad_block_table
+from repro.serving.prefix_tree import PrefixTree
 from repro.serving.scheduler import Request, Scheduler
 
-__all__ = ["Engine", "KVBlockPool", "Request", "Scheduler",
+__all__ = ["Engine", "KVBlockPool", "PrefixTree", "Request", "Scheduler",
            "pad_block_table", "draft_propose"]

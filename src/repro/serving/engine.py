@@ -86,6 +86,30 @@ can never be attended again, so the block returns to the pool mid-request
 (the block-table entry goes to −1, which both kernels and the jnp path mask)
 and admission budgets cover only the live window — capacity scales with the
 window, not prompt+max_new.
+
+Prefix sharing (``prefix_cache=True``) puts a radix tree
+(``serving.prefix_tree``) over the pool: requests whose prompts share a
+block-aligned prefix share the physical blocks holding it.  What is
+shared: *full* blocks of prompt tokens only — written once at the
+original prefill and never rewritten, because generated tokens land at
+positions ≥ the prompt length and speculative rollback never rewinds
+below the committed prompt, so ``truncate`` structurally cannot touch a
+shared block (and the pool's refcount ledger raises if it ever tried).
+The COW boundary rule: a partially matched block (the match ends
+mid-block) is copy-on-write — the new request gets a private block from
+its own budget, the engine copies the source block's device contents
+before the slot's first step, and positions beyond the matched length
+are ordinary stale garbage masked by the position gate until
+overwritten.  The matched prefix skips prefill entirely: the slot starts
+at ``pos = matched_len`` with its block table pointing at the shared
+blocks — the position-gated paged kernels need no device-side change —
+and only the tail is chunk-prefilled.  The tree and the host block pool
+persist across ``run()`` calls (the device pool already does), so a warm
+cache keeps paying off; LRU eviction (``prefix_cache_blocks``) bounds
+its residency, and admission evicts LRU cache blocks under pool
+pressure before refusing a request.  Sliding-window recycling frees
+prompt blocks mid-request — incompatible with sharers attaching them —
+so windowed archs bypass the cache (``prefix_cache`` is ignored).
 """
 from __future__ import annotations
 
@@ -146,7 +170,13 @@ class Engine:
     draft_ngram: int = 3               # longest suffix n-gram the prompt-
                                        # lookup drafter matches on
     policy: str = "fifo"               # admission: fifo | longest_prefill
+                                       # | cache_aware
     attn_impl: Optional[str] = None    # None=auto: pallas kernel off-CPU
+    prefix_cache: bool = False         # share prompt-prefix KV blocks via
+                                       # a radix tree (dense archs only;
+                                       # windowed archs bypass it)
+    prefix_cache_blocks: Optional[int] = None   # LRU bound on resident
+                                       # cache blocks (None = pool-bounded)
 
     def __post_init__(self):
         self._gen_fn = jax.jit(self._generate_scan,
@@ -173,6 +203,26 @@ class Engine:
         # must keep blocks alive for the largest window, incl. global=0)
         self._recycle_w = int(cfg.window) \
             if (cfg.window and not cfg.window_pattern) else 0
+        # prefix cache: tree + host pool persist across run() calls (the
+        # device pool already does), so shared blocks stay warm between
+        # streams; window recycling frees prompt blocks mid-request, which
+        # would yank them out from under sharers -> windowed archs bypass
+        self._tree = None
+        self._host_pool = None
+        if self.prefix_cache and not self._recycle_w:
+            from repro.serving.prefix_tree import PrefixTree
+            self._tree = PrefixTree(self.block_size,
+                                    self.prefix_cache_blocks or 0)
+
+            def copy_block(pool, src, dst):
+                # COW boundary fork: duplicate one physical block across
+                # every pool leaf (payload + quantized scale planes all
+                # index blocks on axis 1); src/dst are traced scalars, so
+                # the jit compiles once for any block pair
+                return jax.tree_util.tree_map(
+                    lambda a: a.at[:, dst].set(a[:, src]), pool)
+
+            self._copy_fn = jax.jit(copy_block, donate_argnums=(0,))
         if self.attn_impl is None:
             self.attn_impl = ("pallas" if jax.default_backend() == "tpu"
                               else "jnp")
@@ -293,10 +343,20 @@ class Engine:
     # ======================================================================
 
     def _make_sched(self, round_tokens: int) -> Scheduler:
-        pool = KVBlockPool(self.num_blocks, self.block_size,
-                           bytes_per_block=self.bytes_per_block)
+        if self._tree is not None:
+            # persistent host pool: at run end every slot has finished, so
+            # only the tree's refcounts survive — exactly the resident
+            # prefix cache the next run's admissions match against
+            if self._host_pool is None:
+                self._host_pool = KVBlockPool(
+                    self.num_blocks, self.block_size,
+                    bytes_per_block=self.bytes_per_block)
+            pool = self._host_pool
+        else:
+            pool = KVBlockPool(self.num_blocks, self.block_size,
+                               bytes_per_block=self.bytes_per_block)
         sched = Scheduler(self.num_slots, pool, self._mb, self.policy,
-                          window=self._recycle_w)
+                          window=self._recycle_w, tree=self._tree)
         sched.chunk_tokens = round_tokens
         return sched
 
@@ -319,7 +379,7 @@ class Engine:
                     stats: Dict[str, float]) -> None:
         """Recycle dead window blocks, lazily map the blocks this round
         writes (``round_tokens``: int, or a per-slot (S,) array), and
-        refresh the padded block tables."""
+        refresh the padded block tables where the mapping changed."""
         for si in act:
             slot = sched.slots[si]
             n = int(round_tokens[si]) if isinstance(round_tokens, np.ndarray)\
@@ -331,6 +391,28 @@ class Engine:
                 # the round's live range are positionally masked, so the
                 # rebuild can wait until the mapping actually changes
                 tables[si] = pad_block_table(slot.blocks, self._mb)
+                self._tdirty = True
+
+    def _attach_new(self, sched: Scheduler, newly: List[int], pool,
+                    tables: np.ndarray, stats: Dict[str, float]):
+        """Post-admission hook: execute pending copy-on-write boundary
+        forks (ONE jitted block copy per fork, scalar-traced indices — no
+        retrace across block pairs), account skipped prefix tokens, and
+        build the table rows for prefix-attached slots (their mapping
+        exists before ``ensure_mapped`` ever runs)."""
+        for si in newly:
+            slot = sched.slots[si]
+            if slot.pos:        # admission matched a cached prefix
+                stats["prefix_skipped_tokens"] += slot.pos
+            if slot.cow is not None:
+                src, dst = slot.cow
+                pool = self._copy_fn(pool, jnp.asarray(src, jnp.int32),
+                                     jnp.asarray(dst, jnp.int32))
+                sched.cow_executed(si)
+            if slot.blocks:
+                tables[si] = pad_block_table(slot.blocks, self._mb)
+                self._tdirty = True
+        return pool
 
     def run(self, requests: Sequence[Request], *, seed: int = 0,
             use_time: bool = False) -> Dict[str, float]:
@@ -352,18 +434,22 @@ class Engine:
             self.model.init_paged_cache(self.num_blocks, self.block_size)
         self._pool = None       # donated below: never reuse a stale handle
         tables = np.full((S, MB), -1, np.int32)
+        self._tdirty = True
+        tables_dev = jnp.asarray(tables)
         stats = {"step_calls": 0, "prefill_tokens": 0, "generated": 0,
-                 "token_slots": 0, "recycled_blocks": 0}
+                 "token_slots": 0, "recycled_blocks": 0,
+                 "prefix_skipped_tokens": 0}
         t0 = time.perf_counter()
         now = (lambda: time.perf_counter() - t0) if use_time else \
             (lambda: float("inf"))
 
         while sched.has_work():
-            sched.admit(now())
+            newly = sched.admit(now())
             act = sched.active_slots()
             if not act:
                 time.sleep(5e-4)        # idle: waiting on future arrivals
                 continue
+            pool = self._attach_new(sched, newly, pool, tables, stats)
             self._prep_round(sched, act, tables, T, stats)
 
             # -- build the scripted chunk for every active slot ------------
@@ -383,10 +469,13 @@ class Engine:
                 greedy[si] = slot.req.greedy
                 rids[si] = slot.req.rid
 
+            if self._tdirty:    # device tables re-upload only on change
+                tables_dev = jnp.asarray(tables)
+                self._tdirty = False
             pool, samples = self._step_fn(
                 self.params, pool, jnp.asarray(script),
                 jnp.asarray(n_script), jnp.asarray(start),
-                jnp.asarray(tables), jnp.asarray(temps),
+                tables_dev, jnp.asarray(temps),
                 jnp.asarray(greedy), base_key, jnp.asarray(rids))
             samples = _fetch(samples)
             stats["step_calls"] += 1
@@ -403,6 +492,11 @@ class Engine:
                                                     else 0), 0)
                 if not exhausted:
                     continue            # still mid-prompt: nothing sampled
+                if slot.generated == 0:
+                    # prompt fully written this round: its blocks enter the
+                    # prefix tree NOW (before any emit can finish the slot
+                    # and drop its references) so later arrivals share them
+                    sched.register_prefix(si)
                 done = False
                 for tok in samples[si, n - 1:]:
                     done = self._emit(sched, si, int(tok), stats, now,
@@ -432,19 +526,23 @@ class Engine:
             self.model.init_paged_cache(self.num_blocks, self.block_size)
         self._pool = None       # donated below: never reuse a stale handle
         tables = np.full((S, MB), -1, np.int32)
+        self._tdirty = True
+        tables_dev = jnp.asarray(tables)
         stats = {"step_calls": 0, "prefill_tokens": 0, "generated": 0,
                  "token_slots": 0, "recycled_blocks": 0, "drafted": 0,
-                 "accepted": 0, "rolled_back": 0}
+                 "accepted": 0, "rolled_back": 0,
+                 "prefix_skipped_tokens": 0}
         t0 = time.perf_counter()
         now = (lambda: time.perf_counter() - t0) if use_time else \
             (lambda: float("inf"))
 
         while sched.has_work():
-            sched.admit(now())
+            newly = sched.admit(now())
             act = sched.active_slots()
             if not act:
                 time.sleep(5e-4)
                 continue
+            pool = self._attach_new(sched, newly, pool, tables, stats)
 
             # -- draft: build [carry, d_1..d_m] / prompt-chunk scripts -----
             script = np.zeros((S, W), np.int32)
@@ -476,19 +574,22 @@ class Engine:
             self._prep_round(sched, act, tables, n_feed, stats)
 
             # -- verify: one forward over every scripted position ----------
+            if self._tdirty:    # device tables re-upload only on change
+                tables_dev = jnp.asarray(tables)
+                self._tdirty = False
             all_greedy = all(greedy[si] for si in act)
             if all_greedy:
                 pool, g_tok = self._verify_greedy_fn(
                     self.params, pool, jnp.asarray(script),
                     jnp.asarray(start), jnp.asarray(n_feed),
-                    jnp.asarray(tables))
+                    tables_dev)
                 g_tok = _fetch(g_tok)
                 s_tok = acc = resid = g_tok      # unread on greedy slots
             else:
                 pool, g_tok, s_tok, acc, resid = self._verify_fn(
                     self.params, pool, jnp.asarray(script),
                     jnp.asarray(start), jnp.asarray(n_feed),
-                    jnp.asarray(tables), jnp.asarray(temps),
+                    tables_dev, jnp.asarray(temps),
                     jnp.asarray(greedy), base_key, jnp.asarray(rids))
                 g_tok, s_tok = _fetch(g_tok), _fetch(s_tok)
                 acc, resid = _fetch(acc), _fetch(resid)
@@ -507,6 +608,8 @@ class Engine:
                     stats["prefill_tokens"] += n if not slot.generated else 0
                     if not exhausted:
                         continue
+                    if slot.generated == 0:
+                        sched.register_prefix(si)   # prompt fully written
                     # first sample comes from the last prompt position
                     tok = int(g_tok[si, n - 1] if slot.req.greedy
                               else s_tok[si, n - 1])
@@ -517,6 +620,10 @@ class Engine:
                     continue
 
                 # decode round: carry at start, m drafts behind it
+                if slot.generated == 0:
+                    # single-token feed (1-token prompt tail): the carry
+                    # token completed the prompt in this round's step
+                    sched.register_prefix(si)
                 m = int(n_draft[si])
                 is_greedy = slot.req.greedy
                 a = 0                   # accepted drafts (committed writes)
@@ -572,9 +679,12 @@ class Engine:
         slot.generated += 1
         slot.req.tokens.append(tok)
         stats["generated"] += 1
+        if slot.generated == 1:
+            slot.req.first_token_time = now() if use_time else 0.0
         if slot.generated >= slot.req.max_new or tok == slot.req.eos_id:
             sched.finish(si, now() if use_time else 0.0)
             tables[si] = -1
+            self._tdirty = True
             return True
         return False
 

@@ -24,18 +24,28 @@ makes rollback and recycling cheap:
   windowed slot's *budget* only covers the live window (not the full
   prompt+gen span), admission capacity for windowed archs scales with the
   window, not the sequence length.
+
+Prefix sharing adds a per-block **refcount ledger**: a block attached by
+several owners (the prefix tree plus any number of slots serving the same
+prompt prefix) carries one reference per owner, ``free`` drops one
+reference, and the block only returns to the free list at refcount 0.
+``free(rereserve=True)`` on a still-shared block raises — speculative
+rollback and window recycling re-credit a slot's private budget, and a
+shared block was never part of it, so reclaiming one is structurally a
+bug, not a policy choice.
 """
 from __future__ import annotations
 
-from typing import List, Sequence
+from typing import Dict, List, Sequence
 
 import numpy as np
 
 
 class KVBlockPool:
-    """Fixed-size block allocator (free-list) with a reservation ledger.
-    Raises on double-alloc / double-free / over-reserve so scheduler bugs
-    surface as exceptions, not silent KV corruption."""
+    """Fixed-size block allocator (free-list) with a reservation ledger and
+    per-block refcounts.  Raises on double-alloc / double-free /
+    over-reserve / shared-block reclaim so scheduler bugs surface as
+    exceptions, not silent KV corruption."""
 
     def __init__(self, num_blocks: int, block_size: int,
                  bytes_per_block: int = 0):
@@ -49,6 +59,7 @@ class KVBlockPool:
         self.bytes_per_block = bytes_per_block
         self._free: List[int] = list(range(num_blocks - 1, -1, -1))
         self._allocated: set = set()
+        self._refcount: Dict[int, int] = {}  # allocated block -> owners
         self._reserved = 0          # budgeted-but-unmapped blocks
 
     # -- queries ------------------------------------------------------------
@@ -68,6 +79,15 @@ class KVBlockPool:
     def total_bytes(self) -> int:
         """Device bytes the whole pool costs (0 when untracked)."""
         return self.num_blocks * self.bytes_per_block
+
+    @property
+    def num_shared(self) -> int:
+        """Blocks with more than one owner (prefix-cache sharing)."""
+        return sum(1 for c in self._refcount.values() if c > 1)
+
+    def refcount(self, block: int) -> int:
+        """Owner count of an allocated block (0 for free blocks)."""
+        return self._refcount.get(block, 0)
 
     def blocks_for(self, num_tokens: int) -> int:
         """Blocks needed to hold ``num_tokens`` cache entries."""
@@ -108,15 +128,38 @@ class KVBlockPool:
             self._reserved -= n
         out = [self._free.pop() for _ in range(n)]
         self._allocated.update(out)
+        for b in out:
+            self._refcount[b] = 1
         return out
 
+    def incref(self, block: int) -> None:
+        """Add an owner to an allocated block (prefix-cache attachment:
+        the tree on insert, a slot on admission)."""
+        if block not in self._allocated:
+            raise RuntimeError(f"incref on unallocated block {block}")
+        self._refcount[block] += 1
+
     def free(self, blocks: Sequence[int], *, rereserve: bool = False) -> None:
-        """Return physical blocks to the free list.  ``rereserve=True``
-        re-credits their budget (rollback/recycling: the slot keeps the
-        right to map replacements)."""
-        for b in blocks:
+        """Drop one reference per block; blocks reaching refcount 0 return
+        to the free list.  ``rereserve=True`` re-credits their budget
+        (rollback/recycling: the slot keeps the right to map replacements)
+        and therefore REFUSES still-shared blocks: a shared prefix block
+        was never part of any slot's private budget, so reclaiming one
+        through rollback/recycling is a scheduler bug."""
+        if len(set(blocks)) != len(blocks):
+            raise RuntimeError(f"duplicate blocks in free: {list(blocks)}")
+        for b in blocks:      # validate before mutating anything
             if b not in self._allocated:
                 raise RuntimeError(f"double-free / foreign block {b}")
+            if rereserve and self._refcount[b] > 1:
+                raise RuntimeError(
+                    f"rereserve-free of shared block {b} "
+                    f"(refcount {self._refcount[b]})")
+        for b in blocks:
+            if self._refcount[b] > 1:
+                self._refcount[b] -= 1
+                continue
+            del self._refcount[b]
             self._allocated.remove(b)
             self._free.append(b)
         if rereserve:
@@ -142,8 +185,9 @@ class KVBlockPool:
         return len(dead)
 
     def check_invariants(self) -> None:
-        """free ∪ allocated must partition [0, num_blocks) exactly, and the
-        reservation ledger must be covered by free blocks."""
+        """free ∪ allocated must partition [0, num_blocks) exactly, the
+        reservation ledger must be covered by free blocks, and the refcount
+        ledger must cover exactly the allocated set with positive counts."""
         free = set(self._free)
         if len(free) != len(self._free):
             raise AssertionError("duplicate block on the free list")
@@ -156,6 +200,13 @@ class KVBlockPool:
             raise AssertionError(
                 f"reservation ledger broken: {self._reserved} reserved, "
                 f"{len(self._free)} free")
+        if set(self._refcount) != self._allocated:
+            raise AssertionError(
+                "refcount ledger out of sync with the allocated set: "
+                f"{set(self._refcount) ^ self._allocated}")
+        bad = {b: c for b, c in self._refcount.items() if c < 1}
+        if bad:
+            raise AssertionError(f"non-positive refcounts: {bad}")
 
 
 def pad_block_table(blocks: Sequence[int], max_blocks: int) -> np.ndarray:

@@ -14,7 +14,8 @@ import pytest
 
 from helpers import tiny_cfg
 from repro.models.transformer import build_model, init_params
-from repro.serving import Engine, KVBlockPool, Request, Scheduler
+from repro.serving import (Engine, KVBlockPool, PrefixTree, Request,
+                           Scheduler)
 
 
 def _engine(**kw):
@@ -55,13 +56,40 @@ def test_greedy_scheduler_matches_static_across_mixes():
 
 
 def test_policies_give_identical_outputs_different_order():
-    """Admission order is scheduling, not math: both policies produce the
+    """Admission order is scheduling, not math: all policies produce the
     same per-request greedy tokens."""
     outs = {}
-    for policy in ("fifo", "longest_prefill"):
+    for policy in ("fifo", "longest_prefill", "cache_aware"):
         cfg, eng = _engine(policy=policy, num_slots=2)
         outs[policy] = eng.generate_ids(RAGGED[:6], max_new=6)
     np.testing.assert_array_equal(outs["fifo"], outs["longest_prefill"])
+    np.testing.assert_array_equal(outs["fifo"], outs["cache_aware"])
+
+
+def test_longest_prefill_no_head_of_line_blocking():
+    """Satellite regression: a big request whose budget doesn't fit yet
+    must not starve smaller ready ones under longest_prefill — the policy
+    scans the remaining ready queue when its pick doesn't fit.  fifo keeps
+    the documented head-of-line semantics."""
+    pool = KVBlockPool(4, 8)
+    sched = Scheduler(3, pool, max_blocks_per_slot=4,
+                      policy="longest_prefill")
+    sched.submit(Request(rid=0, prompt=[1] * 10, max_new=5))   # 2 blocks
+    assert sched.admit() == [0]
+    sched.submit(Request(rid=1, prompt=[2] * 25, max_new=6))   # 4 blocks:
+    sched.submit(Request(rid=2, prompt=[3] * 3, max_new=4))    # parked; 1
+    newly = sched.admit()                                      # block: fits
+    assert [sched.slots[i].req.rid for i in newly] == [2]
+    assert [r.rid for r in sched.waiting] == [1]
+    pool.check_invariants()
+    # fifo: same shape parks the whole queue behind the big request
+    pool2 = KVBlockPool(4, 8)
+    f = Scheduler(3, pool2, max_blocks_per_slot=4, policy="fifo")
+    f.submit(Request(rid=0, prompt=[1] * 10, max_new=5))
+    f.admit()
+    f.submit(Request(rid=1, prompt=[2] * 25, max_new=6))
+    f.submit(Request(rid=2, prompt=[3] * 3, max_new=4))
+    assert f.admit() == []
 
 
 # ---------------------------------------------------------------------------
@@ -349,6 +377,89 @@ def test_quantized_kv_churn_preserves_pool_invariants():
         np.testing.assert_array_equal(
             np.asarray(r.tokens),
             solo.generate_ids([r.prompt], max_new=r.max_new)[0])
+
+
+# ---------------------------------------------------------------------------
+# Prefix sharing: bit-exactness on/off, warm cache, spec, cache_aware
+# ---------------------------------------------------------------------------
+
+TPL = [7, 3, 9, 1, 5, 2, 8, 4] * 3      # 24-token template = 3 blocks @ bs=8
+SHARED = [TPL + [50 + i] * (i % 4 + 1) for i in range(6)]
+
+
+def _run_tokens(eng, prompts, max_new=9, seed=0, **rkw):
+    reqs = [Request(rid=i, prompt=list(p), max_new=max_new, **rkw)
+            for i, p in enumerate(prompts)]
+    stats = eng.run(reqs, seed=seed)
+    return [r.tokens for r in reqs], stats
+
+
+def test_prefix_sharing_greedy_bit_exact():
+    """Sharing is scheduling + memory, never math: greedy outputs on a
+    shared-template stream are identical with the cache off, cold, and
+    warm (the tree persists across run() calls), including COW-forked
+    boundary blocks."""
+    cfg, off = _engine()
+    cfg, on = _engine(prefix_cache=True)
+    want, _ = _run_tokens(off, SHARED)
+    cold, s1 = _run_tokens(on, SHARED)
+    warm, s2 = _run_tokens(on, SHARED)
+    assert want == cold == warm
+    assert s2["prefix"]["hit_rate"] == 1.0      # warm: every request hits
+    assert s2["prefix"]["forked"] > 0           # multi-token tails fork
+    assert s2["prefix_skipped_tokens"] > 0      # prefill actually skipped
+    assert s2["prefill_tokens"] < s1["prefill_tokens"]
+
+
+def test_prefix_sharing_speculative_bit_exact():
+    """Greedy speculation over shared prefix blocks is still lossless:
+    spec_k=4 + warm prefix cache emits the exact no-sharing, no-spec
+    stream (rollback never rewinds below the committed prompt, so shared
+    blocks are never rewritten)."""
+    cfg, base = _engine()
+    cfg, spec_on = _engine(spec_k=4, prefix_cache=True)
+    want, _ = _run_tokens(base, SHARED, max_new=13)
+    cold, _ = _run_tokens(spec_on, SHARED, max_new=13)
+    warm, s = _run_tokens(spec_on, SHARED, max_new=13)
+    assert want == cold == warm
+    assert s["prefix"]["hits"] > 0 and s["drafted"] > 0
+
+
+def test_sampled_request_unaffected_by_prefix_sharing():
+    """Per-request PRNG is keyed (seed, rid, position), so skipping the
+    matched prefill must not shift a sampled request's stream."""
+    cfg, off = _engine()
+    alone = Request(rid=3, prompt=TPL + [50, 51], max_new=6, greedy=False,
+                    temperature=1.3)
+    off.run([alone], seed=11)
+    cfg, on = _engine(prefix_cache=True)
+    on.run([Request(rid=9, prompt=TPL + [60], max_new=4)])  # prime cache
+    shared = Request(rid=3, prompt=TPL + [50, 51], max_new=6, greedy=False,
+                     temperature=1.3)
+    on.run([shared], seed=11)
+    assert shared.tokens == alone.tokens
+
+
+def test_cache_aware_admission_prefers_longest_match():
+    pool = KVBlockPool(16, 8)
+    tree = PrefixTree(8)
+    blocks = pool.alloc(3)
+    tree.insert(list(TPL), blocks, pool)
+    sched = Scheduler(1, pool, max_blocks_per_slot=8, policy="cache_aware",
+                      tree=tree)
+    sched.submit(Request(rid=0, prompt=[99] * 30, max_new=2))   # no match
+    sched.submit(Request(rid=1, prompt=TPL + [50], max_new=2))  # full match
+    assert sched.admit() == [0]
+    slot = sched.slots[0]
+    assert slot.req.rid == 1 and slot.num_shared == 3 and slot.pos == 24
+    assert slot.feed == [50]
+
+
+def test_prefix_cache_lru_bound_respected():
+    """--prefix-cache-blocks caps resident cache blocks via LRU."""
+    cfg, eng = _engine(prefix_cache=True, prefix_cache_blocks=3)
+    _run_tokens(eng, SHARED)
+    assert eng._tree.num_blocks <= 3
 
 
 def test_quantized_pool_bytes_budget_fits_more_blocks():

@@ -1,18 +1,31 @@
 """Property test for KVBlockPool's two-level ledger (reservation budget +
-lazy mapping) under random reserve/map/truncate/recycle/free churn.
+lazy mapping + per-block refcounts) under random
+reserve/map/truncate/recycle/free/share churn.
 
 The churn interpreter mirrors the Scheduler's use of the pool exactly:
 admit reserves a budget, ``ensure_mapped`` draws it down one block at a
 time (``alloc(reserved=True)``), window recycling and speculative rollback
 return blocks with ``rereserve=True``, finish frees the mapping and
-releases the leftover budget.  After EVERY op it asserts:
+releases the leftover budget.  Prefix-sharing ops ride along: a mapped
+block can be inserted into a model "tree" (``incref`` — an extra owner
+reference), later admissions attach tree blocks as their leading shared
+blocks (one more ``incref`` each, no budget), the tree releases references
+(``free`` that only decrefs while other owners remain), and a COW fork
+pins its source around a scratch alloc.  As in the real scheduler, shared
+blocks are never reclaimed through rollback/recycling (there the guarantee
+is structural: ``pos >= matched_len``; here the op generator respects it).
+After EVERY op the interpreter asserts:
 
 * ``check_invariants()`` — free ∪ allocated partitions the pool, no
-  duplicate free-list entries, reserved ≤ free;
+  duplicate free-list entries, reserved ≤ free, refcounts cover exactly
+  the allocated set with positive counts;
 * the pool-wide reservation equals the sum of per-slot budgets;
-* per slot, mapped + remaining budget == admitted budget (rollback and
-  recycling never leak or mint budget);
-* allocated == all mapped blocks + scratch, i.e. no physical block leaks.
+* per slot, privately mapped + remaining budget == admitted budget
+  (rollback and recycling never leak or mint budget; shared attachments
+  are never budgeted);
+* allocated == the distinct blocks owned by any slot, scratch, or tree
+  reference — no leaks, no premature frees;
+* every live block's refcount equals its model owner count exactly.
 
 Runs twice: a seeded-churn version that always runs, and a hypothesis
 version (skipped if hypothesis isn't installed) that shrinks failures.
@@ -27,27 +40,36 @@ from repro.serving.kv_cache import KVBlockPool
 class FakeSlot:
     """Duck-typed slot: what truncate() needs, plus the admitted budget."""
 
-    def __init__(self, budget):
-        self.blocks = []        # logical -> physical, -1 = unmapped
+    def __init__(self, budget, shared=()):
+        self.blocks = list(shared)  # logical -> physical, -1 = unmapped
         self.reserved = budget  # remaining budget
         self.budget = budget    # admitted budget (for the invariant)
+        self.num_shared = len(self.blocks)  # leading shared attachments
 
 
 def _mapped(slot):
     return sum(1 for b in slot.blocks if b >= 0)
 
 
-def _assert_invariants(pool, slots, scratch):
+def _assert_invariants(pool, slots, scratch, treerefs=()):
     pool.check_invariants()
     assert pool.num_reserved == sum(s.reserved for s in slots), \
         "pool reservation != sum of slot budgets"
     for s in slots:
-        assert s.reserved + _mapped(s) == s.budget, \
+        assert s.reserved + _mapped(s) - s.num_shared == s.budget, \
             "slot leaked or minted budget"
         assert s.reserved >= 0
-    assert pool.num_allocated == sum(_mapped(s) for s in slots) + \
-        len(scratch), "physical block leaked or double-mapped"
+    live = set(scratch) | set(treerefs)
+    for s in slots:
+        live |= {b for b in s.blocks if b >= 0}
+    assert pool.num_allocated == len(live), \
+        "physical block leaked or freed while owned"
     assert pool.num_free + pool.num_allocated == pool.num_blocks
+    for b in live:      # refcount == model owner count, per block
+        want = sum(1 for s in slots for blk in s.blocks if blk == b) \
+            + scratch.count(b) + list(treerefs).count(b)
+        assert pool.refcount(b) == want, \
+            f"block {b}: refcount {pool.refcount(b)} != owners {want}"
 
 
 def churn(ops, num_blocks=12, block_size=4):
@@ -56,26 +78,35 @@ def churn(ops, num_blocks=12, block_size=4):
     return _churn_into(KVBlockPool(num_blocks, block_size), ops)
 
 
+def _drain(pool, slots, scratch, treerefs):
+    """Finish every slot, drop scratch and tree references: the pool must
+    come back pristine (the refcount ledger frees each shared block exactly
+    when its LAST owner lets go)."""
+    for s in list(slots):
+        dead = [blk for blk in s.blocks if blk >= 0]
+        if dead:
+            pool.free(dead)
+        pool.release(s.reserved)
+    if scratch:
+        pool.free(scratch)
+    for blk in treerefs:
+        pool.free([blk])
+    pool.check_invariants()
+    assert pool.num_free == pool.num_blocks
+    assert pool.num_allocated == 0 and pool.num_reserved == 0
+
+
 def test_seeded_churn():
     rng = random.Random(1234)
     for _ in range(30):
         n = rng.randrange(1, 300)
         ops = [(rng.randrange(64), rng.randrange(64), rng.randrange(64))
                for _ in range(n)]
-        pool, slots, scratch = churn(ops,
-                                     num_blocks=rng.randrange(1, 24),
-                                     block_size=rng.choice([1, 2, 4, 8]))
+        pool, slots, scratch, treerefs = churn(
+            ops, num_blocks=rng.randrange(1, 24),
+            block_size=rng.choice([1, 2, 4, 8]))
         # drain: finishing everything must return the pool to pristine
-        for s in list(slots):
-            dead = [blk for blk in s.blocks if blk >= 0]
-            if dead:
-                pool.free(dead)
-            pool.release(s.reserved)
-        if scratch:
-            pool.free(scratch)
-        pool.check_invariants()
-        assert pool.num_free == pool.num_blocks
-        assert pool.num_allocated == 0 and pool.num_reserved == 0
+        _drain(pool, slots, scratch, treerefs)
 
 
 def test_churn_on_quantized_byte_budget_pool():
@@ -99,25 +130,20 @@ def test_churn_on_quantized_byte_budget_pool():
     for num_blocks, bpb in ((n_bf16, bf16), (n_fp8, fp8)):
         pool = KVBlockPool(num_blocks, bs, bytes_per_block=bpb)
         assert pool.total_bytes == num_blocks * bpb <= budget
-        pool, slots, scratch = _churn_into(pool, ops)
-        for s in list(slots):
-            dead = [blk for blk in s.blocks if blk >= 0]
-            if dead:
-                pool.free(dead)
-            pool.release(s.reserved)
-        if scratch:
-            pool.free(scratch)
-        pool.check_invariants()
-        assert pool.num_free == pool.num_blocks
+        pool, slots, scratch, treerefs = _churn_into(pool, ops)
+        _drain(pool, slots, scratch, treerefs)
 
 
 def _churn_into(pool, ops):
     """churn()'s interpreter against a caller-built pool (byte-budget
-    variants); see churn() for the opcode table."""
-    slots, scratch = [], []
+    variants); see churn() for the opcode table.  ``treerefs`` models the
+    prefix tree's own references: one per inserted block, held until
+    "eviction" (only when no slot is attached — ``refcount == 1`` —
+    exactly the real ``PrefixTree._evictable`` condition)."""
+    slots, scratch, treerefs = [], [], []
     num_blocks, block_size = pool.num_blocks, pool.block_size
     for opcode, a, b in ops:
-        op = opcode % 7
+        op = opcode % 10
         if op == 0:                                   # admit: reserve budget
             budget = a % 5
             if pool.can_reserve(budget):
@@ -132,23 +158,30 @@ def _churn_into(pool, ops):
             s = slots[a % len(slots)]
             if s.reserved > 0 and len(s.blocks) < num_blocks:
                 s.blocks.append(-1)
-        elif op == 3 and slots:                       # spec rollback
-            s = slots[a % len(slots)]
-            pos = b % (len(s.blocks) * block_size + 1)
+        elif op == 3 and slots:                       # spec rollback: never
+            s = slots[a % len(slots)]                 # below shared prefix
+            keep_min = s.num_shared                   # (pos >= matched_len
+            for i, blk in enumerate(s.blocks):        # structurally, in the
+                if blk >= 0 and pool.refcount(blk) > 1:   # real scheduler)
+                    keep_min = max(keep_min, i + 1)
+            pos = max(b % (len(s.blocks) * block_size + 1),
+                      keep_min * block_size)
             before = s.reserved + _mapped(s)
             pool.truncate(s, pos)
             assert s.reserved + _mapped(s) == before
         elif op == 4 and slots:                       # window recycling
-            s = slots[a % len(slots)]
-            mapped_idx = [i for i, blk in enumerate(s.blocks) if blk >= 0]
+            s = slots[a % len(slots)]                 # (windowed slots never
+            mapped_idx = [i for i, blk in enumerate(s.blocks)     # share)
+                          if blk >= 0 and i >= s.num_shared
+                          and pool.refcount(s.blocks[i]) == 1]
             if mapped_idx:
                 j = mapped_idx[b % len(mapped_idx)]
                 pool.free([s.blocks[j]], rereserve=True)
                 s.blocks[j] = -1
                 s.reserved += 1
         elif op == 5 and slots:                       # finish: free + release
-            s = slots.pop(a % len(slots))
-            dead = [blk for blk in s.blocks if blk >= 0]
+            s = slots.pop(a % len(slots))             # (shared attachments
+            dead = [blk for blk in s.blocks if blk >= 0]      # just decref)
             if dead:
                 pool.free(dead)
             pool.release(s.reserved)
@@ -157,8 +190,41 @@ def _churn_into(pool, ops):
                 pool.free([scratch.pop()])
             elif pool.can_allocate(1):
                 scratch.extend(pool.alloc(1))
-        _assert_invariants(pool, slots, scratch)
-    return pool, slots, scratch
+        elif op == 7 and slots:                       # tree insert: the tree
+            s = slots[a % len(slots)]                 # takes its own ref on
+            tset = set(treerefs)                      # a slot's mapped block
+            cands = [blk for blk in s.blocks if blk >= 0 and blk not in tset]
+            if cands:
+                blk = cands[b % len(cands)]
+                pool.incref(blk)
+                treerefs.append(blk)
+        elif op == 8 and treerefs:                    # admit with shared
+            k = 1 + a % min(3, len(treerefs))         # prefix: attach tree
+            start = b % len(treerefs)                 # blocks, budget covers
+            chosen = [treerefs[(start + j) % len(treerefs)]   # only the tail
+                      for j in range(k)]
+            budget = b % 4
+            if pool.can_reserve(budget):
+                pool.reserve(budget)
+                for blk in chosen:
+                    pool.incref(blk)
+                slots.append(FakeSlot(budget, shared=chosen))
+        elif op == 9 and treerefs:                    # tree evict / COW fork
+            if b % 2:                                 # evict: only when no
+                evictable = [blk for blk in treerefs  # slot is attached —
+                             if pool.refcount(blk) == 1]  # the _evictable
+                if evictable:                             # condition
+                    blk = evictable[a % len(evictable)]
+                    treerefs.remove(blk)
+                    pool.free([blk])
+            elif pool.can_allocate(1):                # fork: pin src around
+                src = treerefs[a % len(treerefs)]     # the dst alloc, then
+                pool.incref(src)                      # unpin (cow_executed)
+                dst = pool.alloc(1)
+                scratch.append(dst[0])
+                pool.free([src])
+        _assert_invariants(pool, slots, scratch, treerefs)
+    return pool, slots, scratch, treerefs
 
 
 def test_ledger_raises_on_misuse():
@@ -174,6 +240,29 @@ def test_ledger_raises_on_misuse():
         pool.release(4)
     with pytest.raises(RuntimeError, match="exhausted"):
         pool.alloc(2)                   # only 1 unreserved block left
+
+
+def test_refcount_ledger_raises_on_misuse():
+    pool = KVBlockPool(4, 2)
+    b = pool.alloc(1)[0]
+    with pytest.raises(RuntimeError, match="unallocated"):
+        pool.incref(b + 1)              # incref needs a live block
+    pool.incref(b)                      # 2 owners
+    with pytest.raises(RuntimeError, match="shared"):
+        pool.free([b], rereserve=True)  # rollback/recycle never reclaims
+    assert pool.refcount(b) == 2        # ...and the failed free mutated
+    pool.check_invariants()             # nothing
+    pool.free([b])                      # decref: still allocated
+    assert pool.refcount(b) == 1 and pool.num_allocated == 1
+    pool.free([b])                      # last owner: back on the free list
+    assert pool.refcount(b) == 0 and pool.num_free == 4
+    with pytest.raises(RuntimeError, match="double-free"):
+        pool.free([b])
+    c, d = pool.alloc(2)
+    with pytest.raises(RuntimeError, match="duplicate"):
+        pool.free([c, c])               # one call may not double-count
+    pool.free([c, d])
+    pool.check_invariants()
 
 
 try:
