@@ -1,0 +1,98 @@
+"""Elastic-training degradation benchmark: K=8 DiLoCo through a scripted
+crash/rejoin scenario vs the same run fault-free, on identical data.
+
+The tentpole robustness claim, measured: losing 2 of 8 workers mid-run
+(one of them rejoining later at the current anchor) must cost almost
+nothing — the acceptance bar is a final loss within 2% of the no-fault
+run.  The section also records the per-round quorum sizes (the fleet
+shrinking 8 -> 7 -> 6 -> 7 across the scripted events), every fault
+record the tracker emitted, and the rejoin drift metrics (parameter-delta
+norm + cosine to the live mean at the adoption boundary) — the
+observability surface ``core/drift.py`` feeds.
+
+Merged into ``BENCH_train.json["faults"]`` (see ``bench_io.merge_json``).
+CSV rows: ``faults/<arch>/...,0.0,<derived>``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+def degradation_rows(steps: int = 48, k: int = 8, h: int = 8) -> Dict:
+    import jax
+    from repro.configs import get_reduced
+    from repro.configs.base import DiLoCoConfig, OptimizerConfig
+    from repro.core import DistTrainer, make_strategy
+    from repro.core.faults import FaultSchedule
+
+    cfg = dataclasses.replace(
+        get_reduced("nanochat-d20"), name="nanochat-d20-tiny",
+        num_layers=1, d_model=16, num_heads=1, num_kv_heads=1, head_dim=16,
+        d_ff=64, vocab_size=512)
+    from repro.models import build_model
+    from repro.models.transformer import init_params
+    model = build_model(cfg)
+    params, _ = init_params(cfg, jax.random.key(0))
+    opt = OptimizerConfig(total_steps=steps, warmup_steps=0,
+                          schedule="constant", learning_rate=0.02,
+                          adam_lr=1e-3, muon_ns_steps=2, grad_clip=0.0)
+    dcfg = DiLoCoConfig(num_workers=k, h_inner_steps=h, strategy="diloco")
+
+    def data(step):
+        key = jax.random.key(1000 + step)
+        toks = jax.random.randint(key, (k, 4, 16), 0, cfg.vocab_size)
+        return {"tokens": toks, "labels": (toks + 1) % cfg.vocab_size}
+
+    # 2 crashes + 1 rejoin, spread over the middle of the run: worker 2
+    # dies in round 2, worker 5 in round 3, worker 2 returns for the
+    # second-to-last round and adopts the current anchor
+    c1, c2, rj = h + h // 2, 2 * h + h // 2, steps - 2 * h - 1
+    spec = f"crash:2@{c1},crash:5@{c2},rejoin:2@{rj}"
+
+    losses = {}
+    faulted_hist = None
+    for name, faults in (("no_fault", None),
+                         ("faulted", FaultSchedule.from_spec(spec))):
+        dt = DistTrainer(model.loss, opt, dcfg, make_strategy(dcfg))
+        state = dt.init(params)
+        _, hist = dt.run(state, data, steps, faults=faults)
+        losses[name] = float(hist["loss"][-1])
+        if name == "faulted":
+            faulted_hist = hist
+    frac = ((losses["faulted"] - losses["no_fault"])
+            / abs(losses["no_fault"]))
+    return {
+        "arch": cfg.name, "steps": steps, "k": k, "h": h,
+        "schedule": spec,
+        "no_fault_loss": losses["no_fault"],
+        "faulted_loss": losses["faulted"],
+        "loss_vs_no_fault_frac": frac,
+        "within_2pct": abs(frac) <= 0.02,
+        "quorum_per_round": [list(q) for q in faulted_hist["quorum"]],
+        "events": [list(e) for e in faulted_hist.get("fault", [])],
+        "rejoin_drift": [list(r)
+                         for r in faulted_hist.get("rejoin_drift", [])],
+    }
+
+
+def main(small: bool = False) -> None:
+    steps, h = (32, 6) if small else (48, 8)
+    sec = degradation_rows(steps=steps, h=h)
+    from benchmarks.bench_io import merge_json
+    merge_json("BENCH_train.json", {"faults": sec})
+    print("name,us_per_call,derived")
+    print(f"faults/{sec['arch']}/degradation,0.0,"
+          f"no_fault={sec['no_fault_loss']:.4f} "
+          f"faulted={sec['faulted_loss']:.4f} "
+          f"delta={100 * sec['loss_vs_no_fault_frac']:+.2f}% "
+          f"within_2pct={sec['within_2pct']}")
+    print(f"faults/{sec['arch']}/quorum,0.0,"
+          f"sizes={[n for _, n in sec['quorum_per_round']]}")
+    for step, worker, norm, cos in sec["rejoin_drift"]:
+        print(f"faults/{sec['arch']}/rejoin_drift,0.0,"
+              f"step={step} worker={worker} norm={norm:.4f} cos={cos:.4f}")
+
+
+if __name__ == "__main__":
+    main()

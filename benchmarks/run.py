@@ -19,6 +19,8 @@
 |                             | BENCH_serving.json)                         |
 | device-speed inner loop     | train (per-step vs scan-chunked vs          |
 |                             | chunked+donate+prefetch, BENCH_train.json)  |
+| elastic fault tolerance     | faults (K=8 crash/rejoin degradation vs     |
+|                             | no-fault loss, BENCH_train.json["faults"])  |
 
 Prints ``name,us_per_call,derived`` CSV rows.
 """
@@ -56,7 +58,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", type=str, default=None,
                     help="comma list: micro,comm,strategies,roofline,"
-                         "table1,drift,serving,train")
+                         "table1,drift,serving,train,faults")
     ap.add_argument("--small", action="store_true",
                     help="CI-smoke sizes (fewer steps, smaller loss runs)")
     ap.add_argument("--calibration", type=str, default=None,
@@ -93,6 +95,9 @@ def main() -> None:
     if want("train"):
         from benchmarks import train_bench
         train_bench.main(small=args.small)
+    if want("faults"):
+        from benchmarks import faults_bench
+        faults_bench.main(small=args.small)
 
 
 if __name__ == "__main__":

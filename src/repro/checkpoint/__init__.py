@@ -1,4 +1,9 @@
-from repro.checkpoint.checkpoint import (load_config, load_pytree,
-                                         save_config, save_pytree)
+from repro.checkpoint.checkpoint import (latest_run_checkpoint,
+                                         list_run_checkpoints, load_config,
+                                         load_pytree, load_run_checkpoint,
+                                         save_config, save_pytree,
+                                         save_run_checkpoint)
 
-__all__ = ["save_pytree", "load_pytree", "save_config", "load_config"]
+__all__ = ["save_pytree", "load_pytree", "save_config", "load_config",
+           "save_run_checkpoint", "load_run_checkpoint",
+           "list_run_checkpoints", "latest_run_checkpoint"]

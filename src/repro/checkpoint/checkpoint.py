@@ -10,10 +10,47 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-from typing import Any, Optional
+import tempfile
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+
+def _atomic_bytes(path: str, write_fn) -> None:
+    """Write a file atomically: ``write_fn(handle)`` fills a temp file in
+    the same directory, which is then fsync'd and ``os.replace``d over
+    ``path``.  A crash mid-write leaves either the old file or nothing —
+    never a torn file at the final name."""
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=os.path.basename(path) + ".tmp.")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            write_fn(f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+def _json_default(o):
+    """Numpy scalars (loss histories, eval metrics) -> python scalars.
+    ``repr``-based float round-trip is exact, so histories survive a
+    save/load cycle bitwise."""
+    if hasattr(o, "item") and np.ndim(o) == 0:
+        return o.item()
+    raise TypeError(f"not JSON serializable: {type(o).__name__}")
+
+
+def _atomic_json(path: str, obj) -> None:
+    _atomic_bytes(path, lambda f: f.write(
+        json.dumps(obj, indent=1, default=_json_default).encode("utf-8")))
 
 
 def _path_str(path) -> str:
@@ -31,7 +68,11 @@ def _path_str(path) -> str:
 
 
 def save_pytree(tree: Any, path: str) -> None:
-    """Save any pytree of arrays to <path>.npz (+ <path>.json manifest)."""
+    """Save any pytree of arrays to <path>.npz (+ <path>.json manifest).
+
+    Both files are written atomically (temp file + ``os.replace``), so a
+    crash mid-save can never leave a half-written checkpoint at the final
+    name for ``--resume`` to load."""
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     arrays = {}
     manifest = []
@@ -41,10 +82,8 @@ def save_pytree(tree: Any, path: str) -> None:
         manifest.append({"key": key, "path": _path_str(p),
                          "dtype": str(arrays[key].dtype),
                          "shape": list(arrays[key].shape)})
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    np.savez(path + ".npz", **arrays)
-    with open(path + ".json", "w") as f:
-        json.dump(manifest, f, indent=1)
+    _atomic_bytes(path + ".npz", lambda f: np.savez(f, **arrays))
+    _atomic_json(path + ".json", manifest)
 
 
 def load_pytree(template: Any, path: str) -> Any:
@@ -75,9 +114,7 @@ def load_pytree(template: Any, path: str) -> Any:
 
 def save_config(cfg, path: str) -> None:
     """Write the ModelConfig next to the checkpoint as <path>.cfg.json."""
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    with open(path + ".cfg.json", "w") as f:
-        json.dump(dataclasses.asdict(cfg), f, indent=1)
+    _atomic_json(path + ".cfg.json", dataclasses.asdict(cfg))
 
 
 def load_config(path: str) -> Optional[Any]:
@@ -94,3 +131,116 @@ def load_config(path: str) -> Optional[Any]:
     if "adam_betas" in d:
         d["adam_betas"] = tuple(d["adam_betas"])
     return ModelConfig(**d)
+
+
+# ---------------------------------------------------------------------------
+# Run checkpoints: crash-consistent training snapshots with a manifest
+# ---------------------------------------------------------------------------
+#
+# Layout inside a checkpoint dir, per saved step:
+#
+#   ckpt_00000012.state.npz / .state.json    — the full trainer state pytree
+#   ckpt_00000012.extras.npz / .extras.json  — runner-private arrays (EF
+#                                              residuals, gossip anchors...)
+#                                              only when non-empty
+#   ckpt_00000012.manifest.json              — written LAST, atomically
+#
+# The manifest names every file the checkpoint needs plus the data-pipeline
+# cursor (batches are pure functions of the step index, so the cursor IS
+# the step), runner JSON metadata, and the recorded loss history.  Because
+# the manifest lands last via os.replace, a manifest's existence implies a
+# complete checkpoint: readers validate the referenced files and otherwise
+# skip the entry, so a torn write degrades to "resume from the previous
+# step", never to loading garbage.
+
+_MANIFEST_FORMAT = 1
+
+
+def save_run_checkpoint(ckpt_dir: str, step: int, state: Any,
+                        extras_arrays: Any = None,
+                        extras_meta: Optional[Dict] = None,
+                        history: Optional[Dict] = None,
+                        meta: Optional[Dict] = None) -> str:
+    """Write one crash-consistent training checkpoint; returns the
+    manifest path.  ``state``/``extras_arrays`` must already be host
+    arrays (fetch before calling — this function does no device sync)."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    stem = os.path.join(ckpt_dir, f"ckpt_{step:08d}")
+    files = {"state": os.path.basename(stem) + ".state"}
+    save_pytree(state, stem + ".state")
+    has_extras = extras_arrays is not None and jax.tree.leaves(extras_arrays)
+    if has_extras:
+        save_pytree(extras_arrays, stem + ".extras")
+        files["extras"] = os.path.basename(stem) + ".extras"
+    manifest = {
+        "format": _MANIFEST_FORMAT,
+        "step": step,
+        "data_cursor": step,
+        "files": files,
+        "extras_meta": extras_meta or {},
+        "history": history or {},
+        "meta": meta or {},
+    }
+    _atomic_json(stem + ".manifest.json", manifest)
+    return stem + ".manifest.json"
+
+
+def _manifest_complete(ckpt_dir: str, manifest: Dict) -> bool:
+    for base in manifest.get("files", {}).values():
+        stem = os.path.join(ckpt_dir, base)
+        if not (os.path.exists(stem + ".npz")
+                and os.path.exists(stem + ".json")):
+            return False
+    return True
+
+
+def list_run_checkpoints(ckpt_dir: str) -> List[Tuple[int, str]]:
+    """(step, manifest_path) for every COMPLETE checkpoint, ascending."""
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in sorted(os.listdir(ckpt_dir)):
+        if not name.endswith(".manifest.json"):
+            continue
+        path = os.path.join(ckpt_dir, name)
+        try:
+            with open(path) as f:
+                manifest = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            continue
+        if manifest.get("format") != _MANIFEST_FORMAT:
+            continue
+        if not _manifest_complete(ckpt_dir, manifest):
+            continue                        # torn write: skip, don't crash
+        out.append((int(manifest["step"]), path))
+    out.sort()
+    return out
+
+
+def latest_run_checkpoint(ckpt_dir: str) -> Optional[Dict]:
+    """The newest complete checkpoint's manifest (with ``_dir`` attached),
+    or None when the directory has none."""
+    entries = list_run_checkpoints(ckpt_dir)
+    if not entries:
+        return None
+    _, path = entries[-1]
+    with open(path) as f:
+        manifest = json.load(f)
+    manifest["_dir"] = ckpt_dir
+    return manifest
+
+
+def load_run_checkpoint(manifest: Dict, state_template: Any,
+                        extras_template: Any = None
+                        ) -> Tuple[Any, Optional[Any]]:
+    """Restore (state, extras) from a manifest returned by
+    ``latest_run_checkpoint``.  ``extras_template`` None (or an entry the
+    checkpoint lacks) yields extras None."""
+    ckpt_dir = manifest["_dir"]
+    files = manifest["files"]
+    state = load_pytree(state_template, os.path.join(ckpt_dir, files["state"]))
+    extras = None
+    if extras_template is not None and "extras" in files:
+        extras = load_pytree(extras_template,
+                             os.path.join(ckpt_dir, files["extras"]))
+    return state, extras

@@ -17,6 +17,8 @@ from repro.core.transport import (BF16Cast, Codec, F32Passthrough,
                                   Int8Symmetric, OuterPayload, Transport,
                                   make_codec)
 from repro.core.dist_trainer import DistTrainer
+from repro.core.faults import (FaultEvent, FaultSchedule, FleetTracker,
+                               RoundInfo, SimulatedCrash)
 from repro.core import drift, outer_opt
 
 __all__ = ["DiLoCoTrainer", "DiLoCoState", "run_diloco", "DDPTrainer",
@@ -27,6 +29,7 @@ __all__ = ["DiLoCoTrainer", "DiLoCoState", "run_diloco", "DDPTrainer",
            "DDPSync", "DiLoCoSync", "StreamingSync", "OverlappedSync",
            "PipelinedSync", "GossipSync", "AsyncGossipSync", "GossipRound",
            "gossip_peers", "register_strategy", "strategy_names",
-           "make_strategy", "Codec", "OuterPayload",
+           "make_strategy", "FaultSchedule", "FaultEvent", "FleetTracker",
+           "RoundInfo", "SimulatedCrash", "Codec", "OuterPayload",
            "Transport", "F32Passthrough", "BF16Cast", "Int8Symmetric",
            "make_codec"]

@@ -124,6 +124,35 @@ class DiLoCoTrainer:
         return (state._replace(worker_params=wp, inner_opt=opt,
                                inner_step=istep), losses)
 
+    def inner_chunk_live(self, state: DiLoCoState, batches, live
+                         ) -> Tuple[DiLoCoState, jax.Array]:
+        """``inner_chunk`` under a (K,) liveness mask: dead rows' params and
+        optimizer state pass through frozen (``jnp.where`` merge — the mask
+        is a traced argument, so a changing live set never retraces).  The
+        (T, K) losses still cover every row; the trainer masks dead rows
+        out of the recorded mean on the host.  Only dispatched when at
+        least one worker is down — the all-live path keeps using
+        ``inner_chunk``'s unmodified program."""
+        rows = outer_opt._mask_rows
+
+        def body(carry, batch):
+            wp, opt, istep = carry
+            st = state._replace(worker_params=wp, inner_opt=opt,
+                                inner_step=istep)
+            st, loss, _ = self.inner_step(st, batch)
+            new_wp = jax.tree.map(
+                lambda n, o: jnp.where(rows(live, n), n, o),
+                st.worker_params, wp)
+            new_opt = jax.tree.map(
+                lambda n, o: jnp.where(rows(live, n), n, o),
+                st.inner_opt, opt)
+            return (new_wp, new_opt, st.inner_step), loss
+
+        carry = (state.worker_params, state.inner_opt, state.inner_step)
+        (wp, opt, istep), losses = jax.lax.scan(body, carry, batches)
+        return (state._replace(worker_params=wp, inner_opt=opt,
+                               inner_step=istep), losses)
+
     # -- outer step ----------------------------------------------------------
     def init_residual(self, params):
         """Per-worker (K, ...) error-feedback residual for lossy codecs, or
@@ -157,6 +186,67 @@ class DiLoCoTrainer:
 
     def outer_step(self, state: DiLoCoState) -> DiLoCoState:
         return self.outer_step_ef(state)[0]
+
+    # -- quorum outer step + elastic rejoin (fault-tolerant variants) --------
+    def outer_step_quorum(self, state: DiLoCoState, residual,
+                          contrib, adopt, reset):
+        """``outer_step_ef`` under (K,) quorum masks (all traced bools —
+        fixed signature, a changing live set never retraces):
+
+        * ``contrib`` — rows whose deltas enter the masked average;
+        * ``adopt``   — live rows that take the new anchor (keeps their
+          inner optimizer state, exactly like a normal sync);
+        * ``reset``   — rejoiners: take the new anchor AND restart inner
+          optimizer + error-feedback state from zero (AdamW/Muon moments
+          init to zeros, so zeroing IS re-initialization);
+        * rows in none of the masks (dead workers) pass through frozen.
+        """
+        rows = outer_opt._mask_rows
+        delta = jax.tree.map(
+            lambda w, g: w.astype(jnp.float32) - g.astype(jnp.float32)[None],
+            state.worker_params, state.global_params)
+        avg, new_residual = outer_opt.exchange_and_average(
+            delta, self.cfg, self.replicate_fn, residual=residual,
+            live=contrib)
+        new_global, new_outer = outer_opt.outer_update(
+            state.global_params, avg, state.outer, self.cfg)
+        take = jnp.logical_or(adopt, reset)
+        new_wp = jax.tree.map(
+            lambda g, o: jnp.where(rows(take, o), g[None], o),
+            new_global, state.worker_params)
+        new_opt = jax.tree.map(
+            lambda o: jnp.where(rows(reset, o), jnp.zeros_like(o), o),
+            state.inner_opt)
+        if new_residual is not None:
+            # non-contributors never shipped, so their EF carry is
+            # unchanged; rejoiners restart with a clean carry
+            new_residual = jax.tree.map(
+                lambda n, o: jnp.where(
+                    rows(reset, n), jnp.zeros_like(n),
+                    jnp.where(rows(contrib, n), n, o)),
+                new_residual, residual)
+        return state._replace(global_params=new_global,
+                              worker_params=new_wp,
+                              inner_opt=new_opt,
+                              outer=new_outer), new_residual
+
+    def adopt_anchor(self, state: DiLoCoState, residual, reset):
+        """Rejoin without a round (quorum skipped): ``reset`` rows adopt
+        the CURRENT anchor with zeroed inner-opt/EF state; the anchor and
+        outer momentum are untouched."""
+        rows = outer_opt._mask_rows
+        new_wp = jax.tree.map(
+            lambda g, o: jnp.where(rows(reset, o), g[None], o),
+            state.global_params, state.worker_params)
+        new_opt = jax.tree.map(
+            lambda o: jnp.where(rows(reset, o), jnp.zeros_like(o), o),
+            state.inner_opt)
+        if residual is not None:
+            residual = jax.tree.map(
+                lambda o: jnp.where(rows(reset, o), jnp.zeros_like(o), o),
+                residual)
+        return state._replace(worker_params=new_wp,
+                              inner_opt=new_opt), residual
 
     # -- jitted entry points ---------------------------------------------------
     def jit_steps(self):

@@ -74,6 +74,7 @@ import numpy as np
 
 from repro.configs.base import DiLoCoConfig, OptimizerConfig
 from repro.core.diloco import DiLoCoState
+from repro.core.faults import FaultSchedule, FleetTracker, SimulatedCrash
 from repro.core.streaming import StreamingDiLoCoTrainer
 from repro.core.sync import SyncStrategy
 
@@ -114,6 +115,28 @@ def _host_mean(row: np.ndarray) -> float:
         acc = acc + x
     return float(acc / row.dtype.type(len(row)))
 
+
+def _host_mean_live(row: np.ndarray, live) -> float:
+    """``_host_mean`` over only the live workers' loss entries (dead rows
+    carry frozen params whose losses are not part of the fleet's trajectory).
+    Same fixed index-order summation."""
+    idx = [w for w, l in enumerate(live) if l]
+    if not idx:
+        return float("nan")
+    acc = row[idx[0]]
+    for w in idx[1:]:
+        acc = acc + row[w]
+    return float(acc / row.dtype.type(len(idx)))
+
+
+def _history_from_json(v):
+    """JSON round-trips tuples as lists; restore the tuples history
+    consumers (and the resume bit-exactness tests) expect."""
+    if isinstance(v, list):
+        return tuple(_history_from_json(x) for x in v)
+    return v
+
+
 @dataclasses.dataclass(frozen=True)
 class DistTrainer:
     """loss_fn(params, batch) -> (loss, metrics-dict); batches carry a
@@ -139,7 +162,10 @@ class DistTrainer:
             record_every: int = 1, eval_fn: Optional[Callable] = None,
             eval_every: int = 0, *, chunked: bool = True,
             donate: bool = True, prefetch: int = 0,
-            max_chunk: int = 128) -> Tuple[DiLoCoState, Dict]:
+            max_chunk: int = 128, faults: Optional[FaultSchedule] = None,
+            min_quorum: int = 1, checkpoint_dir: Optional[str] = None,
+            checkpoint_every: int = 0,
+            resume: bool = False) -> Tuple[DiLoCoState, Dict]:
         """data_fn(step) -> per-worker-stacked batch pytree.
 
         ``chunked`` selects the scan-fused hot path (see module docstring);
@@ -151,6 +177,15 @@ class DistTrainer:
         of the stacked chunk batches for event-free strategies like DDP
         (0 = only events/evals/num_steps bound it; the default covers the
         paper's H=100 rounds in one chunk).
+
+        Fault tolerance: ``faults`` scripts per-worker crash/rejoin/slow/
+        drop/corrupt events and process-level kills (``repro.core.faults``);
+        rounds proceed with the surviving subset while at least
+        ``min_quorum`` workers contribute, and are skipped (workers keep
+        training locally) below it.  ``checkpoint_dir`` + ``checkpoint_every``
+        write crash-consistent outer-boundary checkpoints; ``resume=True``
+        restores the latest one (state, runner extras, history, data cursor)
+        and continues bit-exactly vs an uninterrupted run.
         """
         if not chunked:
             if prefetch > 0:
@@ -158,25 +193,69 @@ class DistTrainer:
                     "prefetch requires the chunked loop (chunked=True): "
                     "the per-step reference loop assembles batches "
                     "synchronously and would silently ignore it")
+            if (faults is not None and not faults.empty) or checkpoint_dir \
+                    or resume:
+                raise ValueError(
+                    "fault injection / checkpointing / resume require the "
+                    "chunked loop (chunked=True): the per-step reference "
+                    "loop has no chunk boundaries to anchor them to")
             # donate/max_chunk don't apply either: the reference loop
             # never donates and has no chunks
             return self._run_per_step(state, data_fn, num_steps,
                                       record_every, eval_fn, eval_every)
+        if resume and not checkpoint_dir:
+            raise ValueError("resume=True requires checkpoint_dir")
         eng = self.engine()
         runner = _bind(self.strategy, eng, state.global_params, donate)
         inner_chunk = jax.jit(eng.inner_chunk,
                               donate_argnums=(0,) if donate else ())
+        tracker = None
+        inner_live = None
+        if faults is not None and not faults.empty:
+            faults.validate(self.cfg.num_workers)
+            tracker = FleetTracker(faults, self.cfg.num_workers,
+                                   min_quorum=min_quorum)
+            if faults.worker_events():
+                # binds the quorum jits; raises for runners that don't
+                # support per-worker faults.  Kill-only schedules skip the
+                # bind so the untouched jit programs stay bit-exact with a
+                # fault-free run (XLA specializes per compiled module).
+                runner.bind_faults(tracker)
+                inner_live = jax.jit(
+                    eng.inner_chunk_live,
+                    donate_argnums=(0,) if donate else ())
         if donate:
             # the first chunk donates the caller's state buffers; copy once
             # so the object the caller passed in survives the run
             state = jax.tree.map(jnp.copy, state)
 
+        restored_history: Dict[str, list] = {}
+        start_step = 0
+        if resume:
+            from repro.checkpoint import (latest_run_checkpoint,
+                                          load_run_checkpoint)
+            manifest = latest_run_checkpoint(checkpoint_dir)
+            if manifest is not None:
+                template = runner.checkpoint_extras()
+                extras_template = template[0] if template is not None else None
+                state, extras = load_run_checkpoint(manifest, state,
+                                                    extras_template)
+                runner.load_extras(extras,
+                                   manifest.get("extras_meta") or {})
+                restored_history = manifest.get("history") or {}
+                start_step = int(manifest["step"])
+                if tracker is not None:
+                    tracker.catch_up(start_step)
+
         from repro.data.pipeline import Prefetcher, stack_batches
-        source = (Prefetcher(data_fn, num_steps, depth=prefetch)
+        source = (Prefetcher(data_fn, num_steps, depth=prefetch,
+                             start=start_step)
                   if prefetch > 0 else None)
 
         history: Dict[str, list] = {"step": [], "loss": [], "sync_steps": [],
                                     "frag_syncs": [], "evals": []}
+        for key, vals in restored_history.items():
+            history[key] = [_history_from_json(v) for v in vals]
 
         def record(recs):
             for key, val in recs:
@@ -198,23 +277,48 @@ class DistTrainer:
                     end = min(end, (step // eval_every + 1) * eval_every - 1)
                 if max_chunk:
                     end = min(end, step + max_chunk - 1)
+                if checkpoint_dir and checkpoint_every:
+                    # a checkpoint landing mid-chunk splits the chunk (the
+                    # snapshot must see the state at exactly that boundary)
+                    end = min(end, (step // checkpoint_every + 1)
+                              * checkpoint_every - 1)
+                if tracker is not None:
+                    lim = tracker.chunk_limit(step)
+                    if lim is not None:
+                        end = min(end, max(lim, step))
                 return end
 
             try:
-                step = 0
+                step = start_step
                 t_prev = time.time()
+                pending_ckpt = False
                 while step < num_steps:
+                    live = None
+                    if tracker is not None:
+                        live, recs = tracker.begin_chunk(step)
+                        record(recs)
                     end = chunk_end(step)
                     T = end - step + 1
                     batches = (source.take(step, T) if source is not None
                                else stack_batches([data_fn(s)
                                                    for s in
                                                    range(step, end + 1)]))
-                    state, losses = inner_chunk(state, batches)
+                    if inner_live is not None and not all(live):
+                        # dead rows freeze (params + opt pass through); the
+                        # all-live path keeps the original jit program so
+                        # fault-free stretches stay bit-exact with it
+                        state, losses = inner_live(
+                            state, batches,
+                            jnp.asarray(live, jnp.bool_))
+                    else:
+                        state, losses = inner_chunk(state, batches)
                     losses_host = _fetch(losses)    # ONE fetch per chunk
                     for i in range(T):
                         s = step + i
-                        loss_mean = _host_mean(losses_host[i])
+                        loss_mean = (_host_mean(losses_host[i])
+                                     if live is None or all(live)
+                                     else _host_mean_live(losses_host[i],
+                                                          live))
                         if s % record_every == 0:
                             history["step"].append(s)
                             history["loss"].append(loss_mean)
@@ -245,6 +349,32 @@ class DistTrainer:
                     t_now = time.time()
                     chunk_step_seconds.append((t_now - t_prev) / T)
                     t_prev = t_now
+                    if checkpoint_dir and checkpoint_every and (
+                            pending_ckpt
+                            or (end + 1) % checkpoint_every == 0):
+                        extras = runner.checkpoint_extras()
+                        if extras is None:
+                            # runner mid-round: its in-flight device state
+                            # isn't serializable — defer to the next clean
+                            # chunk boundary
+                            pending_ckpt = True
+                        else:
+                            pending_ckpt = False
+                            from repro.checkpoint import save_run_checkpoint
+                            arrays, extras_meta = extras
+                            save_run_checkpoint(
+                                checkpoint_dir, end + 1, _fetch(state),
+                                extras_arrays=_fetch(arrays),
+                                extras_meta=extras_meta,
+                                history=history,
+                                meta={"num_steps": num_steps})
+                            t_prev = time.time()  # ckpt IO != step time
+                    if tracker is not None and tracker.kill_at(end):
+                        # scripted process death: any due checkpoint was
+                        # just written; the finally below closes the source
+                        # and finalize() never runs — exactly a crash
+                        raise SimulatedCrash(
+                            f"scripted kill after step {end}")
                     if (eval_fn is not None and eval_every
                             and (end + 1) % eval_every == 0):
                         state = runner.refresh(state)

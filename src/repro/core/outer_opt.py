@@ -79,14 +79,38 @@ def _tree_dot(a, b) -> jax.Array:
                for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
 
 
-def _average(delta, cfg: DiLoCoConfig) -> Any:
-    """Decoded f32 (K, ...) stacked deltas -> averaged delta pytree."""
+def _mask_rows(mask: jax.Array, ref: jax.Array) -> jax.Array:
+    """(K,) mask broadcast against a (K, ...) leaf — the fixed-signature
+    quorum jits reshape rather than index so the live set never retraces."""
+    return mask.reshape((-1,) + (1,) * (ref.ndim - 1))
+
+
+def _average(delta, cfg: DiLoCoConfig, live: Optional[jax.Array] = None
+             ) -> Any:
+    """Decoded f32 (K, ...) stacked deltas -> averaged delta pytree.
+
+    ``live`` is an optional (K,) bool contribution mask for quorum rounds:
+    masked-out rows are excluded from the mean (and get -inf drift-aware
+    logits).  ``live=None`` keeps the original all-workers expressions
+    verbatim — the no-fault path stays bit-exact.
+    """
     if not cfg.drift_aware:
-        return jax.tree.map(lambda d: jnp.mean(d, axis=0), delta)
+        if live is None:
+            return jax.tree.map(lambda d: jnp.mean(d, axis=0), delta)
+        n = jnp.maximum(jnp.sum(live.astype(jnp.float32)), 1.0)
+        return jax.tree.map(
+            lambda d: jnp.sum(jnp.where(_mask_rows(live, d), d, 0.0),
+                              axis=0) / n, delta)
 
     # drift-aware: weight workers by cosine(Δ_i, Δ̄), τ = 4
     k = jax.tree.leaves(delta)[0].shape[0]
-    mean = jax.tree.map(lambda d: jnp.mean(d, axis=0), delta)
+    if live is None:
+        mean = jax.tree.map(lambda d: jnp.mean(d, axis=0), delta)
+    else:
+        delta = jax.tree.map(
+            lambda d: jnp.where(_mask_rows(live, d), d, 0.0), delta)
+        n = jnp.maximum(jnp.sum(live.astype(jnp.float32)), 1.0)
+        mean = jax.tree.map(lambda d: jnp.sum(d, axis=0) / n, delta)
     mean_norm = jnp.sqrt(_tree_dot(mean, mean)) + 1e-12
 
     def cos_i(i):
@@ -95,23 +119,29 @@ def _average(delta, cfg: DiLoCoConfig) -> Any:
         return _tree_dot(di, mean) / (ni * mean_norm)
 
     cos = jnp.stack([cos_i(i) for i in range(k)])
-    w = jax.nn.softmax(4.0 * cos)                       # (K,)
+    logits = 4.0 * cos
+    if live is not None:
+        logits = jnp.where(live, logits, -jnp.inf)
+    w = jax.nn.softmax(logits)                          # (K,)
     return jax.tree.map(
         lambda d: jnp.tensordot(w, d.astype(jnp.float32), axes=(0, 0)), delta)
 
 
 def exchange_and_average(stacked_delta, cfg: DiLoCoConfig, replicate_fn=None,
                          residual=None, kind: str = "delta",
-                         fragment: int = -1) -> Tuple[Any, Optional[Any]]:
+                         fragment: int = -1, live=None
+                         ) -> Tuple[Any, Optional[Any]]:
     """Full outer-sync data path: encode -> ship -> decode -> average.
 
     ``residual`` is the per-worker error-feedback carry for lossy codecs
     (None disables error feedback); returns (averaged delta, new residual).
+    ``live`` is the optional (K,) quorum contribution mask — see
+    ``_average``.
     """
     transport = make_transport(cfg, replicate_fn)
     full, new_residual = transport.exchange(stacked_delta, residual,
                                             kind=kind, fragment=fragment)
-    return _average(full, cfg), new_residual
+    return _average(full, cfg, live=live), new_residual
 
 
 def average_deltas(stacked_delta, cfg: DiLoCoConfig,

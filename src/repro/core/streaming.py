@@ -110,6 +110,54 @@ class StreamingDiLoCoTrainer(DiLoCoTrainer):
     def outer_step_fragment(self, state: DiLoCoState, mask) -> DiLoCoState:
         return self.outer_step_fragment_ef(state, mask)[0]
 
+    def outer_step_fragment_quorum(self, state: DiLoCoState, mask, residual,
+                                   contrib, adopt, reset):
+        """``outer_step_fragment_ef`` under (K,) quorum masks (semantics as
+        ``DiLoCoTrainer.outer_step_quorum``): ``contrib`` rows enter the
+        fragment's masked average, ``adopt`` rows take the synced fragment
+        slots, ``reset`` rows (rejoiners) take the FULL new global — every
+        fragment, regardless of the round's fragment mask — with zeroed
+        inner-opt/EF state, and dead rows pass through frozen."""
+        rows = outer_opt._mask_rows
+        delta = jax.tree.map(
+            lambda w, g, m: (w.astype(jnp.float32)
+                             - g.astype(jnp.float32)[None]) * m[None],
+            state.worker_params, state.global_params, mask)
+        res_in = residual if residual is None else jax.tree.map(
+            lambda r, m: r * m[None], residual, mask)
+        avg, new_res = outer_opt.exchange_and_average(
+            delta, self.cfg, self.replicate_fn, residual=res_in,
+            kind="fragment", live=contrib)
+        new_global, new_outer = outer_opt.outer_update(
+            state.global_params, avg, state.outer, self.cfg)
+        new_global = jax.tree.map(
+            lambda ng, g, m: jnp.where(m, ng, g),
+            new_global, state.global_params, mask)
+        new_wp = jax.tree.map(
+            lambda w, ng, m: jnp.where(
+                jnp.logical_and(rows(adopt, w), m[None]),
+                ng[None].astype(w.dtype), w),
+            state.worker_params, new_global, mask)
+        new_wp = jax.tree.map(
+            lambda w, ng: jnp.where(rows(reset, w),
+                                    ng[None].astype(w.dtype), w),
+            new_wp, new_global)
+        new_opt = jax.tree.map(
+            lambda o: jnp.where(rows(reset, o), jnp.zeros_like(o), o),
+            state.inner_opt)
+        if residual is not None:
+            new_res = jax.tree.map(
+                lambda nr, r, m: jnp.where(
+                    jnp.logical_and(rows(contrib, r), m[None]), nr, r),
+                new_res, residual, mask)
+            new_res = jax.tree.map(
+                lambda r: jnp.where(rows(reset, r), jnp.zeros_like(r), r),
+                new_res)
+        return state._replace(global_params=new_global,
+                              worker_params=new_wp,
+                              inner_opt=new_opt,
+                              outer=new_outer), new_res
+
     def bytes_per_fragment_sync(self, params, mask) -> int:
         from repro.core.transport import wire_width
         return int(sum(int(m.sum()) for m in jax.tree.leaves(mask))

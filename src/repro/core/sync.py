@@ -125,6 +125,11 @@ from repro.core.transport import make_codec
 # history records a runner can emit: (history_key, value) pairs
 Records = List[Tuple[str, Any]]
 
+# the runners' deliberate device->host read for rejoin drift metrics (one
+# tiny scalar pair per rejoin EVENT, never per step) — module-level so the
+# host-sync lint pass recognizes the documented fetch point
+_fetch = jax.device_get
+
 
 @dataclasses.dataclass(frozen=True)
 class SyncEvent:
@@ -168,6 +173,43 @@ def hop_bytes_per_worker(payload_bytes: int, k: int, collective: str) -> int:
                      "expected gather | reduce | peer")
 
 
+@functools.lru_cache(maxsize=1)
+def _jit_rejoin_drift():
+    """Jitted per-rejoiner drift probe: ``(state, live, w)`` -> (L2 norm of
+    worker w's delta from the anchor, cosine of that delta against the
+    live fleet's mean delta).  Fixed signature — ``live`` and ``w`` are
+    traced, so rejoin events never retrace.  Called on the PRE-adoption
+    state, so it measures exactly the divergence the rejoin erases."""
+    from repro.core.drift import delta_cosine
+
+    def impl(state, live, w):
+        delta = jax.tree.map(
+            lambda wp, g: wp.astype(jnp.float32) - g.astype(jnp.float32)[None],
+            state.worker_params, state.global_params)
+        dw = jax.tree.map(lambda d: d[w], delta)
+        lf = live.astype(jnp.float32)
+        n = jnp.maximum(jnp.sum(lf), 1.0)
+        dmean = jax.tree.map(
+            lambda d: jnp.tensordot(lf, d, axes=(0, 0)) / n, delta)
+        norm = jnp.sqrt(outer_opt._tree_dot(dw, dw))
+        return norm, delta_cosine(dw, dmean)
+
+    return jax.jit(impl)
+
+
+def _rejoin_drift_records(state, reset, live, step: int) -> Records:
+    """``core.drift`` metrics for each rejoiner, recorded as
+    ``("rejoin_drift", (step, worker, delta_norm, cos_to_live_mean))``."""
+    recs: Records = []
+    probe = _jit_rejoin_drift()
+    live_arr = jnp.asarray(live)
+    for w, r in enumerate(reset):
+        if r:
+            norm, cos = _fetch(probe(state, live_arr, jnp.int32(w)))
+            recs.append(("rejoin_drift", (step, w, float(norm), float(cos))))
+    return recs
+
+
 class SyncRunner:
     """Per-run host-side state machine created by ``SyncStrategy.bind``.
 
@@ -202,6 +244,39 @@ class SyncRunner:
     def finalize(self, state, num_steps: int):
         """Called once after the last step; returns (state, records)."""
         return state, []
+
+    # -- fault tolerance (quorum rounds + elastic rejoin) --------------------
+    # Runners that understand per-worker fault events (crash / rejoin /
+    # dropped payload) set ``supports_faults`` and accept a
+    # ``core.faults.FleetTracker`` via ``bind_faults``; the trainer rejects
+    # worker-level fault schedules for runners that do not.  Run-level
+    # ``kill`` events (the crash/resume anchor) need no runner support.
+    supports_faults = False
+
+    def bind_faults(self, tracker) -> None:
+        raise ValueError(
+            f"{type(self).__name__} does not support per-worker fault "
+            "injection (quorum sync / elastic rejoin); use one of the "
+            "fault-aware strategies (diloco / ddp_compressed / streaming "
+            "/ pipelined / gossip), or restrict the schedule to run-level "
+            "kill/slow events")
+
+    # -- crash-consistent checkpointing --------------------------------------
+    def checkpoint_extras(self) -> Optional[Tuple[Any, Dict]]:
+        """The runner-private state a resume needs: ``(arrays, meta)``
+        where ``arrays`` is a pytree of device/host arrays (EF residuals,
+        gossip anchors, ...) and ``meta`` is JSON-serializable host state
+        (round counters, publish clocks).  Returns ``None`` when the
+        runner is mid-round (e.g. a pipelined snapshot is in flight) and
+        a checkpoint here would not be resumable — the trainer defers to
+        the next clean chunk boundary.  The base runner is stateless, so
+        any boundary is clean."""
+        return {}, {}
+
+    def load_extras(self, arrays, meta: Dict) -> None:
+        """Restore what ``checkpoint_extras`` captured.  ``arrays`` is
+        None when the checkpoint carried no array extras."""
+        return None
 
 
 class SyncStrategy:
@@ -323,28 +398,71 @@ class CompressedDDPSync(SyncStrategy):
 # ---------------------------------------------------------------------------
 
 class _DiLoCoRunner(SyncRunner):
+    supports_faults = True
+
     def __init__(self, engine, params, hs: HSchedule, donate: bool = True):
+        self.engine = engine
         self.hs = hs
         self.since = 0
         self.residual = engine.init_residual(params)
+        self._donate = donate
+        self._tracker = None
         self._outer = jax.jit(engine.outer_step_ef,
                               donate_argnums=(0, 1) if donate else ())
 
-    def _sync(self, state):
-        state, self.residual = self._outer(state, self.residual)
-        return state
+    def bind_faults(self, tracker):
+        self._tracker = tracker
+        d = (0, 1) if self._donate else ()
+        self._quorum = jax.jit(self.engine.outer_step_quorum,
+                               donate_argnums=d)
+        self._adopt = jax.jit(self.engine.adopt_anchor, donate_argnums=d)
+
+    def _sync(self, state, step):
+        if self._tracker is None:
+            # no fault schedule bound: the original jitted program,
+            # untouched — the no-fault path stays bit-exact
+            state, self.residual = self._outer(state, self.residual)
+            return state, [("sync_steps", step)]
+        info = self._tracker.round_masks(step)
+        records = list(info.records)
+        if any(info.reset):
+            records += _rejoin_drift_records(state, info.reset, info.live,
+                                             step)
+        reset = jnp.asarray(info.reset)
+        if info.skip:
+            if any(info.reset):
+                state, self.residual = self._adopt(state, self.residual,
+                                                   reset)
+            return state, records
+        state, self.residual = self._quorum(
+            state, self.residual, jnp.asarray(info.contrib),
+            jnp.asarray(info.adopt), reset)
+        records.append(("sync_steps", step))
+        return state, records
 
     def after_step(self, state, step, loss):
         self.since += 1
         if self.hs.should_sync(step, self.since, loss):
             self.since = 0
-            return self._sync(state), [("sync_steps", step)]
+            return self._sync(state, step)
         return state, []
 
     def finalize(self, state, num_steps):
         if self.since:  # trailing sync so global_params reflect all work
-            return self._sync(state), [("sync_steps", num_steps - 1)]
+            return self._sync(state, num_steps - 1)
         return state, []
+
+    def checkpoint_extras(self):
+        if self.since:
+            # mid-round: ``since`` (and AdaptiveH's loss window) are not
+            # serialized — defer to the outer boundary, where both are
+            # trivially zero/fresh
+            return None
+        return {"residual": self.residual}, {}
+
+    def load_extras(self, arrays, meta):
+        if arrays is not None:
+            self.residual = arrays["residual"]
 
     def next_event(self, step):
         # syncs fire when since_sync reaches the schedule's current H, and
@@ -388,23 +506,62 @@ class DiLoCoSync(SyncStrategy):
 # ---------------------------------------------------------------------------
 
 class _StreamingRunner(SyncRunner):
+    supports_faults = True
+
     def __init__(self, engine, params, donate: bool = True):
         from repro.core.streaming import fragment_masks
+        self.engine = engine
         self.F = engine.num_fragments
         self.masks = fragment_masks(params, self.F)
         self.period = engine.fragment_schedule()
         self.residual = engine.init_residual(params)
+        self._donate = donate
+        self._tracker = None
         # donate state + residual (arg 1 is the reused fragment mask)
         self._frag = jax.jit(engine.outer_step_fragment_ef,
                              donate_argnums=(0, 2) if donate else ())
 
+    def bind_faults(self, tracker):
+        self._tracker = tracker
+        self._fragq = jax.jit(self.engine.outer_step_fragment_quorum,
+                              donate_argnums=(0, 2) if self._donate else ())
+        self._adopt = jax.jit(self.engine.adopt_anchor,
+                              donate_argnums=(0, 1) if self._donate else ())
+
     def after_step(self, state, step, loss):
         if (step + 1) % self.period == 0:
             f = ((step + 1) // self.period - 1) % self.F
-            state, self.residual = self._frag(state, self.masks[f],
-                                              self.residual)
-            return state, [("frag_syncs", (step, f))]
+            if self._tracker is None:
+                state, self.residual = self._frag(state, self.masks[f],
+                                                  self.residual)
+                return state, [("frag_syncs", (step, f))]
+            info = self._tracker.round_masks(step)
+            records = list(info.records)
+            if any(info.reset):
+                records += _rejoin_drift_records(state, info.reset,
+                                                 info.live, step)
+            reset = jnp.asarray(info.reset)
+            if info.skip:
+                if any(info.reset):
+                    state, self.residual = self._adopt(state, self.residual,
+                                                       reset)
+                return state, records
+            state, self.residual = self._fragq(
+                state, self.masks[f], self.residual,
+                jnp.asarray(info.contrib), jnp.asarray(info.adopt), reset)
+            records.append(("frag_syncs", (step, f)))
+            return state, records
         return state, []
+
+    def checkpoint_extras(self):
+        # the fragment slot is a pure function of the step index and
+        # un-synced divergence lives entirely in the state, so every
+        # chunk boundary is clean
+        return {"residual": self.residual}, {}
+
+    def load_extras(self, arrays, meta):
+        if arrays is not None:
+            self.residual = arrays["residual"]
 
     def next_event(self, step):
         # fragment boundaries: every step s with (s + 1) % period == 0
@@ -458,6 +615,7 @@ class _OverlappedRunner(SyncRunner):
         self.engine = engine
         self.h, self.delay, self.jitter = h, delay, jitter
         self.k = engine.cfg.num_workers
+        self.seed = seed
         self.rng = _pyrandom.Random(seed)
         self.round_end = h - 1
         self.snap_steps = self._draw_snap_steps()
@@ -553,6 +711,22 @@ class _OverlappedRunner(SyncRunner):
             records.append(("sync_steps", num_steps - 1))
         return state, records
 
+    def checkpoint_extras(self):
+        if self.pending is not None or self.buf is not None:
+            return None     # snapshot in flight: defer to a clean boundary
+        return {"residual": self.residual}, {"round_end": self.round_end}
+
+    def load_extras(self, arrays, meta):
+        if arrays is not None:
+            self.residual = arrays["residual"]
+        # replay the jitter draws so the RNG stream continues bit-exactly
+        self.rng = _pyrandom.Random(self.seed)
+        self.round_end = self.h - 1
+        self.snap_steps = self._draw_snap_steps()
+        while self.round_end < int(meta["round_end"]):
+            self.round_end += self.h
+            self.snap_steps = self._draw_snap_steps()
+
 
 @dataclasses.dataclass(frozen=True)
 class OverlappedSync(SyncStrategy):
@@ -595,6 +769,8 @@ class _PipelinedRunner(SyncRunner):
     slots keep diverging until their round comes up.  With F=1, delay=0
     this is exactly ``DiLoCoSync``."""
 
+    supports_faults = True
+
     def __init__(self, engine, params, h: int, delay: int,
                  num_fragments: int, donate: bool = True):
         if not 0 <= delay < h:
@@ -605,12 +781,75 @@ class _PipelinedRunner(SyncRunner):
         self.masks = fragment_masks(params, num_fragments)
         self.residual = engine.init_residual(params)
         self.round = 0
-        self.pending = None             # (snapshot, fragment) awaiting apply
+        self.pending = None   # (snapshot, fragment, RoundInfo|None) in flight
         self.pending_apply = -1
+        self._donate = donate
+        self._tracker = None
         self._apply = jax.jit(self._apply_impl, static_argnames=("frag",),
                               donate_argnums=(0, 2) if donate else ())
         self._outer = jax.jit(engine.outer_step_ef,
                               donate_argnums=(0, 1) if donate else ())
+
+    def bind_faults(self, tracker):
+        self._tracker = tracker
+        d = (0, 2) if self._donate else ()
+        self._applyq = jax.jit(self._apply_quorum_impl,
+                               static_argnames=("frag",), donate_argnums=d)
+        self._adopt = jax.jit(self.engine.adopt_anchor,
+                              donate_argnums=(0, 1) if self._donate else ())
+        self._quorum = jax.jit(self.engine.outer_step_quorum,
+                               donate_argnums=(0, 1) if self._donate else ())
+
+    def _apply_quorum_impl(self, state, snap, residual, contrib, adopt,
+                           reset, *, frag: int):
+        """``_apply_impl`` under quorum masks: ``contrib`` rows enter the
+        fragment's masked average, ``adopt`` rows take the synced fragment
+        slots with in-flight carry-forward, ``reset`` rows (rejoiners)
+        land on the FULL new global with zeroed inner-opt/EF state, dead
+        rows pass through frozen."""
+        cfg = self.engine.cfg
+        rows = outer_opt._mask_rows
+        mask = self.masks[frag]
+        delta = jax.tree.map(
+            lambda s, g, m: (s.astype(jnp.float32)
+                             - g.astype(jnp.float32)[None]) * m[None],
+            snap, state.global_params, mask)
+        res_in = residual if residual is None else jax.tree.map(
+            lambda r, m: r * m[None], residual, mask)
+        avg, new_res = outer_opt.exchange_and_average(
+            delta, cfg, self.engine.replicate_fn, residual=res_in,
+            kind="fragment", fragment=frag, live=contrib)
+        new_global, new_outer = outer_opt.outer_update(
+            state.global_params, avg, state.outer, cfg)
+        new_global = jax.tree.map(
+            lambda ng, g, m: jnp.where(m, ng, g),
+            new_global, state.global_params, mask)
+        new_wp = jax.tree.map(
+            lambda w, s, ng, m: jnp.where(
+                jnp.logical_and(rows(adopt, w), m[None]),
+                (ng.astype(jnp.float32)[None]
+                 + (w.astype(jnp.float32) - s.astype(jnp.float32))
+                 ).astype(w.dtype),
+                w),
+            state.worker_params, snap, new_global, mask)
+        new_wp = jax.tree.map(
+            lambda w, ng: jnp.where(rows(reset, w),
+                                    ng[None].astype(w.dtype), w),
+            new_wp, new_global)
+        new_opt = jax.tree.map(
+            lambda o: jnp.where(rows(reset, o), jnp.zeros_like(o), o),
+            state.inner_opt)
+        if residual is not None:
+            new_res = jax.tree.map(
+                lambda nr, r, m: jnp.where(
+                    jnp.logical_and(rows(contrib, r), m[None]), nr, r),
+                new_res, residual, mask)
+            new_res = jax.tree.map(
+                lambda r: jnp.where(rows(reset, r), jnp.zeros_like(r), r),
+                new_res)
+        return state._replace(global_params=new_global,
+                              worker_params=new_wp, inner_opt=new_opt,
+                              outer=new_outer), new_res
 
     def _apply_impl(self, state, snap, residual, *, frag: int):
         cfg = self.engine.cfg
@@ -646,21 +885,50 @@ class _PipelinedRunner(SyncRunner):
         return state._replace(global_params=new_global,
                               worker_params=new_wp, outer=new_outer), new_res
 
+    def _apply_pending(self, state, step) -> Tuple[Any, Records]:
+        snap, frag, info = self.pending
+        self.pending = None
+        if info is None:
+            state, self.residual = self._apply(state, snap, self.residual,
+                                               frag=frag)
+            return state, [("frag_syncs", (step, frag))]
+        records: Records = []
+        if info.skip:
+            if any(info.reset):
+                state, self.residual = self._adopt(
+                    state, self.residual, jnp.asarray(info.reset))
+            return state, records
+        # a worker that crashed while the snapshot was in flight must not
+        # adopt the landing update: intersect with the tracker's live set
+        adopt_now = tuple(a and l for a, l in
+                          zip(info.adopt, self._tracker.live))
+        state, self.residual = self._applyq(
+            state, snap, self.residual, jnp.asarray(info.contrib),
+            jnp.asarray(adopt_now), jnp.asarray(info.reset), frag=frag)
+        records.append(("frag_syncs", (step, frag)))
+        return state, records
+
     def after_step(self, state, step, loss):
         records: Records = []
         if (step + 1) % self.h == 0:
+            info = None
+            if self._tracker is not None:
+                # masks captured WITH the snapshot: the deltas in flight
+                # are the capture-time live set's
+                info = self._tracker.round_masks(step)
+                records += list(info.records)
+                if any(info.reset):
+                    records += _rejoin_drift_records(state, info.reset,
+                                                     info.live, step)
             # copy, not alias: the chunked loop (and the donated apply)
             # consume the state's buffers while this snapshot is in flight
             self.pending = (jax.tree.map(jnp.copy, state.worker_params),
-                            self.round % self.F)
+                            self.round % self.F, info)
             self.pending_apply = step + self.delay
             self.round += 1
         if self.pending is not None and step >= self.pending_apply:
-            snap, frag = self.pending
-            state, self.residual = self._apply(state, snap, self.residual,
-                                               frag=frag)
-            self.pending = None
-            records.append(("frag_syncs", (step, frag)))
+            state, recs = self._apply_pending(state, step)
+            records += recs
         return state, records
 
     def next_event(self, step):
@@ -672,15 +940,31 @@ class _PipelinedRunner(SyncRunner):
     def finalize(self, state, num_steps):
         records: Records = []
         if self.pending is not None:  # flush the in-flight fragment
-            snap, frag = self.pending
-            state, self.residual = self._apply(state, snap, self.residual,
-                                               frag=frag)
-            self.pending = None
-            records.append(("frag_syncs", (num_steps - 1, frag)))
+            state, recs = self._apply_pending(state, num_steps - 1)
+            records += recs
         if num_steps % self.h:        # trailing partial round: full sync
-            state, self.residual = self._outer(state, self.residual)
-            records.append(("sync_steps", num_steps - 1))
+            if self._tracker is None:
+                state, self.residual = self._outer(state, self.residual)
+                records.append(("sync_steps", num_steps - 1))
+            else:
+                info = self._tracker.round_masks(num_steps - 1)
+                records += list(info.records)
+                if not info.skip:
+                    state, self.residual = self._quorum(
+                        state, self.residual, jnp.asarray(info.contrib),
+                        jnp.asarray(info.adopt), jnp.asarray(info.reset))
+                    records.append(("sync_steps", num_steps - 1))
         return state, records
+
+    def checkpoint_extras(self):
+        if self.pending is not None:
+            return None     # fragment in flight: defer to a clean boundary
+        return {"residual": self.residual}, {"round": self.round}
+
+    def load_extras(self, arrays, meta):
+        if arrays is not None:
+            self.residual = arrays["residual"]
+        self.round = int(meta["round"])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -912,9 +1196,128 @@ def _gossip_async_impl(cfg, replicate_fn, state, anchors, v, residual, pub,
             pub_v_new)
 
 
+def _gossip_pair_live_impl(cfg, replicate_fn, state, anchors, v, residual,
+                           peer_idx, active, adopt, reset):
+    """``_gossip_pair_impl`` under quorum masks (all (K,) traced arrays —
+    fixed signature, a changing live set never retraces):
+
+    * ``active`` — contributors, pair-matched among themselves (a solo
+      leftover self-pairs: its pair mean is the identity, a solo outer
+      step);
+    * ``adopt``  — live veterans, whose post-round anchor mean is the
+      consensus estimate a rejoiner adopts;
+    * ``reset``  — rejoiners: anchors/params := consensus, outer momentum,
+      inner-opt and EF state := 0;
+    * rows in none of the masks (dead workers) pass through frozen.
+    """
+    rows = outer_opt._mask_rows
+    transport = outer_opt.make_transport(cfg, replicate_fn)
+    delta = jax.tree.map(
+        lambda w, a: w.astype(jnp.float32) - a.astype(jnp.float32),
+        state.worker_params, anchors)
+    dq, peer_dq, new_res = transport.exchange_peers(delta, peer_idx,
+                                                    residual)
+
+    def pair_mean(t):
+        peer_rows = jax.tree.map(lambda x: x[peer_idx], t)
+        return jax.tree.map(lambda a, b: a * 0.5 + b * 0.5, t, peer_rows)
+
+    base, v_mix = pair_mean(anchors), pair_mean(v)
+    avg = jax.tree.map(lambda a, b: a * 0.5 + b * 0.5, dq, peer_dq)
+    cand_anchors, cand_v = _gossip_outer_rows(cfg, state, base, v_mix, avg)
+
+    def merge(n, o):
+        return jnp.where(rows(active, n), n, o)
+
+    new_anchors = jax.tree.map(merge, cand_anchors, anchors)
+    new_v = jax.tree.map(merge, cand_v, v)
+    if new_res is not None:
+        new_res = jax.tree.map(merge, new_res, residual)
+    # rejoiners adopt the veterans' consensus with a clean slate
+    af = adopt.astype(jnp.float32)
+    n_adopt = jnp.maximum(jnp.sum(af), 1.0)
+    consensus = jax.tree.map(
+        lambda a: jnp.tensordot(af, a.astype(jnp.float32),
+                                axes=(0, 0)) / n_adopt, new_anchors)
+    new_anchors = jax.tree.map(
+        lambda a, c: jnp.where(rows(reset, a), c[None].astype(a.dtype), a),
+        new_anchors, consensus)
+    new_v = jax.tree.map(
+        lambda x: jnp.where(rows(reset, x), jnp.zeros_like(x), x), new_v)
+    if new_res is not None:
+        new_res = jax.tree.map(
+            lambda r: jnp.where(rows(reset, r), jnp.zeros_like(r), r),
+            new_res)
+    take = jnp.logical_or(active, reset)
+    new_wp = jax.tree.map(
+        lambda a, w: jnp.where(rows(take, w), a.astype(w.dtype), w),
+        new_anchors, state.worker_params)
+    new_opt = jax.tree.map(
+        lambda o: jnp.where(rows(reset, o), jnp.zeros_like(o), o),
+        state.inner_opt)
+    # global tracks the LIVE fleet's anchor mean; dead anchors are stale
+    lf = jnp.logical_or(adopt, reset).astype(jnp.float32)
+    n_live = jnp.maximum(jnp.sum(lf), 1.0)
+    new_global = jax.tree.map(
+        lambda a, g: (jnp.tensordot(lf, a.astype(jnp.float32),
+                                    axes=(0, 0)) / n_live).astype(g.dtype),
+        new_anchors, state.global_params)
+    new_state = state._replace(
+        global_params=new_global, worker_params=new_wp, inner_opt=new_opt,
+        outer=outer_opt.OuterState(state.outer.v, state.outer.t + 1))
+    return new_state, new_anchors, new_v, new_res
+
+
+def _gossip_adopt_impl(cfg, state, anchors, v, residual, reset, adopt):
+    """Rejoin on a skipped gossip round: ``reset`` rows adopt the ``adopt``
+    rows' CURRENT anchor consensus (no exchange, no outer update); the
+    veterans are untouched."""
+    del cfg     # uniform partial-binding signature with the pair impls
+    rows = outer_opt._mask_rows
+    af = adopt.astype(jnp.float32)
+    n = jnp.maximum(jnp.sum(af), 1.0)
+    consensus = jax.tree.map(
+        lambda a: jnp.tensordot(af, a.astype(jnp.float32), axes=(0, 0)) / n,
+        anchors)
+    new_anchors = jax.tree.map(
+        lambda a, c: jnp.where(rows(reset, a), c[None].astype(a.dtype), a),
+        anchors, consensus)
+    new_v = jax.tree.map(
+        lambda x: jnp.where(rows(reset, x), jnp.zeros_like(x), x), v)
+    if residual is not None:
+        residual = jax.tree.map(
+            lambda r: jnp.where(rows(reset, r), jnp.zeros_like(r), r),
+            residual)
+    new_wp = jax.tree.map(
+        lambda a, w: jnp.where(rows(reset, w), a.astype(w.dtype), w),
+        new_anchors, state.worker_params)
+    new_opt = jax.tree.map(
+        lambda o: jnp.where(rows(reset, o), jnp.zeros_like(o), o),
+        state.inner_opt)
+    lf = jnp.logical_or(adopt, reset).astype(jnp.float32)
+    n_live = jnp.maximum(jnp.sum(lf), 1.0)
+    new_global = jax.tree.map(
+        lambda a, g: (jnp.tensordot(lf, a.astype(jnp.float32),
+                                    axes=(0, 0)) / n_live).astype(g.dtype),
+        new_anchors, state.global_params)
+    return state._replace(global_params=new_global, worker_params=new_wp,
+                          inner_opt=new_opt), new_anchors, new_v, residual
+
+
 def _jit_gossip_pair(engine, donate: bool):
     fn = functools.partial(_gossip_pair_impl, engine.cfg,
                            engine.replicate_fn)
+    return jax.jit(fn, donate_argnums=(0, 1, 2, 3) if donate else ())
+
+
+def _jit_gossip_pair_live(engine, donate: bool):
+    fn = functools.partial(_gossip_pair_live_impl, engine.cfg,
+                           engine.replicate_fn)
+    return jax.jit(fn, donate_argnums=(0, 1, 2, 3) if donate else ())
+
+
+def _jit_gossip_adopt(engine, donate: bool):
+    fn = functools.partial(_gossip_adopt_impl, engine.cfg)
     return jax.jit(fn, donate_argnums=(0, 1, 2, 3) if donate else ())
 
 
@@ -931,6 +1334,8 @@ class _GossipRunner(SyncRunner):
     pair mean over shared anchors, so this is bit-exact ``DiLoCoSync``;
     the full topology binds ``_DiLoCoRunner`` directly (see
     ``GossipSync.bind``)."""
+
+    supports_faults = True
 
     def __init__(self, engine, params, h: int, topology: str, seed: int,
                  donate: bool = True):
@@ -950,16 +1355,59 @@ class _GossipRunner(SyncRunner):
         self.outer_v = jax.tree.map(
             lambda p: jnp.zeros((self.k,) + p.shape, jnp.float32), params)
         self.residual = engine.init_residual(params)
+        self._donate = donate
+        self._tracker = None
         self._sync = _jit_gossip_pair(engine, donate)
 
+    def bind_faults(self, tracker):
+        self._tracker = tracker
+        self._syncq = _jit_gossip_pair_live(self.engine, self._donate)
+        self._adoptg = _jit_gossip_adopt(self.engine, self._donate)
+
     def _do_sync(self, state, step):
-        peers = gossip_peers(self.k, self.round, self.topology, self.seed)
-        records = [("gossip_syncs", (step, w, peers[w], 0))
-                   for w in range(self.k)]
+        if self._tracker is None:
+            peers = gossip_peers(self.k, self.round, self.topology,
+                                 self.seed)
+            records = [("gossip_syncs", (step, w, peers[w], 0))
+                       for w in range(self.k)]
+            records.append(("sync_steps", step))
+            state, self.anchors, self.outer_v, self.residual = self._sync(
+                state, self.anchors, self.outer_v, self.residual,
+                jnp.asarray(peers, jnp.int32))
+            self.round += 1
+            return state, records
+        info = self._tracker.round_masks(step)
+        records = list(info.records)
+        if any(info.reset):
+            records += _rejoin_drift_records(state, info.reset, info.live,
+                                             step)
+        reset = jnp.asarray(info.reset)
+        adopt = jnp.asarray(info.adopt)
+        if info.skip:
+            if any(info.reset):
+                (state, self.anchors, self.outer_v,
+                 self.residual) = self._adoptg(
+                    state, self.anchors, self.outer_v, self.residual,
+                    reset, adopt)
+            self.round += 1
+            return state, records
+        # deterministic matching over the surviving contributors only:
+        # the sub-fleet's schedule is mapped back through the sorted
+        # contributor indices, so any two boxes replaying the same
+        # schedule pair the same workers
+        contributors = [w for w in range(self.k) if info.contrib[w]]
+        sub = gossip_peers(len(contributors), self.round, self.topology,
+                           self.seed)
+        peers = list(range(self.k))
+        for i, w in enumerate(contributors):
+            peers[w] = contributors[sub[i]]
+        for w in contributors:
+            records.append(("gossip_syncs", (step, w, peers[w], 0)))
         records.append(("sync_steps", step))
-        state, self.anchors, self.outer_v, self.residual = self._sync(
+        state, self.anchors, self.outer_v, self.residual = self._syncq(
             state, self.anchors, self.outer_v, self.residual,
-            jnp.asarray(peers, jnp.int32))
+            jnp.asarray(peers, jnp.int32), jnp.asarray(info.contrib),
+            adopt, reset)
         self.round += 1
         return state, records
 
@@ -977,6 +1425,19 @@ class _GossipRunner(SyncRunner):
         if self.since:  # trailing partial round
             return self._do_sync(state, num_steps - 1)
         return state, []
+
+    def checkpoint_extras(self):
+        if self.since:
+            return None     # mid-round: defer to the gossip boundary
+        return ({"anchors": self.anchors, "outer_v": self.outer_v,
+                 "residual": self.residual}, {"round": self.round})
+
+    def load_extras(self, arrays, meta):
+        if arrays is not None:
+            self.anchors = arrays["anchors"]
+            self.outer_v = arrays["outer_v"]
+            self.residual = arrays["residual"]
+        self.round = int(meta["round"])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -1163,6 +1624,29 @@ class _AsyncGossipRunner(SyncRunner):
         if not due:
             return state, []
         return self._do_apply(state, num_steps - 1, due)
+
+    def checkpoint_extras(self):
+        # the publish board and clocks capture everything in flight, so
+        # every chunk boundary is clean
+        arrays = {"anchors": self.anchors, "outer_v": self.outer_v,
+                  "residual": self.residual}
+        if not self.fully_sync:
+            arrays.update(pub=self.pub, pub_anch=self.pub_anch,
+                          pub_v=self.pub_v)
+        return arrays, {"pub_step": list(self.pub_step),
+                        "rounds": list(self.rounds)}
+
+    def load_extras(self, arrays, meta):
+        if arrays is not None:
+            self.anchors = arrays["anchors"]
+            self.outer_v = arrays["outer_v"]
+            self.residual = arrays["residual"]
+            if not self.fully_sync:
+                self.pub = arrays["pub"]
+                self.pub_anch = arrays["pub_anch"]
+                self.pub_v = arrays["pub_v"]
+        self.pub_step = [int(x) for x in meta["pub_step"]]
+        self.rounds = [int(x) for x in meta["rounds"]]
 
 
 @dataclasses.dataclass(frozen=True)

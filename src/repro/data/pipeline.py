@@ -116,9 +116,10 @@ class Prefetcher:
     _DONE = object()
 
     def __init__(self, data_fn: Callable[[int], Dict], num_steps: int,
-                 depth: int = 8):
+                 depth: int = 8, start: int = 0):
         self.data_fn = data_fn
         self.num_steps = num_steps
+        self.start = int(start)     # resume cursor: produce start..N-1
         self._q: queue.Queue = queue.Queue(maxsize=max(int(depth), 1))
         self._stop = threading.Event()
         self._err: Optional[BaseException] = None
@@ -129,7 +130,7 @@ class Prefetcher:
 
     def _produce(self):
         try:
-            for step in range(self.num_steps):
+            for step in range(self.start, self.num_steps):
                 item = (step, self.data_fn(step))
                 while not self._stop.is_set():
                     try:
@@ -203,7 +204,17 @@ class Prefetcher:
         for i in range(n):
             step, batch = self._next_item()
             if batch is self._DONE:
-                raise RuntimeError("prefetcher data_fn failed") from self._err
+                if self._err is not None:
+                    # re-raise the producer's ORIGINAL exception object —
+                    # its traceback still points into data_fn, not at this
+                    # queue pop (wrapping it in a RuntimeError buried the
+                    # actual failure two `__cause__` hops deep)
+                    raise self._err
+                # no recorded error: the producer was shut down cleanly
+                # (close() drained it) while a consumer still wanted data
+                raise RuntimeError(
+                    "prefetcher producer stopped (closed) before step "
+                    f"{start + i}")
             if step != start + i:
                 raise RuntimeError(
                     f"prefetcher consumed out of order: wanted {start + i}, "

@@ -114,9 +114,26 @@ def simulate_schedule(events: Iterable, num_steps: int, step_time_s: float,
             "overhead_frac": (now - compute_s) / max(now, 1e-12)}
 
 
+def _fault_tables(faults, w_n: int, num_steps: int):
+    """Expand an optional ``FaultSchedule`` into the per-step tables the
+    simulators consume; (None, None, {}, {}) when there are no faults, so
+    the no-fault arithmetic stays literally the existing code path."""
+    if faults is None or faults.empty:
+        return None, None, {}, {}
+    from repro.core.faults import sim_timeline
+    faults.validate(w_n)
+    alive_t, factor_t, failed = sim_timeline(faults, w_n, num_steps)
+    drops: Dict[int, Dict[int, int]] = {}   # step -> {worker: attempts}
+    for e in faults.events:
+        if e.kind in ("drop", "corrupt"):
+            drops.setdefault(e.step, {})[e.worker] = e.attempts
+    return alive_t, factor_t, failed, drops
+
+
 def simulate_heterogeneous(events: Iterable, num_steps: int,
                            step_times: Sequence[float], comm: CommModel,
-                           staleness_steps: int = 0) -> Dict[str, float]:
+                           staleness_steps: int = 0,
+                           faults=None) -> Dict[str, float]:
     """Per-worker step clocks + bounded-staleness apply rule.
 
     ``step_times[w]`` is worker w's inner-step seconds (heterogeneous
@@ -127,6 +144,14 @@ def simulate_heterogeneous(events: Iterable, num_steps: int,
     With identical ``step_times`` and staleness 0 this reduces exactly to
     ``simulate_schedule``.
 
+    ``faults`` (a ``repro.core.faults.FaultSchedule``) overlays the same
+    script the trainer consumes: crashed workers stop stepping and ship
+    nothing (their clock freezes until a rejoin), ``slow`` scales a
+    worker's step time, ``drop``/``corrupt`` cost one retry transfer —
+    counted in ``retry_bytes`` — and with ``attempts >= 2`` the round
+    stops waiting on that worker entirely.  An empty schedule reduces
+    exactly (bitwise) to the fault-free model.
+
     ``compute_s`` is the slowest worker's pure-compute time (the fleet's
     compute critical path); ``straggler_s`` the spread the slowest worker
     adds over the fastest.
@@ -135,11 +160,13 @@ def simulate_heterogeneous(events: Iterable, num_steps: int,
     if w_n == 0:
         raise ValueError("need at least one worker step time")
     by_step, total_bytes, by_codec = _index_events(events)
+    alive_t, factor_t, failed, drops = _fault_tables(faults, w_n, num_steps)
 
     clock = [0.0] * w_n
     link_free = [0.0] * w_n
     busy = [0.0] * w_n
     stall = [0.0] * w_n
+    retry_bytes = 0.0
     in_flight: List = []  # (round_done_time, block_step)
 
     def block_on(done: float):
@@ -150,15 +177,24 @@ def simulate_heterogeneous(events: Iterable, num_steps: int,
 
     for step in range(num_steps):
         for w in range(w_n):
-            clock[w] += step_times[w]
+            if alive_t is None:
+                clock[w] += step_times[w]
+            elif alive_t[step][w]:
+                clock[w] += step_times[w] * factor_t[step][w]
         for ev in by_step.get(step, ()):
             round_done = 0.0
             for w in range(w_n):
+                if alive_t is not None and not alive_t[step][w]:
+                    continue            # dead: ships nothing
                 start = max(clock[w], link_free[w])
-                done = start + transfer_time(ev.bytes_per_worker, comm)
+                t = transfer_time(ev.bytes_per_worker, comm)
+                resend = 1 if w in drops.get(step, ()) else 0
+                done = start + (1 + resend) * t
+                retry_bytes += resend * ev.bytes_per_worker
                 busy[w] += done - start
                 link_free[w] = done
-                round_done = max(round_done, done)
+                if w not in failed.get(step, ()):
+                    round_done = max(round_done, done)
             in_flight.append((round_done, ev.apply_step + staleness_steps))
         still = []
         for done, block_step in in_flight:
@@ -177,12 +213,14 @@ def simulate_heterogeneous(events: Iterable, num_steps: int,
             "comm_s": max(busy), "stall_s": max(stall),
             "straggler_s": num_steps * (max(step_times) - min(step_times)),
             "total_bytes": float(total_bytes), "bytes_by_codec": by_codec,
+            "retry_bytes": retry_bytes,
             "overhead_frac": (now - compute_s) / max(now, 1e-12)}
 
 
 def simulate_gossip(rounds: Iterable, num_steps: int,
                     step_times: Sequence[float], comm: CommModel,
-                    staleness_steps: int = 0) -> Dict[str, float]:
+                    staleness_steps: int = 0,
+                    faults=None) -> Dict[str, float]:
     """Per-pair event model for the gossip strategies.
 
     ``rounds`` are ``repro.core.sync.GossipRound``s (duck-typed, like
@@ -193,6 +231,15 @@ def simulate_gossip(rounds: Iterable, num_steps: int,
     contribution (empty deps) blocks only on the worker's own ship-out.
     Byte totals are denominated per worker (the busiest link), matching
     ``hop_bytes_per_worker``: gossip traffic is flat in fleet size.
+
+    ``faults`` overlays a ``repro.core.faults.FaultSchedule``: crashed
+    workers stop stepping, skip their ship-outs, and vanish from peers'
+    pair barriers (the ``transfers`` key never lands — peers proceed on
+    their own clock, gossip's no-fleet-barrier property); ``slow`` scales
+    a worker's step time; ``drop``/``corrupt`` cost one retry transfer
+    (``retry_bytes``), with ``attempts >= 2`` also hiding the payload
+    from peers.  An empty schedule reduces exactly to the fault-free
+    model.
     """
     w_n = len(step_times)
     if w_n == 0:
@@ -202,49 +249,62 @@ def simulate_gossip(rounds: Iterable, num_steps: int,
         for w, es in enumerate(rnd.emit_steps):
             if es >= 0:
                 by_emit.setdefault(es, []).append((w, rnd))
+    alive_t, factor_t, failed, drops = _fault_tables(faults, w_n, num_steps)
 
     clock = [0.0] * w_n
     link_free = [0.0] * w_n
     busy = [0.0] * w_n
     stall = [0.0] * w_n
     shipped = [0.0] * w_n
+    retry_bytes = 0.0
     by_codec_w: List[Dict[str, float]] = [{} for _ in range(w_n)]
     transfers: Dict = {}      # (worker, emit_step) -> done time
     pending: List = []        # (block_step, worker, transfer keys)
 
-    def block(w: int, keys) -> None:
+    def block(w: int, keys, own: float) -> None:
         done = max((transfers[k] for k in keys if k in transfers),
                    default=0.0)
+        done = max(done, own)
         if done > clock[w]:
             stall[w] += done - clock[w]
             clock[w] = done
 
     for step in range(num_steps):
         for w in range(w_n):
-            clock[w] += step_times[w]
+            if alive_t is None:
+                clock[w] += step_times[w]
+            elif alive_t[step][w]:
+                clock[w] += step_times[w] * factor_t[step][w]
         # ship-outs first: a co-due peer's transfer must exist before any
         # same-step pair barrier references it
         for w, rnd in by_emit.get(step, ()):
+            if alive_t is not None and not alive_t[step][w]:
+                continue                # dead: no ship-out, no barrier
             start = max(clock[w], link_free[w])
-            done = start + transfer_time(rnd.nbytes, comm)
+            resend = 1 if w in drops.get(step, ()) else 0
+            done = start + (1 + resend) * transfer_time(rnd.nbytes, comm)
+            retry_bytes += resend * rnd.nbytes
             busy[w] += done - start
             link_free[w] = done
             shipped[w] += rnd.nbytes
             codec = getattr(rnd, "codec", "f32")
             by_codec_w[w][codec] = by_codec_w[w].get(codec, 0.0) + rnd.nbytes
-            transfers[(w, step)] = done
+            if w not in failed.get(step, ()):
+                # lost payloads never land for PEERS; the sender still
+                # blocks on its own attempt (the ``done`` carried below)
+                transfers[(w, step)] = done
             keys = [(w, step)] + [tuple(d) for d in rnd.deps[w]]
-            pending.append((step + staleness_steps, w, keys))
+            pending.append((step + staleness_steps, w, keys, done))
         still = []
-        for block_step, w, keys in pending:
+        for block_step, w, keys, own in pending:
             if block_step <= step:
-                block(w, keys)
+                block(w, keys, own)
             else:
-                still.append((block_step, w, keys))
+                still.append((block_step, w, keys, own))
         pending = still
 
-    for _, w, keys in pending:   # results in flight at the end must land
-        block(w, keys)
+    for _, w, keys, own in pending:  # in-flight results land before the end
+        block(w, keys, own)
 
     now = max(clock)
     compute_s = num_steps * max(step_times)
@@ -254,6 +314,7 @@ def simulate_gossip(rounds: Iterable, num_steps: int,
             "straggler_s": num_steps * (max(step_times) - min(step_times)),
             "total_bytes": float(shipped[busiest]),
             "bytes_by_codec": by_codec_w[busiest],
+            "retry_bytes": retry_bytes,
             "overhead_frac": (now - compute_s) / max(now, 1e-12)}
 
 

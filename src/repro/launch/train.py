@@ -85,7 +85,10 @@ def make_model(arch: str, reduced: bool, vocab_size: int):
 def run_stage(method: str, model, params, stage_ds, *, steps: int,
               workers: int, per_worker_batch: int, h: int,
               opt_cfg, diloco_cfg, seed: int = 0,
-              h_schedule=None, prefetch: int = 0):
+              h_schedule=None, prefetch: int = 0,
+              faults=None, min_quorum: int = 1,
+              checkpoint_dir=None, checkpoint_every: int = 0,
+              resume: bool = False):
     """Run one pipeline stage under any sync strategy; returns
     (final params, history).  All methods go through the unified
     ``DistTrainer`` runtime — ``method`` picks the ``SyncStrategy``."""
@@ -130,13 +133,17 @@ def run_stage(method: str, model, params, stage_ds, *, steps: int,
     trainer = DistTrainer(model.loss, opt_cfg, dcfg,
                           make_strategy(dcfg, h_schedule=h_schedule))
     state = trainer.init(params)
-    state, hist = trainer.run(state, data, steps, prefetch=prefetch)
+    state, hist = trainer.run(state, data, steps, prefetch=prefetch,
+                              faults=faults, min_quorum=min_quorum,
+                              checkpoint_dir=checkpoint_dir,
+                              checkpoint_every=checkpoint_every,
+                              resume=resume)
     return state.global_params, hist
 
 
 def comm_report(dcfg, method: str, n_params: int, steps: int, h: int,
                 step_time_s: float, worker_speeds: Sequence[float],
-                staleness: int = 0) -> Dict:
+                staleness: int = 0, faults=None) -> Dict:
     """Replay the run's sync schedule through the comm simulator: the
     symmetric fleet vs one with per-worker step clocks (``worker_speeds``
     are relative per-worker multipliers on the measured step seconds)."""
@@ -159,7 +166,7 @@ def comm_report(dcfg, method: str, n_params: int, steps: int, h: int,
     homo = simulate_schedule(events, steps, step_time_s, comm)
     het = simulate_heterogeneous(
         events, steps, [step_time_s * m for m in worker_speeds], comm,
-        staleness_steps=staleness)
+        staleness_steps=staleness, faults=faults)
     report = {"homogeneous": homo, "heterogeneous": het,
               "worker_speeds": list(worker_speeds),
               "step_time_s": step_time_s}
@@ -169,7 +176,7 @@ def comm_report(dcfg, method: str, n_params: int, steps: int, h: int,
         rounds = strat.gossip_rounds(n_params, steps, dcfg)
         report["gossip"] = simulate_gossip(
             rounds, steps, [step_time_s * m for m in worker_speeds], comm,
-            staleness_steps=dcfg.staleness_bound)
+            staleness_steps=dcfg.staleness_bound, faults=faults)
     return report
 
 
@@ -185,8 +192,18 @@ def run_pipeline(method: str = "diloco", arch: str = "tiny",
                  worker_speeds: Sequence[float] = (),
                  prefetch: int = 0, fused_adamw: bool = False,
                  seed: int = 0, out_dir: Optional[str] = None,
-                 eval_after_each_stage: bool = True) -> Dict:
-    """The full three-stage pipeline under one method.  Returns metrics."""
+                 eval_after_each_stage: bool = True,
+                 fault_schedule: str = "", min_quorum: int = 1,
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: int = 0, resume: bool = False) -> Dict:
+    """The full three-stage pipeline under one method.  Returns metrics.
+
+    ``fault_schedule`` (a ``FaultSchedule.from_spec`` string or JSON path)
+    injects scripted worker failures into the BASE stage — the long
+    DiLoCo pretrain is where fleets churn; mid/SFT are short DDP-ish runs.
+    ``checkpoint_dir``/``checkpoint_every``/``resume`` give the base stage
+    crash-consistent auto-resume (a rerun with ``--resume`` continues
+    bit-exactly from the last complete checkpoint)."""
     from repro.configs.base import DiLoCoConfig, OptimizerConfig
     from repro.core.schedule import AdaptiveH
     from repro.evals import chat_suite, heldout_metrics
@@ -219,6 +236,11 @@ def run_pipeline(method: str = "diloco", arch: str = "tiny",
                   "mid": max(steps["mid"] // 4, 1),
                   "sft": max(steps["sft"] // 4, 1)}
 
+    faults = None
+    if fault_schedule:
+        from repro.core import FaultSchedule
+        faults = FaultSchedule.from_spec(fault_schedule)
+
     results: Dict = {"method": method, "arch": cfg.name, "stages": {}}
     for stage in ("base", "mid", "sft"):
         stage_method = method
@@ -226,16 +248,26 @@ def run_pipeline(method: str = "diloco", arch: str = "tiny",
             stage_method = "diloco" if stage == "base" else "ddp"
         hs = AdaptiveH(h0=h_by_stage[stage]) if (
             adaptive_h and stage_method == "diloco") else None
+        # faults + checkpoint/resume target the base stage: the long
+        # decentralized pretrain is where workers churn and kills land
+        is_base = stage == "base"
         params, hist = run_stage(
             stage_method, model, params, stages[stage],
             steps=steps[stage], workers=workers,
             per_worker_batch=per_worker_batch, h=h_by_stage[stage],
             opt_cfg=opt_cfg, diloco_cfg=dcfg, seed=seed, h_schedule=hs,
-            prefetch=prefetch)
+            prefetch=prefetch,
+            faults=faults if is_base else None, min_quorum=min_quorum,
+            checkpoint_dir=checkpoint_dir if is_base else None,
+            checkpoint_every=checkpoint_every,
+            resume=resume and is_base)
         entry = {"loss_first": hist["loss"][0], "loss_last": hist["loss"][-1],
                  "losses": hist["loss"][:: max(1, len(hist["loss"]) // 50)],
                  "method": stage_method,
                  "step_seconds": hist["step_seconds"]}
+        for key in ("fault", "quorum", "quorum_skip", "rejoin_drift"):
+            if hist.get(key):
+                entry[key] = hist[key]
         if eval_after_each_stage:
             engine = Engine(model, params, tok)
             entry["core"] = heldout_metrics(ds=stages["base"], batches=4,
@@ -332,6 +364,23 @@ def main(argv=None):
     ap.add_argument("--fused-adamw", action="store_true",
                     help="use the fused Pallas AdamW update kernel (same "
                          "update math as the unfused path)")
+    ap.add_argument("--fault-schedule", type=str, default="",
+                    help="scripted fault injection for the base stage: an "
+                         "inline spec (crash:2@10,rejoin:2@40,kill@90) or a "
+                         "JSON file path (repro.core.faults.FaultSchedule)")
+    ap.add_argument("--min-quorum", type=int, default=1,
+                    help="minimum live contributors for an outer round; "
+                         "below it the round is skipped (workers keep "
+                         "training locally)")
+    ap.add_argument("--checkpoint-dir", type=str, default=None,
+                    help="write crash-consistent checkpoints here at outer "
+                         "boundaries (base stage)")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="steps between checkpoints (0 = off)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume the base stage from the latest complete "
+                         "checkpoint in --checkpoint-dir (bit-exact "
+                         "continuation)")
     ap.add_argument("--out-dir", type=str, default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -354,6 +403,11 @@ def main(argv=None):
                  error_feedback=not args.no_error_feedback,
                  worker_speeds=speeds, prefetch=args.prefetch,
                  fused_adamw=args.fused_adamw,
+                 fault_schedule=args.fault_schedule,
+                 min_quorum=args.min_quorum,
+                 checkpoint_dir=args.checkpoint_dir,
+                 checkpoint_every=args.checkpoint_every,
+                 resume=args.resume,
                  seed=args.seed, out_dir=args.out_dir)
 
 

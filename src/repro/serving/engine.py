@@ -393,6 +393,19 @@ class Engine:
                 tables[si] = pad_block_table(slot.blocks, self._mb)
                 self._tdirty = True
 
+    def _expire_due(self, sched: Scheduler, now_v: float, use_time: bool,
+                    tables: np.ndarray, stats: Dict[str, float]) -> None:
+        """Evict requests past their deadline (graceful degradation).
+        Only meaningful under ``use_time`` — without it ``now`` is inf and
+        every deadline would fire spuriously."""
+        if not use_time:
+            return
+        for si, req in sched.expire(now_v):
+            stats["expired"] += 1
+            if si is not None:      # running slot freed: clear its table row
+                tables[si] = -1
+                self._tdirty = True
+
     def _attach_new(self, sched: Scheduler, newly: List[int], pool,
                     tables: np.ndarray, stats: Dict[str, float]):
         """Post-admission hook: execute pending copy-on-write boundary
@@ -438,12 +451,13 @@ class Engine:
         tables_dev = jnp.asarray(tables)
         stats = {"step_calls": 0, "prefill_tokens": 0, "generated": 0,
                  "token_slots": 0, "recycled_blocks": 0,
-                 "prefix_skipped_tokens": 0}
+                 "prefix_skipped_tokens": 0, "expired": 0}
         t0 = time.perf_counter()
         now = (lambda: time.perf_counter() - t0) if use_time else \
             (lambda: float("inf"))
 
         while sched.has_work():
+            self._expire_due(sched, now(), use_time, tables, stats)
             newly = sched.admit(now())
             act = sched.active_slots()
             if not act:
@@ -531,12 +545,13 @@ class Engine:
         stats = {"step_calls": 0, "prefill_tokens": 0, "generated": 0,
                  "token_slots": 0, "recycled_blocks": 0, "drafted": 0,
                  "accepted": 0, "rolled_back": 0,
-                 "prefix_skipped_tokens": 0}
+                 "prefix_skipped_tokens": 0, "expired": 0}
         t0 = time.perf_counter()
         now = (lambda: time.perf_counter() - t0) if use_time else \
             (lambda: float("inf"))
 
         while sched.has_work():
+            self._expire_due(sched, now(), use_time, tables, stats)
             newly = sched.admit(now())
             act = sched.active_slots()
             if not act:

@@ -57,13 +57,22 @@ class Request:
     greedy: bool = True
     eos_id: Optional[int] = None
     arrival: float = 0.0
+    deadline_s: Optional[float] = None  # latency SLO: the request expires
+                                        # once now > arrival + deadline_s
+                                        # (waiting OR running) — see
+                                        # ``Scheduler.expire``
     # -- engine-filled ------------------------------------------------------
     tokens: List[int] = dataclasses.field(default_factory=list)
     admit_time: Optional[float] = None
     first_token_time: Optional[float] = None    # wall time of token #1
     finish_time: Optional[float] = None
+    expired: bool = False   # evicted at its deadline (tokens may be partial)
     drafted: int = 0        # speculative: draft tokens proposed for this req
     accepted: int = 0       # speculative: draft tokens verified-accepted
+
+    def past_deadline(self, now: float) -> bool:
+        return (self.deadline_s is not None
+                and now > self.arrival + self.deadline_s)
 
     @property
     def total_tokens(self) -> int:
@@ -399,6 +408,51 @@ class Scheduler:
                 slot.reserved += 1
                 n += 1
         return n
+
+    # -- graceful degradation -----------------------------------------------
+    def expire(self, now: float) -> List[Tuple[Optional[int], Request]]:
+        """Evict every request past its ``deadline_s`` — graceful
+        degradation under overload: a request that can no longer meet its
+        SLO stops consuming capacity instead of starving those that can.
+
+        Waiting requests simply leave the queue (they hold no resources).
+        Running slots go through ``finish``, which returns every KV block,
+        COW pin, budget reservation, and prefix-tree reference exactly as
+        a natural completion would — the ledger sees no difference.
+        Returns ``(slot_index | None, request)`` pairs (None = was still
+        waiting) so the engine can clear the freed slots' block tables.
+        """
+        out: List[Tuple[Optional[int], Request]] = []
+        keep: List[Request] = []
+        for r in self.waiting:
+            if r.past_deadline(now):
+                r.expired = True
+                r.finish_time = now
+                out.append((None, r))
+            else:
+                keep.append(r)
+        self.waiting = keep
+        for si, slot in enumerate(self.slots):
+            if slot is not None and slot.req.past_deadline(now):
+                slot.req.expired = True
+                out.append((si, self.finish(si, now)))
+        return out
+
+    def cancel(self, rid: int, now: float = 0.0) -> Optional[Request]:
+        """Withdraw one request by id, waiting or running; same clean
+        teardown as ``expire``.  Returns it, or None if unknown/finished.
+        Callers driving an engine loop must clear the slot's block-table
+        row when the returned request had been running."""
+        for i, r in enumerate(self.waiting):
+            if r.rid == rid:
+                r.expired = True
+                r.finish_time = now
+                return self.waiting.pop(i)
+        for si, slot in enumerate(self.slots):
+            if slot is not None and slot.req.rid == rid:
+                slot.req.expired = True
+                return self.finish(si, now)
+        return None
 
     # -- eviction -----------------------------------------------------------
     def finish(self, si: int, now: float = 0.0) -> Request:

@@ -122,6 +122,44 @@ def test_ddp_sync_rejects_multiple_workers():
         dt.run(state, lambda s: _data(cfg, 2, s), 2)
 
 
+def test_empty_fault_schedule_is_byte_identical_for_every_strategy():
+    """Fault-tolerance no-op contract: passing an EMPTY FaultSchedule must
+    leave every registered strategy's run byte-identical to faults=None —
+    no tracker, no quorum jits, the original compiled programs."""
+    from repro.core.faults import FaultSchedule
+    from repro.core.sync import compressed_ddp_config, strategy_names
+    cfg = tiny_cfg("dense")
+    m = build_model(cfg)
+    params, _ = init_params(cfg, jax.random.key(0))
+    assert len(strategy_names()) >= 8
+    for name in strategy_names():
+        if name == "ddp":
+            dcfg = DiLoCoConfig(strategy="ddp", num_workers=1,
+                                h_inner_steps=1, outer_lr=1.0,
+                                outer_momentum=0.0, nesterov=False)
+        elif name == "ddp_compressed":
+            dcfg = compressed_ddp_config(
+                DiLoCoConfig(num_workers=2, grad_compress="int8"))
+        else:
+            dcfg = DiLoCoConfig(strategy=name, num_workers=2,
+                                h_inner_steps=2)
+        k = dcfg.num_workers
+        runs = []
+        for faults in (None, FaultSchedule()):
+            dt = DistTrainer(m.loss, OPT, dcfg, make_strategy(dcfg))
+            state = dt.init(params)
+            runs.append(dt.run(state, lambda s: _data(cfg, k, s), 4,
+                               faults=faults))
+        (sa, ha), (sb, hb) = runs
+        for x, y in zip(jax.tree.leaves(sa), jax.tree.leaves(sb)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                          err_msg=f"strategy {name}")
+        for key in set(ha) | set(hb):
+            if key == "step_seconds":    # wall-clock, not math
+                continue
+            assert ha[key] == hb[key], f"strategy {name}: history[{key}]"
+
+
 def test_make_strategy_from_config():
     assert make_strategy(DiLoCoConfig(strategy="ddp")).name == "ddp"
     assert make_strategy(DiLoCoConfig(strategy="diloco")).name == "diloco"
